@@ -1,0 +1,66 @@
+"""Paper Tables 14/15/17/18: pass ablation, attention-fusion latency
+impact, fusion-aggressiveness sensitivity, autotune vs default.
+"""
+from __future__ import annotations
+
+from repro.core import AutotuningCompiler, ForgeCompiler, PipelineConfig
+from repro.core.capture import trace_to_graph
+from repro.core.cost_model import score_graph
+from repro.core.passes import run_forge_passes
+
+from .common import Csv, ladder_config, lm_forward_fn, time_callable
+
+_PASSES = ("dce", "cse", "constant_folding", "device_constant",
+           "attention_fusion", "operator_fusion", "layout_optimization")
+
+
+def run(csv: Csv) -> None:
+    fn, args = lm_forward_fn(ladder_config(6))
+
+    # Table 14: remove one pass at a time, report cost-model score
+    full = ForgeCompiler(PipelineConfig()).compile(fn, *args)
+    base_score = full.result.cost.score
+    csv.row("ablation/all_passes", base_score * 1e3, "cost_score_base")
+    for name in _PASSES:
+        mod = ForgeCompiler(
+            PipelineConfig(enable={name: False})
+        ).compile(fn, *args)
+        s = mod.result.cost.score
+        csv.row(
+            f"ablation/without_{name}", s * 1e3,
+            f"delta_vs_full={100 * (s - base_score) / base_score:+.1f}%",
+        )
+
+    # Table 15: attention fusion wall-clock impact (interpreted executor)
+    no_attn = ForgeCompiler(
+        PipelineConfig(enable={"attention_fusion": False})
+    ).compile(fn, *args)
+    t_with = time_callable(full, *args, warmup=3, iters=20)["mean_ms"]
+    t_without = time_callable(no_attn, *args, warmup=3, iters=20)["mean_ms"]
+    csv.row(
+        "ablation/attention_fusion_latency", t_with * 1e3,
+        f"with={t_with:.2f}ms;without={t_without:.2f}ms;"
+        f"delta={100 * (t_with - t_without) / t_without:+.1f}%",
+    )
+
+    # Table 17: α sensitivity (cost score monotone in α)
+    for alpha in (0.0, 0.2, 0.4, 0.6, 0.8, 1.0):
+        cap = trace_to_graph(fn, *args)
+        run_forge_passes(cap.graph, cfg=PipelineConfig(alpha=alpha))
+        s = score_graph(cap.graph)
+        csv.row(
+            f"ablation/alpha_{alpha:.1f}", s.score * 1e3,
+            f"nodes={cap.graph.num_nodes()};fused={s.n_fused}",
+        )
+
+    # Table 18: autotuned vs default cost score
+    tuner = AutotuningCompiler()
+    tr = tuner.tune(fn, *args)
+    csv.row(
+        "ablation/autotune", tr.best.score * 1e3,
+        f"default={base_score:.3f};tuned={tr.best.score:.3f};"
+        f"delta={100 * (tr.best.score - base_score) / base_score:+.1f}%;"
+        f"alpha={tr.best.alpha};layout={tr.best.layout};"
+        f"precision={tr.best.precision};candidates={len(tr.candidates)};"
+        f"tune_ms={tr.total_ms:.0f}",
+    )

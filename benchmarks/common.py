@@ -1,0 +1,124 @@
+"""Shared benchmark infrastructure.
+
+The paper evaluates six model families (125M–8B) on NPU hardware; on this
+CPU container we mirror the *claims* (scaling with depth, fusion impact,
+buffer/transition reductions, fidelity) on width-reduced configs of the
+same families plus a GPT-2-layout ladder for depth scaling.  The paper's
+measurement protocol is kept: 50 iterations after 10 warmup, 3 runs,
+mean/P50/P90/P99.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import ForgeCompiler, PipelineConfig
+from repro.models import get_model, layers as L
+from repro.models import transformer as T
+
+WARMUP = 10
+ITERS = 50
+
+
+# --------------------------------------------------------------------------
+# model ladder: GPT-2-layout blocks at increasing depth (CPU-sized width)
+# --------------------------------------------------------------------------
+
+
+def ladder_config(n_layers: int, d_model: int = 128):
+    return get_config("forge-125m").with_(
+        name=f"ladder-{n_layers}L",
+        n_layers=n_layers, d_model=d_model, n_heads=4, n_kv_heads=4,
+        d_ff=4 * d_model, vocab=512, remat=False,
+    )
+
+
+LADDER_DEPTHS = (2, 4, 6, 8, 12)
+
+
+def smoke_archs() -> List[str]:
+    return list(ARCH_IDS)
+
+
+# --------------------------------------------------------------------------
+# whole-model capture target (unfused python-loop forward)
+# --------------------------------------------------------------------------
+
+
+def lm_forward_fn(cfg, dtype: Optional[str] = None
+                  ) -> Tuple[Callable, Tuple[Any, ...]]:
+    """(fn, args): unfused full-model forward for Forge compilation."""
+    cfg = cfg.with_(fuse="none", scan_layers=False, remat=False,
+                    **({"dtype": dtype} if dtype else {}))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0, cfg.vocab)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(
+            jax.random.PRNGKey(2), (1, 128, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+        return (lambda p, f, t: model.apply(p, f, t, cfg)), (params, frames, tokens)
+    if cfg.family == "vlm":
+        patches = jax.random.normal(
+            jax.random.PRNGKey(2), (1, 16, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+        return (lambda p, t: model.module.apply(
+            p, t, cfg, patch_embeds=patches)), (params, tokens)
+    return (lambda p, t: model.apply(p, t, cfg)), (params, tokens)
+
+
+def arch_forward(arch: str, dtype: Optional[str] = None
+                 ) -> Tuple[Callable, Tuple[Any, ...]]:
+    return lm_forward_fn(get_config(arch, smoke=True), dtype=dtype)
+
+
+# --------------------------------------------------------------------------
+# timing
+# --------------------------------------------------------------------------
+
+
+def _block(x):
+    return jax.tree_util.tree_map(
+        lambda a: a.block_until_ready() if hasattr(a, "block_until_ready")
+        else a, x
+    )
+
+
+def time_callable(fn: Callable, *args, warmup: int = WARMUP,
+                  iters: int = ITERS) -> Dict[str, float]:
+    for _ in range(warmup):
+        _block(fn(*args))
+    lat = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        lat.append((time.perf_counter() - t0) * 1e3)
+    a = np.asarray(lat)
+    return {
+        "mean_ms": float(a.mean()),
+        "p50_ms": float(np.percentile(a, 50)),
+        "p90_ms": float(np.percentile(a, 90)),
+        "p99_ms": float(np.percentile(a, 99)),
+        "std_ms": float(a.std()),
+    }
+
+
+# --------------------------------------------------------------------------
+# CSV protocol:  name,us_per_call,derived
+# --------------------------------------------------------------------------
+
+
+class Csv:
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def row(self, name: str, us_per_call: float, derived: str = "") -> None:
+        line = f"{name},{us_per_call:.3f},{derived}"
+        self.rows.append(line)
+        print(line)

@@ -1,0 +1,57 @@
+"""Paper Table 4 + §7.2 (Figure 3): compilation time & phase breakdown.
+
+Measures the Forge pipeline end-to-end (capture → passes → lowering →
+backend) per architecture and on the depth ladder, and reports the
+baseline contrast the paper draws: the 'monolithic' path here is
+whole-program XLA jit compilation of the same unfused model (the closest
+on-box analogue of an opaque one-shot pipeline), versus Forge's staged
+compile whose own contribution (passes+backend) is a small slice —
+mirroring the paper's 78% capture / 21% passes / 0.8% backend split.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import ForgeCompiler, PipelineConfig
+
+from .common import Csv, LADDER_DEPTHS, arch_forward, ladder_config, lm_forward_fn, smoke_archs
+
+
+def run(csv: Csv) -> None:
+    # depth ladder: compile-time scaling (paper: linear in L; Table 11)
+    for L in LADDER_DEPTHS:
+        fn, args = lm_forward_fn(ladder_config(L))
+        t0 = time.perf_counter()
+        mod = ForgeCompiler(PipelineConfig()).compile(fn, *args)
+        t_forge = (time.perf_counter() - t0) * 1e3
+        r = mod.result
+        csv.row(
+            f"compile_time/ladder_{L}L", t_forge * 1e3,
+            f"capture_ms={r.capture_ms:.1f};optimize_ms={r.optimize_ms:.1f};"
+            f"lower_ms={r.lower_ms:.1f};backend_ms={r.backend_ms:.1f};"
+            f"ms_per_layer={t_forge / L:.1f}",
+        )
+        # monolithic baseline: one-shot XLA jit of the same function
+        t0 = time.perf_counter()
+        jax.jit(fn).lower(*args).compile()
+        t_xla = (time.perf_counter() - t0) * 1e3
+        csv.row(
+            f"compile_time/ladder_{L}L_xla_monolithic", t_xla * 1e3,
+            f"forge_vs_monolithic={t_xla / max(t_forge, 1e-9):.2f}x",
+        )
+
+    # per assigned architecture (smoke configs)
+    for arch in smoke_archs():
+        fn, args = arch_forward(arch)
+        t0 = time.perf_counter()
+        mod = ForgeCompiler(PipelineConfig()).compile(fn, *args)
+        t_forge = (time.perf_counter() - t0) * 1e3
+        r = mod.result
+        frac = r.capture_ms / max(r.total_ms, 1e-9)
+        csv.row(
+            f"compile_time/{arch}", t_forge * 1e3,
+            f"capture_frac={frac:.2f};passes_ms={r.optimize_ms:.1f};"
+            f"backend_ms={r.lower_ms + r.backend_ms:.2f}",
+        )

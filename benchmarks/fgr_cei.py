@@ -1,0 +1,46 @@
+"""Paper Tables 12/13: Fusion Gain Ratio and Compilation Efficiency Index.
+
+FGR (Eq. 22) = Score(α=0)/Score(α=1) on the heuristic cost model — a
+cost-model-internal diagnostic, NOT a latency ratio (paper's caveat).
+CEI (Eq. 23) = latency-speedup per second of compile time, using the
+interpreted-unfused executor as the baseline latency L_B.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import ForgeCompiler, PipelineConfig
+from repro.core.metrics import compilation_efficiency_index, fusion_gain_ratio
+
+from .common import Csv, arch_forward, smoke_archs, time_callable
+
+
+def run(csv: Csv) -> None:
+    for arch in smoke_archs():
+        fn, args = arch_forward(arch)
+        r = fusion_gain_ratio(fn, *args)
+        csv.row(
+            f"fgr/{arch}", r["fgr"] * 1e3,
+            f"score_a0={r['score_alpha0']:.2f};"
+            f"score_a1={r['score_alpha1']:.2f};fgr={r['fgr']:.1f}",
+        )
+
+    # CEI on the depth ladder (both baselines share the denominator)
+    from .common import LADDER_DEPTHS, ladder_config, lm_forward_fn
+
+    for L in LADDER_DEPTHS[:3]:
+        fn, args = lm_forward_fn(ladder_config(L))
+        t0 = time.perf_counter()
+        fused = ForgeCompiler(PipelineConfig()).compile(fn, *args)
+        compile_ms = (time.perf_counter() - t0) * 1e3
+        raw = ForgeCompiler(PipelineConfig(enable={
+            "attention_fusion": False, "operator_fusion": False,
+        })).compile(fn, *args)
+        lat_base = time_callable(raw, *args, warmup=3, iters=15)["mean_ms"]
+        lat_forge = time_callable(fused, *args, warmup=3, iters=15)["mean_ms"]
+        cei = compilation_efficiency_index(lat_base, lat_forge, compile_ms)
+        csv.row(
+            f"cei/ladder_{L}L", cei * 1e3,
+            f"speedup={lat_base / max(lat_forge, 1e-9):.2f}x;"
+            f"compile_s={compile_ms / 1e3:.2f};cei={cei:.2f}",
+        )

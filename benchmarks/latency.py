@@ -1,0 +1,56 @@
+"""Paper Tables 7/8 + §8.9 (Table 22): end-to-end inference latency.
+
+Three execution modes on the same model, 128-token inputs, paper protocol
+(50 iters / 10 warmup):
+
+* ``interpret_unfused``   — per-op dispatch of the RAW graph: the paper's
+  baseline world (every op a separate dispatch round-trip),
+* ``interpret_fused``     — per-op dispatch of the Forge-optimized graph
+  (the paper's compiled executor: fewer, fatter dispatches),
+* ``jit``                 — one XLA program (compile-then-run).
+
+Reported: mean/P50/P90/P99 and the P99/P50 tail ratio (paper Table 22:
+Forge 1.20 vs baselines 1.27-1.28).
+"""
+from __future__ import annotations
+
+from repro.core import ForgeCompiler, PipelineConfig
+
+from .common import Csv, LADDER_DEPTHS, ladder_config, lm_forward_fn, time_callable
+
+
+def run(csv: Csv) -> None:
+    for L in LADDER_DEPTHS:
+        fn, args = lm_forward_fn(ladder_config(L))
+        raw = ForgeCompiler(
+            PipelineConfig(enable={
+                "attention_fusion": False, "operator_fusion": False,
+                "constant_folding": False, "cse": False,
+                "layout_optimization": False,
+            })
+        ).compile(fn, *args)
+        fused = ForgeCompiler(PipelineConfig()).compile(fn, *args)
+
+        t_raw = time_callable(raw, *args)
+        t_fused = time_callable(fused, *args)
+        t_jit = time_callable(fused.jit(), *args)
+
+        speedup = t_raw["mean_ms"] / max(t_fused["mean_ms"], 1e-9)
+        tail = t_fused["p99_ms"] / max(t_fused["p50_ms"], 1e-9)
+        tail_raw = t_raw["p99_ms"] / max(t_raw["p50_ms"], 1e-9)
+        csv.row(
+            f"latency/ladder_{L}L_interpret_unfused",
+            t_raw["mean_ms"] * 1e3,
+            f"p50={t_raw['p50_ms']:.2f};p99={t_raw['p99_ms']:.2f};"
+            f"tail_ratio={tail_raw:.2f}",
+        )
+        csv.row(
+            f"latency/ladder_{L}L_interpret_fused",
+            t_fused["mean_ms"] * 1e3,
+            f"p50={t_fused['p50_ms']:.2f};p99={t_fused['p99_ms']:.2f};"
+            f"tail_ratio={tail:.2f};speedup_vs_unfused={speedup:.2f}x",
+        )
+        csv.row(
+            f"latency/ladder_{L}L_jit", t_jit["mean_ms"] * 1e3,
+            f"p50={t_jit['p50_ms']:.2f};p99={t_jit['p99_ms']:.2f}",
+        )

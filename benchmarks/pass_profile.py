@@ -1,0 +1,38 @@
+"""Paper Tables 10/11: per-pass execution time + scaling with depth.
+
+Table 10: per-pass time and node delta on the 12-layer ladder model.
+Table 11: total optimization time and attention-fusion time vs layer
+count (paper: linear scaling, fusion ≈ 18-19% of total).
+"""
+from __future__ import annotations
+
+from repro.core import ForgeCompiler, PipelineConfig
+
+from .common import Csv, LADDER_DEPTHS, ladder_config, lm_forward_fn
+
+
+def run(csv: Csv) -> None:
+    # Table 10: per-pass on the deepest ladder model
+    fn, args = lm_forward_fn(ladder_config(12))
+    mod = ForgeCompiler(PipelineConfig()).compile(fn, *args)
+    for row in mod.result.pass_table():
+        csv.row(
+            f"pass_profile/12L_{row['pass']}", row["time_ms"] * 1e3,
+            f"delta_nodes={row['delta_nodes']};runs={row['runs']}",
+        )
+
+    # Table 11: scaling with depth
+    for L in LADDER_DEPTHS:
+        fn, args = lm_forward_fn(ladder_config(L))
+        mod = ForgeCompiler(PipelineConfig()).compile(fn, *args)
+        r = mod.result
+        attn_ms = sum(
+            rec.time_ms for rec in r.pass_records
+            if rec.name == "attention_fusion"
+        )
+        csv.row(
+            f"pass_profile/scaling_{L}L", r.optimize_ms * 1e3,
+            f"attn_fusion_ms={attn_ms:.2f};"
+            f"attn_frac={attn_ms / max(r.optimize_ms, 1e-9):.2f};"
+            f"ms_per_layer={r.optimize_ms / L:.2f}",
+        )

@@ -1,0 +1,44 @@
+"""§Roofline reporter: reads the dry-run results JSON and emits the
+per-(arch × shape × mesh) three-term roofline rows (deliverable g).
+
+Does NOT recompute anything — run ``python -m repro.launch.dryrun --all``
+first (the bench prints whatever cells exist, so partial sweeps work).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+from .common import Csv
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "benchmarks/results/dryrun.json")
+
+
+def run(csv: Csv) -> None:
+    if not os.path.exists(RESULTS):
+        csv.row("roofline/NO_RESULTS", 0.0,
+                f"run `python -m repro.launch.dryrun --all` first ({RESULTS})")
+        return
+    with open(RESULTS) as f:
+        results = json.load(f)
+    for key in sorted(results):
+        rec = results[key]
+        if rec.get("status") == "skipped":
+            csv.row(f"roofline/{key}", 0.0, f"SKIPPED:{rec['reason'][:60]}")
+            continue
+        if rec.get("status") != "ok":
+            csv.row(f"roofline/{key}", 0.0, f"FAILED:{rec.get('error', '?')[:60]}")
+            continue
+        r = rec["roofline"]
+        t_c = r["t_compute"]
+        t_m = r["t_memory"]
+        t_x = r["t_collective"]
+        csv.row(
+            f"roofline/{key}", max(t_c, t_m, t_x) * 1e6,
+            f"t_compute={t_c:.3e};t_memory={t_m:.3e};t_collective={t_x:.3e};"
+            f"dominant={r['dominant']};useful_flops={r['useful_flops_ratio']:.2f};"
+            f"mem_gib_per_dev={r['bytes_per_device'] / 2**30:.1f};"
+            f"compile_s={rec.get('compile_s', 0)}",
+        )

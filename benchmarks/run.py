@@ -1,0 +1,64 @@
+"""Benchmark driver — one module per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Prints ``name,us_per_call,derived`` CSV rows (paper-table mapping):
+
+    compile_time    Table 4 + Fig. 3 (phase breakdown, depth scaling)
+    node_reduction  Table 5 + Fig. 4
+    fidelity        Table 6
+    latency         Tables 7/8/22 (interpret-unfused vs fused vs jit)
+    pass_profile    Tables 10/11
+    fgr_cei         Tables 12/13
+    ablation        Tables 14/15/17/18
+    bufalloc_sched  Tables 16/21
+    variance        Table 19
+    roofline_report §Roofline (reads the dry-run results JSON)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from .common import Csv
+
+MODULES = (
+    "compile_time",
+    "node_reduction",
+    "fidelity",
+    "latency",
+    "pass_profile",
+    "fgr_cei",
+    "ablation",
+    "bufalloc_sched",
+    "variance",
+    "roofline_report",
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    csv = Csv()
+    failures = 0
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            mod.run(csv)
+        except Exception:  # noqa: BLE001 — keep the suite alive
+            traceback.print_exc()
+            csv.row(f"{name}/FAILED", 0.0, "exception — see stderr")
+            failures += 1
+        print(f"# {name}: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

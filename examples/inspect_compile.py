@@ -1,0 +1,55 @@
+"""Compile every assigned architecture's block through Forge-UGC and
+print the per-arch fusion report — the paper's Table 5 (node reduction)
+live on the real model zoo.
+
+Run:  PYTHONPATH=src python examples/inspect_compile.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import ForgeCompiler, PipelineConfig
+from repro.models import get_model, layers as L
+from repro.models import transformer as T
+
+
+def main():
+    print(f"{'arch':30s} {'nodes':>12s} {'red%':>6s} {'fused':>6s} "
+          f"{'attn':>5s} {'rho_buf':>8s} {'delta':>10s}")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, smoke=True).with_(fuse="none")
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0), cfg)
+        tokens = jnp.zeros((2, 16), jnp.int32)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            one = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+            x = jnp.zeros((2, 16, cfg.d_model), jnp.dtype(cfg.dtype))
+            cos, sin = L.rope_tables(jnp.arange(16), cfg.head_dim_,
+                                     cfg.rope_theta)
+            fn = lambda p, x, c, s: T.block_apply(p, x, c, s, cfg)  # noqa: E731
+            args = (one, x, cos, sin)
+        else:
+            # whole-model capture for the heterogeneous families
+            if cfg.family == "encdec":
+                frames = jnp.zeros((2, 16, cfg.d_model), jnp.dtype(cfg.dtype))
+                fn = lambda p, f, t: model.apply(p, f, t, cfg)  # noqa: E731
+                args = (params, frames, tokens)
+            else:
+                fn = lambda p, t: model.apply(p, t, cfg)  # noqa: E731
+                args = (params, tokens)
+
+        mod = ForgeCompiler(PipelineConfig()).compile(fn, *args)
+        r = mod.result
+        s = r.executor_stats
+        print(f"{arch:30s} {r.nodes_before:5d}->{r.nodes_after:5d} "
+              f"{100*r.node_reduction:5.1f}% {r.fused_ops:6d} "
+              f"{r.attention_fused:5d} {s.rho_buf:7.1%} "
+              f"{s.delta_before:4d}->{s.delta_after:<4d}")
+    print("\n(xlstm shows attention_fused=0: documented inapplicability — "
+          "no softmax-attention subgraph exists in that family)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Quickstart: compile a transformer block with Forge-UGC and inspect
+every phase — the paper's transparency pitch in ~60 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ForgeCompiler, PipelineConfig
+from repro.core.metrics import fidelity, fusion_gain_ratio
+
+
+def gqa_block(x, wq, wk, wv, wo, w_gate, w_up, w_down):
+    """An unfused GQA transformer block (what the compiler sees)."""
+    B, S, E = x.shape
+    H, KVH = 8, 2
+    D = E // H
+    q = (x @ wq).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(B, S, KVH, D).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(B, S, KVH, D).transpose(0, 2, 1, 3)
+    g = H // KVH
+    k = jnp.broadcast_to(k[:, :, None], (B, KVH, g, S, D)).reshape(B, H, S, D)
+    v = jnp.broadcast_to(v[:, :, None], (B, KVH, g, S, D)).reshape(B, H, S, D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * (1.0 / np.sqrt(D))
+    row = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    s = jnp.where(row >= col, s, jnp.finfo(s.dtype).min)
+    o = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, -1), v)
+    x = x + o.transpose(0, 2, 1, 3).reshape(B, S, E) @ wo
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)  # SwiGLU, unfused
+    return x + h @ w_down
+
+
+def main():
+    rng = np.random.default_rng(0)
+    B, S, E, F = 2, 64, 64, 128
+    args = [rng.standard_normal(s).astype(np.float32) * 0.1 for s in
+            [(B, S, E), (E, E), (E, E // 4), (E, E // 4), (E, E),
+             (E, F), (E, F), (F, E)]]
+
+    # four phases: capture -> 6 passes -> RGIR -> scheduled executor
+    mod = ForgeCompiler(PipelineConfig()).compile(gqa_block, *args)
+
+    print("=== CompilationResult (paper Limitation 2: full transparency) ===")
+    print(mod.result.summary())
+    print("\n=== per-pass profile (paper Table 10) ===")
+    for row in mod.result.pass_table():
+        print(f"  {row['pass']:20s} {row['time_ms']:8.2f} ms "
+              f"delta_nodes={row['delta_nodes']:+4d}  {row['detail']}")
+
+    print("\n=== fused graph ===")
+    for node in mod.graph.nodes.values():
+        if node.op.startswith("forge."):
+            print(f"  {node.op}  params={ {k: v for k, v in node.params.items() if k != 'impl'} }")
+
+    # numerical fidelity (paper Table 6 protocol)
+    pre = gqa_block(*args)
+    post = mod(*args)
+    rep = fidelity(pre, post)
+    print(f"\nfidelity: max-abs={rep.max_abs_diff:.2e} KL={rep.kl_divergence:.2e}")
+
+    fgr = fusion_gain_ratio(gqa_block, *args)
+    print(f"FGR (Eq. 22): {fgr['fgr']:.1f}")
+
+    # the compiled executor also runs as ONE jitted XLA program
+    y = mod.jit()(*args)
+    print(f"jit output shape: {np.asarray(y).shape} — OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Batched serving example: prefill + decode with the compiled executor,
+comparing the two execution modes the paper contrasts:
+
+* ``jit``       — one fused XLA program (NNFactory compile-then-run)
+* ``interpret`` — per-instruction flat dispatch (the per-op NPU world)
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--arch xlstm-350m]
+"""
+import argparse
+
+import numpy as np
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.serve import BatchedServer
+from repro.models import get_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b",
+                    choices=ARCH_IDS + ["forge-125m"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)  # reduced config on CPU
+    if cfg.family == "encdec":
+        raise SystemExit("enc-dec serving: see repro/models/encdec.py decode")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, 16)).astype(np.int32)
+
+    for mode in ("jit", "interpret"):
+        server = BatchedServer(cfg, params, max_len=64, mode=mode)
+        res = server.generate(prompts, args.gen)
+        print(f"[{mode:9s}] decode mean={res['decode_ms_mean']:7.2f} ms  "
+              f"p99={res['decode_ms_p99']:7.2f} ms  "
+              f"{res['tok_per_s']:.0f} tok/s")
+    print("note: jit amortizes dispatch; interpret mode exposes the "
+          "per-instruction overhead the paper's scheduler minimizes.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""End-to-end example: train a ~100M-param LM for a few hundred steps.
+
+This drives the REAL stack — Forge-compiled blocks, AdamW, deterministic
+data pipeline, async checkpointing, fault-tolerant supervisor — on a
+GPT-2-class config scaled to fit the CPU container's patience
+(--full uses the true 125M layout).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--full]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true",
+                    help="true 125M config (slow on CPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/forge_train_lm")
+    args = ap.parse_args()
+
+    argv = [
+        "--arch", "forge-125m",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "50",
+    ]
+    if not args.full:
+        argv.append("--smoke")
+    return train_main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""Forge-UGC core: the four-phase register-graph compiler in JAX.
+
+Public API:
+
+* :func:`forge_compile` / :class:`ForgeCompiler` — compile a JAX-traceable
+  function through capture → six passes → RGIR → scheduled executor.
+* :class:`AutotuningCompiler` — grid-search over {α, λ, π, ι}.
+* :mod:`repro.core.metrics` — FGR, CEI, fidelity protocol.
+"""
+from .capture import CaptureResult, graph_to_fn, trace_to_graph
+from .compiler import (
+    CompilationResult,
+    CompiledModule,
+    ForgeCompiler,
+    forge_compile,
+)
+from .autotune import AutotuningCompiler, TuneResult
+from .executor import CompiledExecutor, build_executor
+from .graph import Graph, GLit, GNode, GVar
+from .passes import PipelineConfig, run_forge_passes
+
+__all__ = [
+    "CaptureResult",
+    "graph_to_fn",
+    "trace_to_graph",
+    "CompilationResult",
+    "CompiledModule",
+    "ForgeCompiler",
+    "forge_compile",
+    "AutotuningCompiler",
+    "TuneResult",
+    "CompiledExecutor",
+    "build_executor",
+    "Graph",
+    "GLit",
+    "GNode",
+    "GVar",
+    "PipelineConfig",
+    "run_forge_passes",
+]

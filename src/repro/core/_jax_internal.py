@@ -1,0 +1,53 @@
+"""Centralized imports of jax internals used by the Forge-UGC core.
+
+Everything version-sensitive lives here so the rest of the compiler only
+touches this module.  Verified against jax 0.8.x.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    from jax._src.core import (
+        ClosedJaxpr,
+        Jaxpr,
+        JaxprEqn,
+        Literal,
+        Primitive,
+        ShapedArray,
+        Var,
+        eval_jaxpr,
+    )
+except ImportError:  # pragma: no cover - older layouts
+    from jax.core import (  # type: ignore
+        ClosedJaxpr,
+        Jaxpr,
+        JaxprEqn,
+        Literal,
+        Primitive,
+        ShapedArray,
+        Var,
+        eval_jaxpr,
+    )
+
+__all__ = [
+    "ClosedJaxpr",
+    "Jaxpr",
+    "JaxprEqn",
+    "Literal",
+    "Primitive",
+    "ShapedArray",
+    "Var",
+    "eval_jaxpr",
+    "jaxpr_as_fun",
+]
+
+
+def jaxpr_as_fun(closed: ClosedJaxpr):
+    """Return a callable evaluating ``closed`` on positional args."""
+
+    def fun(*args):
+        out = eval_jaxpr(closed.jaxpr, closed.consts, *args)
+        return out
+
+    return fun

@@ -1,0 +1,216 @@
+"""The ForgeCompiler — four-phase orchestration (paper Figure 1).
+
+``ForgeCompiler.compile(fn, *example_args)`` runs
+
+  Phase 1  capture          trace_to_graph (tied-weight resolution)
+  Phase 2  optimization     run_forge_passes (six passes, fixpoint)
+  Phase 3  lowering         lower_to_rgir (typed register IR)
+  Phase 4  analysis+codegen CompiledExecutor (liveness, linear-scan
+                            allocation, device-affinity scheduling)
+
+and returns a :class:`CompiledModule` exposing both execution modes plus
+the fully transparent :class:`CompilationResult` — the paper's
+``CompilationResult`` struct (nodes before/after, fused-op counts,
+per-pass profile, buffer/transition statistics, phase timings).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+
+from .capture import CaptureResult, trace_to_graph
+from .cost_model import CostBreakdown, score_graph
+from .executor import CompiledExecutor, ExecutorStats
+from .graph import Graph
+from .lowering import RGIRProgram, lower_to_rgir
+from .passes import PassRecord, PipelineConfig, run_forge_passes
+
+
+@dataclass
+class CompilationResult:
+    """The paper's transparency struct (§1.3 Limitation 2)."""
+
+    nodes_before: int = 0
+    nodes_after: int = 0
+    fused_ops: int = 0
+    attention_fused: int = 0
+    pass_records: List[PassRecord] = field(default_factory=list)
+    # phase timings (ms)
+    capture_ms: float = 0.0
+    optimize_ms: float = 0.0
+    lower_ms: float = 0.0
+    backend_ms: float = 0.0  # schedule + alloc + codegen
+    total_ms: float = 0.0
+    # Phase-4 statistics
+    executor_stats: Optional[ExecutorStats] = None
+    cost: Optional[CostBreakdown] = None
+    tied_weights: int = 0
+    config: Optional[PipelineConfig] = None
+
+    @property
+    def node_reduction(self) -> float:
+        if self.nodes_before == 0:
+            return 0.0
+        return 1.0 - self.nodes_after / self.nodes_before
+
+    def pass_table(self) -> List[Dict[str, Any]]:
+        """Aggregated per-pass rows (paper Table 10)."""
+        agg: Dict[str, Dict[str, Any]] = {}
+        for r in self.pass_records:
+            row = agg.setdefault(
+                r.name, {"pass": r.name, "time_ms": 0.0, "delta_nodes": 0,
+                         "runs": 0, "detail": {}}
+            )
+            row["time_ms"] += r.time_ms
+            row["delta_nodes"] += r.node_delta
+            row["runs"] += 1
+            for k, v in r.detail.items():
+                if isinstance(v, (int, float)):
+                    row["detail"][k] = row["detail"].get(k, 0) + v
+        return list(agg.values())
+
+    def summary(self) -> str:
+        lines = [
+            f"nodes: {self.nodes_before} -> {self.nodes_after} "
+            f"({-100 * self.node_reduction:+.1f}%)",
+            f"fused ops: {self.fused_ops} (attention: {self.attention_fused})",
+            f"phases (ms): capture={self.capture_ms:.1f} "
+            f"optimize={self.optimize_ms:.1f} lower={self.lower_ms:.1f} "
+            f"backend={self.backend_ms:.1f} total={self.total_ms:.1f}",
+        ]
+        if self.executor_stats:
+            s = self.executor_stats
+            lines.append(
+                f"vregs={s.n_vregs} buffers={s.n_buffers} "
+                f"rho_buf={s.rho_buf:.1%} delta {s.delta_before}->"
+                f"{s.delta_after} (-{s.transition_reduction:.1%})"
+            )
+        if self.cost:
+            lines.append(f"cost score: {self.cost.score:.2f}")
+        return "\n".join(lines)
+
+
+class CompiledModule:
+    """A compiled function: pytree-aware wrapper over the executor."""
+
+    def __init__(
+        self,
+        executor: CompiledExecutor,
+        capture: CaptureResult,
+        result: CompilationResult,
+        graph: Graph,
+    ):
+        self.executor = executor
+        self.capture = capture
+        self.result = result
+        self.graph = graph
+        self._jitted: Optional[Callable] = None
+
+    # -- pytree plumbing -------------------------------------------------------
+
+    def _flatten_inputs(self, args: Sequence[Any]) -> List[Any]:
+        flat, tree = jax.tree_util.tree_flatten(tuple(args))
+        if tree != self.capture.in_tree:
+            raise TypeError(
+                f"input pytree mismatch: expected {self.capture.in_tree}, "
+                f"got {tree}"
+            )
+        tied = self.capture.tied_map
+        if tied:
+            flat = [x for i, x in enumerate(flat) if i not in tied]
+        return flat
+
+    def _unflatten_outputs(self, outs: List[Any]) -> Any:
+        return jax.tree_util.tree_unflatten(self.capture.out_tree, outs)
+
+    # -- execution modes ----------------------------------------------------------
+
+    def __call__(self, *args: Any) -> Any:
+        """Interpreted flat-dispatch execution (paper Listing 9)."""
+        outs = self.executor.execute(*self._flatten_inputs(args))
+        return self._unflatten_outputs(outs)
+
+    def as_fn(self) -> Callable:
+        """Traceable callable on the original pytree signature."""
+
+        def fn(*args):
+            outs = self.executor.as_fn()(*self._flatten_inputs(args))
+            return self._unflatten_outputs(outs)
+
+        return fn
+
+    def jit(self) -> Callable:
+        """One-XLA-program execution (the NNFactory compile-then-run mode)."""
+        if self._jitted is None:
+            self._jitted = jax.jit(self.as_fn())
+        return self._jitted
+
+    @property
+    def stats(self) -> ExecutorStats:
+        return self.executor.stats
+
+
+class ForgeCompiler:
+    """Four-phase compiler facade (paper Figure 1)."""
+
+    def __init__(self, config: Optional[PipelineConfig] = None,
+                 *, reorder: bool = True):
+        self.config = config or PipelineConfig()
+        self.reorder = reorder
+
+    def compile(self, fn: Callable, *example_args: Any) -> CompiledModule:
+        t_total = time.perf_counter()
+
+        # Phase 1 — capture
+        cap = trace_to_graph(fn, *example_args)
+        g = cap.graph
+        nodes_before = g.num_nodes()
+
+        # Phase 2 — optimization passes
+        t0 = time.perf_counter()
+        records = run_forge_passes(g, cfg=self.config)
+        optimize_ms = (time.perf_counter() - t0) * 1e3
+
+        # Phase 3 — lowering
+        t0 = time.perf_counter()
+        prog = lower_to_rgir(g)
+        lower_ms = (time.perf_counter() - t0) * 1e3
+
+        # Phase 4 — analysis + codegen
+        t0 = time.perf_counter()
+        executor = CompiledExecutor(prog, reorder=self.reorder)
+        backend_ms = (time.perf_counter() - t0) * 1e3
+
+        cost = score_graph(g, self.config.precision)
+        result = CompilationResult(
+            nodes_before=nodes_before,
+            nodes_after=g.num_nodes(),
+            fused_ops=cost.n_fused,
+            attention_fused=cost.n_attn_fused,
+            pass_records=records,
+            capture_ms=cap.capture_ms,
+            optimize_ms=optimize_ms,
+            lower_ms=lower_ms,
+            backend_ms=backend_ms,
+            total_ms=(time.perf_counter() - t_total) * 1e3,
+            executor_stats=executor.stats,
+            cost=cost,
+            tied_weights=len(cap.tied_map),
+            config=self.config,
+        )
+        return CompiledModule(executor, cap, result, g)
+
+
+def forge_compile(
+    fn: Callable,
+    *example_args: Any,
+    config: Optional[PipelineConfig] = None,
+    **config_kwargs: Any,
+) -> CompiledModule:
+    """One-shot convenience API: ``forge_compile(f, x)(x2)``."""
+    if config is None:
+        config = PipelineConfig(**config_kwargs)
+    return ForgeCompiler(config).compile(fn, *example_args)

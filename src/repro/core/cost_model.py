@@ -1,0 +1,137 @@
+"""Heuristic accelerator cost model (paper §4.6, Eq. 18).
+
+    Score(G) = w₁·n_ops + w₂·n_weights + w₃·n_linear + w₄·d_graph
+             + w₅·s_params,   × fusion bonuses
+
+Lower scores indicate configurations better suited for accelerator
+execution.  As in the paper, this is a *heuristic proxy*: scores are not
+proportional to wall-clock latency (the FGR caveat, §5.2) — they weight
+per-op dispatch overhead heavily, which fusion collapses, so FGR values
+land far above measured speedups by design.
+
+The weights below are calibrated so that (a) host-side glue dispatches
+dominate unfused graphs, (b) a fused dispatch costs a small fraction of
+the chain it replaces, (c) static terms (weights, params) keep scores
+comparable across model scales.  The multiplicative fusion bonuses mirror
+the paper's: they fire when attention fusion / operator fusion actually
+rewrote the graph.
+
+Beyond the paper, :func:`roofline_score` provides a calibrated
+FLOPs/bytes-based estimate used by the §Perf loop; the autotuner can use
+either (``metric='heuristic' | 'roofline'``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import numpy as np
+
+from .graph import Graph, GVar
+from .lowering import ACCEL_OPS, _node_flops
+
+# Eq. 18 weights (heuristic calibration — see module docstring)
+W_OPS = 1.0  # per-op dispatch overhead
+W_WEIGHTS = 0.05  # per weight tensor
+W_LINEAR = -0.3  # linear-fraction discount (linear ops run well on MXU)
+W_DEPTH = 0.10  # critical-path length
+W_PARAMS = 0.02  # per-M parameters resident
+
+# multiplicative fusion bonuses
+BONUS_ATTENTION = 0.15
+BONUS_OPERATOR = 0.55
+
+# precision factors (the π knob): cheaper dispatch at lower precision
+PRECISION_FACTOR = {"bf16": 1.0, "fp32": 1.35, "mixed": 1.1, None: 1.0}
+
+
+@dataclass
+class CostBreakdown:
+    n_ops: int
+    n_weights: int
+    linear_frac: float
+    depth: int
+    params_m: float
+    n_fused: int
+    n_attn_fused: int
+    score: float
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dict(self.__dict__)
+
+
+def _is_linear_class(op: str) -> bool:
+    return op.startswith("forge.") or op in ACCEL_OPS
+
+
+def graph_features(g: Graph) -> Dict[str, Any]:
+    nodes = list(g.nodes.values())
+    n_ops = len(nodes)
+    n_weights = sum(1 for v in g.invars if len(v.shape) >= 2)
+    n_linear = sum(1 for n in nodes if _is_linear_class(n.op))
+    params_m = sum(
+        float(np.prod(v.shape)) for v in g.invars if len(v.shape) >= 2
+    ) / 1e6
+    n_fused = sum(1 for n in nodes if n.op.startswith("forge."))
+    n_attn = sum(1 for n in nodes if n.op == "forge.sdpa")
+    return {
+        "n_ops": n_ops,
+        "n_weights": n_weights,
+        "linear_frac": (n_linear / n_ops) if n_ops else 0.0,
+        "depth": g.depth(),
+        "params_m": params_m,
+        "n_fused": n_fused,
+        "n_attn_fused": n_attn,
+    }
+
+
+def score_graph(g: Graph, precision: str | None = None) -> CostBreakdown:
+    f = graph_features(g)
+    base = (
+        W_OPS * f["n_ops"]
+        + W_WEIGHTS * f["n_weights"]
+        + W_LINEAR * f["linear_frac"] * f["n_ops"]
+        + W_DEPTH * f["depth"]
+        + W_PARAMS * f["params_m"]
+    )
+    bonus = 1.0
+    if f["n_attn_fused"] > 0:
+        bonus *= BONUS_ATTENTION
+    if f["n_fused"] - f["n_attn_fused"] > 0:
+        bonus *= BONUS_OPERATOR
+    score = max(base, 1e-6) * bonus * PRECISION_FACTOR.get(precision, 1.0)
+    return CostBreakdown(score=score, **f)
+
+
+# --------------------------------------------------------------------------
+# Beyond-paper: roofline-informed cost estimate
+# --------------------------------------------------------------------------
+
+# v5e-class hardware constants (per chip) — also used by launch/roofline.py
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+DISPATCH_OVERHEAD_S = 2e-6  # per unfused kernel boundary (est.)
+
+
+def roofline_score(g: Graph, precision: str | None = "bf16") -> float:
+    """Estimated single-chip step seconds: max(compute, memory) + dispatch.
+
+    Counts FLOPs per node and HBM bytes at every kernel boundary (each
+    unfused op writes + re-reads its output); fused nodes keep
+    intermediates in VMEM so only their true inputs/outputs hit HBM.
+    """
+    itemsize = 2 if precision in ("bf16", "mixed") else 4
+    flops = 0.0
+    bytes_ = 0.0
+    n_dispatch = 0
+    for node in g.nodes.values():
+        flops += _node_flops(node)
+        n_dispatch += 1
+        for ov in node.outvars:
+            bytes_ += float(np.prod(ov.shape or (1,))) * itemsize
+        for iv in node.invars:
+            if isinstance(iv, GVar):
+                bytes_ += float(np.prod(iv.shape or (1,))) * itemsize
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_ / HBM_BW
+    return max(t_compute, t_memory) + n_dispatch * DISPATCH_OVERHEAD_S

@@ -1,0 +1,179 @@
+"""Phase 4d — code generation: the ``CompiledExecutor``.
+
+The JAX analogue of the paper's ``CompiledNPUExecutor`` (Listing 9): a
+flat, pre-scheduled instruction stream executed with
+
+* **no attribute lookup** — callables pre-resolved at lowering time,
+* **no graph traversal** — straight loop over ``self.ops``,
+* **physical-buffer register file** — values are stored under the buffer
+  slot assigned by linear-scan allocation, so the executor *exercises*
+  the allocation (a double-booked buffer corrupts results and is caught
+  by the property tests),
+* **eager GC** — ``dead_after`` frees buffers the moment their register's
+  last reader retires, bounding peak live memory (paper: "eager GC").
+
+Two execution modes:
+
+``execute(*flat_inputs)``
+    interpreted per-instruction Python dispatch — the measurable analogue
+    of the paper's per-dispatch NPU round-trip world; used by the latency
+    and scheduling benchmarks.
+
+``as_fn()``
+    a JAX-traceable callable replaying the same stream under ``jax.jit`` /
+    ``pjit`` — one fused XLA program (the NNFactory compile-then-run
+    model); used by the train/serve paths and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .bufalloc import AllocationResult, allocate_from_liveness
+from .liveness import LivenessInfo, analyze_liveness
+from .lowering import RGIRProgram, lower_to_rgir
+from .scheduler import ScheduleResult, schedule, verify_topological
+
+
+@dataclass
+class ExecutorStats:
+    n_instructions: int = 0
+    n_accel: int = 0
+    n_host: int = 0
+    n_vregs: int = 0
+    n_buffers: int = 0
+    rho_buf: float = 0.0
+    delta_before: int = 0
+    delta_after: int = 0
+    peak_live_buffers: int = 0
+
+    @property
+    def transition_reduction(self) -> float:
+        if self.delta_before == 0:
+            return 0.0
+        return 1.0 - self.delta_after / self.delta_before
+
+
+class CompiledExecutor:
+    """Flat instruction-stream executor over a physical buffer file."""
+
+    def __init__(
+        self,
+        prog: RGIRProgram,
+        *,
+        reorder: bool = True,
+        validate: bool = True,
+    ):
+        sched = schedule(prog)
+        if not reorder:
+            sched = ScheduleResult(
+                order=list(range(len(prog.ops))),
+                delta_before=sched.delta_before,
+                delta_after=sched.delta_before,
+            )
+        if validate:
+            verify_topological(prog, sched.order)
+        self.prog = prog.renumber(sched.order)
+        self.sched = sched
+
+        # liveness + allocation on the *scheduled* stream (soundness)
+        self.live: LivenessInfo = analyze_liveness(self.prog)
+        self.alloc: AllocationResult = allocate_from_liveness(self.live)
+        self._r2b = self.alloc.reg_to_buf
+        self.dead_after = self.live.dead_after
+
+        # pre-loaded constant buffers (device constants, paper Listing 9)
+        self._const_buf: Dict[int, Any] = {
+            self._r2b[r]: v for r, v in self.prog.constants.items()
+        }
+        self._input_bufs = [self._r2b[r] for r in self.prog.input_regs]
+        self._output_bufs = [self._r2b[r] for r in self.prog.output_regs]
+
+        self.stats = ExecutorStats(
+            n_instructions=len(self.prog.ops),
+            n_accel=sum(1 for op in self.prog.ops if op.device == "accel"),
+            n_host=sum(1 for op in self.prog.ops if op.device == "host"),
+            n_vregs=self.alloc.n_vregs,
+            n_buffers=self.alloc.n_buffers,
+            rho_buf=self.alloc.rho_buf,
+            delta_before=sched.delta_before,
+            delta_after=sched.delta_after,
+        )
+
+    # -- interpreted mode ------------------------------------------------------
+
+    def execute(self, *flat_inputs: Any) -> List[Any]:
+        """Run the compiled program (paper Listing 9's ``execute``)."""
+        if len(flat_inputs) != len(self._input_bufs):
+            raise TypeError(
+                f"executor expects {len(self._input_bufs)} inputs, "
+                f"got {len(flat_inputs)}"
+            )
+        bufs: Dict[int, Any] = dict(self._const_buf)
+        for b, v in zip(self._input_bufs, flat_inputs):
+            bufs[b] = v
+
+        r2b = self._r2b
+        read = lambda r: bufs[r2b[r]]  # noqa: E731
+        peak = len(bufs)
+        for idx, op in enumerate(self.prog.ops):
+            results = op.execute(read)
+            for r, v in zip(op.output_regs, results):
+                bufs[r2b[r]] = v
+            peak = max(peak, len(bufs))
+            # eager GC: free buffers whose register died here
+            for r in self.dead_after.get(idx, ()):  # pragma: no branch
+                bufs.pop(r2b[r], None)
+        self.stats.peak_live_buffers = max(self.stats.peak_live_buffers, peak)
+        return [bufs[b] for b in self._output_bufs]
+
+    # -- traced mode -----------------------------------------------------------
+
+    def as_fn(self) -> Callable:
+        """A JAX-traceable callable replaying the instruction stream."""
+
+        def fn(*flat_inputs):
+            outs = self.execute(*flat_inputs)
+            return outs
+
+        return fn
+
+    # -- profiling helpers -------------------------------------------------------
+
+    def timed_execute(self, *flat_inputs: Any) -> Tuple[List[Any], float, Dict[str, float]]:
+        """Execute with wall-clock + per-device dispatch-time accounting."""
+        if len(flat_inputs) != len(self._input_bufs):
+            raise TypeError("bad arity")
+        bufs: Dict[int, Any] = dict(self._const_buf)
+        for b, v in zip(self._input_bufs, flat_inputs):
+            bufs[b] = v
+        r2b = self._r2b
+        read = lambda r: bufs[r2b[r]]  # noqa: E731
+        per_dev = {"accel": 0.0, "host": 0.0}
+        t_all = time.perf_counter()
+        for idx, op in enumerate(self.prog.ops):
+            t0 = time.perf_counter()
+            results = op.execute(read)
+            results = [
+                r.block_until_ready() if hasattr(r, "block_until_ready") else r
+                for r in results
+            ]
+            per_dev[op.device] += time.perf_counter() - t0
+            for r, v in zip(op.output_regs, results):
+                bufs[r2b[r]] = v
+            for r in self.dead_after.get(idx, ()):
+                bufs.pop(r2b[r], None)
+        total = time.perf_counter() - t_all
+        return [bufs[b] for b in self._output_bufs], total * 1e3, per_dev
+
+
+def build_executor(
+    g, *, reorder: bool = True, validate: bool = True
+) -> CompiledExecutor:
+    """Lower a Phase-2 graph and build the executor (Phases 3+4)."""
+    prog = lower_to_rgir(g)
+    return CompiledExecutor(prog, reorder=reorder, validate=validate)

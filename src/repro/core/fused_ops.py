@@ -1,0 +1,135 @@
+"""Dispatch table for fused ``forge.*`` graph nodes.
+
+Phase-2 fusion passes replace matched primitive chains with single
+``forge.*`` nodes; Phase-3 lowering resolves each to a concrete callable
+(the paper's "pre-resolved callable" in the NPUIR instruction).  All fused
+callables bottom out in :mod:`repro.kernels.ops`, which selects between the
+Pallas TPU kernels, interpret-mode validation, and the XLA fallback.
+
+Two families of fused ops exist:
+
+* **pass-created** (``forge.sdpa``, ``forge.linear_act``, ``forge.swiglu``)
+  — synthesized by the fusion passes with explicit ``params``.
+* **pre-fused dispatch units** (``forge.rg_lru`` …) — opaque ``forge_*``
+  jit calls kept intact by Phase-1 capture (custom-operator registration,
+  paper §9.5); their ``meta['call_jaxpr']`` is replayed.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import numpy as np
+
+from ._jax_internal import jaxpr_as_fun
+from .graph import GNode
+
+
+def _sdpa_callable(node: GNode) -> Callable:
+    from ..kernels import ops
+
+    p = node.params
+
+    def fn(*args):
+        import jax.numpy as jnp
+
+        q, k, v = args[0], args[1], args[2]
+        mask = args[3] if len(args) > 3 else None
+        if mask is not None and p.get("mask_mode") == "bool":
+            # boolean keep-mask -> additive float mask
+            mask = jnp.where(mask, 0.0, float(np.finfo(np.float32).min))
+        return ops.sdpa(
+            q,
+            k,
+            v,
+            mask,
+            scale=p.get("scale"),
+            scale_mode=p.get("scale_mode", "mul"),
+            causal=p.get("causal", False),
+            groups=p.get("groups", 1),
+            impl=p.get("impl"),
+            out_dtype=p.get("out_dtype"),
+        )
+
+    return fn
+
+
+def _linear_act_callable(node: GNode) -> Callable:
+    from ..kernels import ops
+
+    p = node.params
+    has_bias = p.get("has_bias", False)
+    has_residual = p.get("has_residual", False)
+
+    def fn(*args):
+        x, w = args[0], args[1]
+        i = 2
+        b = None
+        r = None
+        if has_bias:
+            b = args[i]
+            i += 1
+        if has_residual:
+            r = args[i]
+            i += 1
+        out = ops.fused_linear(
+            x, w, b, act=p.get("act"), residual=r, impl=p.get("impl")
+        )
+        od = p.get("out_dtype")
+        return out.astype(od) if od is not None else out
+
+    return fn
+
+
+def _swiglu_callable(node: GNode) -> Callable:
+    from ..kernels import ops
+
+    p = node.params
+
+    def fn(x, w_gate, w_up):
+        out = ops.swiglu(x, w_gate, w_up, impl=p.get("impl"))
+        od = p.get("out_dtype")
+        return out.astype(od) if od is not None else out
+
+    return fn
+
+
+_BUILDERS: Dict[str, Callable[[GNode], Callable]] = {
+    "forge.sdpa": _sdpa_callable,
+    "forge.linear_act": _linear_act_callable,
+    "forge.swiglu": _swiglu_callable,
+}
+
+
+def register_fused_op(name: str, builder: Callable[[GNode], Callable]) -> None:
+    """Custom operator registration (paper §9.5 extension hook)."""
+    _BUILDERS[name] = builder
+
+
+def fused_callable(node: GNode) -> Callable:
+    """Resolve a ``forge.*`` node to its dispatch callable.
+
+    The callable is jit-wrapped: the paper compiles each fused NNFactory
+    graph ONCE and re-dispatches it (Listing 6's ``_npu_fused_cache``);
+    ``jax.jit`` + XLA's compilation cache is the exact analogue, so the
+    interpreted executor pays one compile per fused-op shape and a single
+    fat dispatch per call thereafter.
+    """
+    import jax
+
+    builder = _BUILDERS.get(node.op)
+    if builder is not None:
+        return jax.jit(builder(node))
+    closed = node.meta.get("call_jaxpr")
+    if closed is not None:  # opaque pre-fused dispatch unit
+        return jax.jit(jaxpr_as_fun(closed))
+    raise KeyError(f"no fused callable registered for {node.op!r}")
+
+
+def wrap_multi(fn: Callable) -> Callable:
+    """Normalize a fused callable to always return a list of outputs."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return list(out) if isinstance(out, (list, tuple)) else [out]
+
+    return wrapped

@@ -1,0 +1,131 @@
+"""The paper's three evaluation metrics (§5) + the fidelity protocol (§6.5).
+
+* **per-pass profiling** — τ(p_k); produced by the pipeline itself
+  (``CompilationResult.pass_table``), re-exported here for benchmarks.
+* **FGR** (Eq. 22) — CostModel(α=0) / CostModel(α=1): a cost-model-
+  internal diagnostic of fusion impact.  NOT a latency ratio (paper's
+  caveat retained).
+* **CEI** (Eq. 23/24) — (L_baseline / L_forge) / T_compile_seconds:
+  latency-speedup delivered per second of compile time.
+* **fidelity** — max-abs logit difference and KL divergence between
+  pre- and post-compilation outputs (paper Table 6 protocol).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .capture import trace_to_graph
+from .compiler import CompilationResult, ForgeCompiler
+from .cost_model import score_graph
+from .passes import PipelineConfig, run_forge_passes
+
+
+# --------------------------------------------------------------------------
+# FGR
+# --------------------------------------------------------------------------
+
+
+def fusion_gain_ratio(
+    fn: Callable,
+    *example_args: Any,
+    config: Optional[PipelineConfig] = None,
+) -> Dict[str, float]:
+    """FGR = Score(α=0) / Score(α=1)  (paper Eq. 22)."""
+    base = config or PipelineConfig()
+
+    def _score(alpha: float) -> float:
+        cfg = PipelineConfig(
+            alpha=alpha,
+            layout=base.layout,
+            precision=base.precision,
+            max_rounds=base.max_rounds,
+            impl=base.impl,
+            swiglu_fusion=base.swiglu_fusion,
+            enable=dict(base.enable),
+        )
+        cap = trace_to_graph(fn, *example_args)
+        run_forge_passes(cap.graph, cfg=cfg)
+        return score_graph(cap.graph, cfg.precision).score
+
+    s0 = _score(0.0)
+    s1 = _score(1.0)
+    return {"score_alpha0": s0, "score_alpha1": s1, "fgr": s0 / max(s1, 1e-12)}
+
+
+# --------------------------------------------------------------------------
+# CEI
+# --------------------------------------------------------------------------
+
+
+def compilation_efficiency_index(
+    latency_baseline_ms: float,
+    latency_forge_ms: float,
+    compile_time_ms: float,
+) -> float:
+    """CEI_B = (L_B / L_forge) / T_compile^(s)  (paper Eq. 23)."""
+    speedup = latency_baseline_ms / max(latency_forge_ms, 1e-12)
+    return speedup / max(compile_time_ms / 1e3, 1e-12)
+
+
+# --------------------------------------------------------------------------
+# Numerical fidelity (paper §6.5 protocol, Table 6)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class FidelityReport:
+    max_abs_diff: float
+    kl_divergence: float
+    n_elements: int
+
+    def ok(self, max_abs: float = 2.1e-5, max_kl: float = 8.4e-9) -> bool:
+        """Check against the paper's reported bounds (Table 6)."""
+        return self.max_abs_diff <= max_abs and self.kl_divergence <= max_kl
+
+
+def _kl(p_logits: jnp.ndarray, q_logits: jnp.ndarray) -> float:
+    """Mean KL(P‖Q) over the last axis of logits."""
+    p = jax.nn.log_softmax(p_logits.astype(jnp.float32), axis=-1)
+    q = jax.nn.log_softmax(q_logits.astype(jnp.float32), axis=-1)
+    kl = jnp.sum(jnp.exp(p) * (p - q), axis=-1)
+    return float(jnp.mean(kl))
+
+
+def fidelity(
+    pre_outputs: Any,
+    post_outputs: Any,
+    *,
+    logits_are_last_axis: bool = True,
+) -> FidelityReport:
+    """Compare pre- vs post-compilation outputs (logit-level, Table 6)."""
+    pre_flat = jax.tree_util.tree_leaves(pre_outputs)
+    post_flat = jax.tree_util.tree_leaves(post_outputs)
+    assert len(pre_flat) == len(post_flat), "output arity mismatch"
+    max_abs = 0.0
+    kl = 0.0
+    n = 0
+    for a, b in zip(pre_flat, post_flat):
+        a = jnp.asarray(a, dtype=jnp.float32)
+        b = jnp.asarray(b, dtype=jnp.float32)
+        max_abs = max(max_abs, float(jnp.max(jnp.abs(a - b))))
+        if logits_are_last_axis and a.ndim >= 1 and a.shape[-1] > 1:
+            kl = max(kl, _kl(a, b))
+        n += int(np.prod(a.shape or (1,)))
+    return FidelityReport(max_abs_diff=max_abs, kl_divergence=kl, n_elements=n)
+
+
+def check_compilation_fidelity(
+    fn: Callable,
+    *concrete_args: Any,
+    config: Optional[PipelineConfig] = None,
+) -> FidelityReport:
+    """End-to-end protocol: run ``fn`` raw vs Forge-compiled, compare."""
+    pre = fn(*concrete_args)
+    mod = ForgeCompiler(config or PipelineConfig()).compile(fn, *concrete_args)
+    post = mod(*concrete_args)
+    return fidelity(pre, post)

@@ -1,0 +1,305 @@
+"""Shared pattern-matching helpers for the fusion passes.
+
+These encode the jaxpr-level equivalents of the paper's FX matching
+helpers (``_is_scale``, ``_is_softmax``, ``_unwrap_transpose`` …): the
+chains below are what ``jax.nn.softmax`` / ``jax.nn.silu`` / GQA
+broadcast-expansion actually trace to (verified on jax 0.8).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from ..graph import Graph, GLit, GNode, GVar, Operand
+
+
+def scalar_lit(x: Operand) -> Optional[float]:
+    """Return the scalar value of a literal operand, else None."""
+    if not isinstance(x, GLit):
+        return None
+    arr = np.asarray(x.val)
+    if arr.size != 1:
+        return None
+    return float(arr.reshape(()))
+
+
+def const_value(g: Graph, x: Operand) -> Optional[np.ndarray]:
+    """Compile-time value of an operand: literal or graph constant."""
+    if isinstance(x, GLit):
+        return np.asarray(x.val)
+    if isinstance(x, GVar):
+        for cv, cval in zip(g.constvars, g.consts):
+            if cv.vid == x.vid:
+                return np.asarray(cval)
+    return None
+
+
+def producer(g: Graph, x: Operand) -> Optional[GNode]:
+    return g.producer(x) if isinstance(x, GVar) else None
+
+
+def skip_converts(g: Graph, x: Operand, collect: Optional[List[GNode]] = None) -> Operand:
+    """Walk backward through convert_element_type / copy nodes."""
+    while True:
+        p = producer(g, x)
+        if p is None or p.op not in ("convert_element_type", "copy"):
+            return x
+        if collect is not None:
+            collect.append(p)
+        x = p.invars[0]
+
+
+def sole_user(g: Graph, v: GVar) -> Optional[GNode]:
+    """The single consumer of ``v`` if it has exactly one use and is not a
+    graph output; else None (paper: ``[nxt] = list(cur.users)``)."""
+    if g.is_output(v):
+        return None
+    users = [u for u in g.users(v) if any(
+        isinstance(iv, GVar) and iv.vid == v.vid for iv in u.invars)]
+    if len(users) != 1:
+        return None
+    n_slots = sum(
+        1 for iv in users[0].invars if isinstance(iv, GVar) and iv.vid == v.vid
+    )
+    return users[0] if n_slots == 1 and g.n_uses(v) == 1 else None
+
+
+def uses_confined(g: Graph, nodes: Iterable[GNode], nids: Set[int]) -> bool:
+    """True iff every output of every node is only consumed inside ``nids``
+    and is not a graph output — the erasure-safety condition for fusion."""
+    for node in nodes:
+        for ov in node.outvars:
+            if g.is_output(ov):
+                return False
+            for u in g.users(ov):
+                if u.nid not in nids:
+                    return False
+    return True
+
+
+def erase_set(g: Graph, nodes: Sequence[GNode]) -> int:
+    """Erase a matched node set in reverse topological (insertion) order,
+    skipping nodes that still have external uses (shared mask producers)."""
+    order = {nid: i for i, nid in enumerate(g.nodes.keys())}
+    erased = 0
+    for node in sorted(nodes, key=lambda n: order.get(n.nid, -1), reverse=True):
+        if node.nid not in g.nodes:
+            continue
+        if any(g.n_uses(ov) or g.is_output(ov) for ov in node.outvars):
+            continue  # shared producer — leave for DCE
+        g.erase_node(node)
+        erased += 1
+    return erased
+
+
+# --------------------------------------------------------------------------
+# dot_general shape classification
+# --------------------------------------------------------------------------
+
+
+def dot_dims(node: GNode):
+    dn = node.params.get("dimension_numbers")
+    if dn is None:
+        return None
+    (lc, rc), (lb, rb) = dn
+    return tuple(lc), tuple(rc), tuple(lb), tuple(rb)
+
+
+def is_qk_dot(node: GNode) -> bool:
+    """Q·Kᵀ: rank-4 (B,H,S,D) operands, batch (0,1)/(0,1), contract D·D."""
+    if node.op != "dot_general":
+        return False
+    d = dot_dims(node)
+    if d is None:
+        return False
+    lc, rc, lb, rb = d
+    lhs, rhs = node.invars[0], node.invars[1]
+    return (
+        len(lhs.shape) == 4
+        and len(rhs.shape) == 4
+        and lb == (0, 1)
+        and rb == (0, 1)
+        and lc == (3,)
+        and rc == (3,)
+    )
+
+
+def is_pv_dot(node: GNode) -> bool:
+    """P·V: batch (0,1)/(0,1), contract P's last axis with V's seq axis."""
+    if node.op != "dot_general":
+        return False
+    d = dot_dims(node)
+    if d is None:
+        return False
+    lc, rc, lb, rb = d
+    lhs, rhs = node.invars[0], node.invars[1]
+    return (
+        len(lhs.shape) == 4
+        and len(rhs.shape) == 4
+        and lb == (0, 1)
+        and rb == (0, 1)
+        and lc == (3,)
+        and rc == (2,)
+    )
+
+
+def is_plain_linear(node: GNode) -> bool:
+    """x·W with x: (..., K), W: (K, N) — the canonical projection form."""
+    if node.op != "dot_general":
+        return False
+    d = dot_dims(node)
+    if d is None:
+        return False
+    lc, rc, lb, rb = d
+    lhs, rhs = node.invars[0], node.invars[1]
+    return (
+        len(rhs.shape) == 2
+        and lb == ()
+        and rb == ()
+        and rc == (0,)
+        and lc == (len(lhs.shape) - 1,)
+    )
+
+
+# --------------------------------------------------------------------------
+# GQA broadcast-expansion unwrapping (the K-transpose-unwrap analogue)
+# --------------------------------------------------------------------------
+
+
+def unwrap_kv_expand(g: Graph, x: Operand) -> Tuple[Operand, int, List[GNode]]:
+    """Detect ``(B,KVH,S,D) -> (B,KVH,g,S,D) -> reshape (B,KVH*g,S,D)``.
+
+    Returns (original operand, group count, chain nodes).  The fused SDPA
+    kernel indexes KV heads as ``h // groups`` instead of materializing the
+    expansion (paper Listing 5's ``_unwrap_transpose`` adapted to GQA).
+    """
+    chain: List[GNode] = []
+    r = producer(g, x)
+    if r is None or r.op != "reshape":
+        return x, 1, []
+    chain.append(r)
+    cur = r.invars[0]
+    # one or two broadcast_in_dim steps insert + expand the group axis
+    bcasts: List[GNode] = []
+    while True:
+        b = producer(g, cur)
+        if b is None or b.op != "broadcast_in_dim":
+            break
+        bcasts.append(b)
+        cur = b.invars[0]
+    if not bcasts or not isinstance(cur, GVar):
+        return x, 1, []
+    src_shape = tuple(cur.shape)
+    out_shape = tuple(x.shape)
+    if len(src_shape) != 4 or len(out_shape) != 4:
+        return x, 1, []
+    B, KVH, S, D = src_shape
+    if out_shape[0] != B or out_shape[2:] != (S, D) or out_shape[1] % max(KVH, 1):
+        return x, 1, []
+    groups = out_shape[1] // KVH
+    if groups <= 1:
+        return x, 1, []
+    # verify the broadcast path really is (B,KVH,1.. ,S,D)->(B,KVH,g,S,D)
+    mid = tuple(r.invars[0].shape)
+    if mid != (B, KVH, groups, S, D):
+        return x, 1, []
+    chain.extend(bcasts)
+    return cur, groups, chain
+
+
+# --------------------------------------------------------------------------
+# Causal-mask recognition
+# --------------------------------------------------------------------------
+
+
+def _iota_dim(node: GNode) -> Optional[int]:
+    if node.op != "iota":
+        return None
+    dim = node.params.get("dimension")
+    shape = tuple(node.outvars[0].shape)
+    if len(shape) != 2:
+        return None
+    return int(dim)
+
+
+def is_causal_pred(g: Graph, pred: Operand) -> Optional[List[GNode]]:
+    """Recognize ``row (+off) >= col`` causal predicates.
+
+    Matches the exact pattern our model zoo emits (broadcast of
+    ``ge(iota0 + (Sk-Sq), iota1)``) and returns the producer chain, or
+    None.  Masks that do not match stay as explicit fused-node operands.
+    """
+    chain: List[GNode] = []
+    p = producer(g, pred)
+    if p is not None and p.op == "broadcast_in_dim":
+        chain.append(p)
+        pred = p.invars[0]
+        p = producer(g, pred)
+    if p is None:
+        # constant-folded mask: a concrete bool tril pattern, possibly
+        # broadcast over leading (batch, head) dims
+        c = const_value(g, pred)
+        if c is not None and c.ndim >= 2 and c.dtype == np.bool_:
+            sq, sk = c.shape[-2:]
+            row = np.arange(sq)[:, None] + (sk - sq)
+            col = np.arange(sk)[None, :]
+            tril = row >= col
+            flat = c.reshape(-1, sq, sk)
+            if all(np.array_equal(s, tril) for s in flat):
+                return chain
+        return None
+    if p.op != "ge":
+        return None
+    chain.append(p)
+    lhs, rhs = p.invars
+    # rhs must be a column iota
+    pr = producer(g, rhs)
+    if pr is None or _iota_dim(pr) != 1:
+        return None
+    chain.append(pr)
+    shape = tuple(pr.outvars[0].shape)
+    sq, sk = shape
+    # lhs: row iota, optionally + literal offset
+    pl_ = producer(g, lhs)
+    if pl_ is None:
+        return None
+    off = 0
+    if pl_.op == "add":
+        a, b = pl_.invars
+        lv = scalar_lit(b)
+        if lv is None:
+            lv = scalar_lit(a)
+            a = b
+        if lv is None:
+            return None
+        off = int(lv)
+        chain.append(pl_)
+        pl_ = producer(g, a)
+        if pl_ is None:
+            return None
+    if _iota_dim(pl_) != 0:
+        return None
+    chain.append(pl_)
+    if off != sk - sq:
+        return None  # not the standard causal alignment
+    return chain
+
+
+def is_neg_inf_branch(g: Graph, x: Operand) -> Optional[List[GNode]]:
+    """Operand that is (a broadcast of) a very-negative constant."""
+    chain: List[GNode] = []
+    p = producer(g, x)
+    if p is not None and p.op == "broadcast_in_dim":
+        chain.append(p)
+        x = p.invars[0]
+        p = producer(g, x)
+    v = scalar_lit(x)
+    if v is None:
+        c = const_value(g, x)
+        if c is not None and c.dtype.kind == "f" and np.all(c <= -1e30):
+            return chain
+        return None
+    if not (v <= -1e30 or v == float("-inf")):
+        return None
+    return chain

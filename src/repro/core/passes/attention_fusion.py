@@ -1,0 +1,315 @@
+"""Pass 4 — attention fusion (paper §4.3.4, Listing 5).
+
+The most impactful single optimization.  ``jax.nn.softmax``-based
+attention, as traced by ``jax.make_jaxpr``, appears as a chain of ~14
+discrete primitives:
+
+    dot_general(Q,K) → [convert] → [mul/div scale] → [mask: select_n/add]
+      → reduce_max → max(-inf) → broadcast → stop_gradient → sub → exp
+      → reduce_sum → broadcast → div → [convert] → dot_general(·,V)
+
+Each arrow is a separate node — and on the target hardware a separate
+kernel boundary with the (Sq, Sk) score matrix materialized in HBM between
+them.  This pass pattern-matches the chain and replaces it with a single
+``forge.sdpa`` node which Phase 3 routes to the accel device and which
+dispatches the Pallas flash-attention kernel (blockwise online softmax:
+scores never leave VMEM).
+
+TPU adaptations of the paper's matcher:
+
+* the *K-transpose unwrapping* becomes **GQA broadcast-expansion
+  unwrapping**: jaxprs carry contraction dims instead of explicit
+  transposes, but grouped-query K/V arrive through a
+  ``broadcast_in_dim→reshape`` expansion which we unwrap so the kernel
+  indexes KV heads as ``h // groups`` without materializing copies.
+* **causal-mask recognition**: ``jnp.where(row ≥ col, s, -inf)`` masks
+  whose predicate is a pure iota subgraph are converted to the kernel's
+  ``causal=True`` block-skip mode (the -inf branch and the iota producers
+  are dropped); other masks remain explicit fused-node operands.
+* the erasure-safety condition generalizes the paper's "exactly one user"
+  walk: every value-path node must be consumed only inside the matched
+  set (softmax's input legitimately has two in-cluster users).
+
+Aggressiveness ``alpha`` ∈ [0,1] fuses the first ⌈α·n⌉ of n matches
+(paper Table 17's knob, explored by the autotuner).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Set
+
+import numpy as np
+
+from ..graph import Graph, GLit, GNode, GVar, Operand
+from .base import ForgePass
+from . import _match as M
+
+
+class AttentionFusionPass(ForgePass):
+    name = "attention_fusion"
+
+    def __init__(self, alpha: float = 1.0, impl: Optional[str] = None):
+        self.alpha = alpha
+        self.impl = impl
+        self.last_detail: Dict[str, Any] = {}
+
+    # -- softmax cluster ----------------------------------------------------
+
+    def _match_softmax(self, g: Graph, exp_node: GNode) -> Optional[Dict[str, Any]]:
+        """Anchored at ``exp``; returns the cluster or None.
+
+        softmax(x) = exp(x - max(x)) / sum(exp(x - max(x))) over the last
+        axis, exactly as ``jax.nn.softmax`` traces.
+        """
+        sub = M.producer(g, exp_node.invars[0])
+        if sub is None or sub.op != "sub":
+            return None
+        x = sub.invars[0]
+        cluster: List[GNode] = [sub, exp_node]
+
+        # right leg: [stop_gradient] ∘ broadcast ∘ [max(-inf, ·)] ∘ reduce_max(x)
+        leg = sub.invars[1]
+        p = M.producer(g, leg)
+        if p is not None and p.op == "stop_gradient":
+            cluster.append(p)
+            leg = p.invars[0]
+            p = M.producer(g, leg)
+        if p is None or p.op != "broadcast_in_dim":
+            return None
+        cluster.append(p)
+        leg = p.invars[0]
+        p = M.producer(g, leg)
+        if p is not None and p.op == "max":
+            a, b = p.invars
+            lv = M.scalar_lit(a)
+            other = b
+            if lv is None:
+                lv, other = M.scalar_lit(b), a
+            if lv is None or not (lv == float("-inf") or lv <= -1e30):
+                return None
+            cluster.append(p)
+            leg = other
+            p = M.producer(g, leg)
+        if p is None or p.op != "reduce_max":
+            return None
+        axes = tuple(p.params.get("axes", ()))
+        nd = len(p.invars[0].shape)
+        if axes != (nd - 1,):
+            return None
+        if not (isinstance(p.invars[0], GVar) and isinstance(x, GVar)
+                and p.invars[0].vid == x.vid):
+            return None
+        cluster.append(p)
+
+        # forward leg: div(exp, broadcast(reduce_sum(exp)))
+        div = None
+        for u in g.users(exp_node.outvars[0]):
+            if u.op == "div" and isinstance(u.invars[0], GVar) \
+                    and u.invars[0].vid == exp_node.outvars[0].vid:
+                div = u
+                break
+        if div is None:
+            return None
+        bc = M.producer(g, div.invars[1])
+        if bc is None or bc.op != "broadcast_in_dim":
+            return None
+        rs = M.producer(g, bc.invars[0])
+        if rs is None or rs.op != "reduce_sum":
+            return None
+        if not (isinstance(rs.invars[0], GVar)
+                and rs.invars[0].vid == exp_node.outvars[0].vid):
+            return None
+        if tuple(rs.params.get("axes", ())) != axes:
+            return None
+        cluster.extend([rs, bc, div])
+        return {"x": x, "cluster": cluster, "out": div.outvars[0]}
+
+    # -- full chain ----------------------------------------------------------
+
+    def _match_chain(self, g: Graph, exp_node: GNode) -> Optional[Dict[str, Any]]:
+        sm = self._match_softmax(g, exp_node)
+        if sm is None:
+            return None
+        value_path: List[GNode] = list(sm["cluster"])
+        aux_path: List[GNode] = []  # shared-ok producers (masks, iota)
+
+        # ---- backward from softmax input -------------------------------
+        cur: Operand = sm["x"]
+        mask_operand: Optional[Operand] = None
+        mask_mode = "none"
+        causal = False
+
+        p = M.producer(g, cur)
+        # optional masking step
+        if p is not None and p.op == "select_n" and len(p.invars) == 3:
+            pred, case_false, case_true = p.invars
+            ninf = M.is_neg_inf_branch(g, case_false)
+            if ninf is not None:
+                value_path.append(p)
+                aux_path.extend(ninf)
+                causal_chain = M.is_causal_pred(g, pred)
+                if causal_chain is not None:
+                    causal = True
+                    aux_path.extend(causal_chain)
+                else:
+                    mask_operand, mask_mode = pred, "bool"
+                cur = case_true
+                p = M.producer(g, cur)
+        elif p is not None and p.op == "add":
+            a, b = p.invars
+            # additive mask: the non-score operand broadcasts over (Sq,Sk)
+            score_side = None
+            for s_, m_ in ((a, b), (b, a)):
+                sp = M.producer(g, s_)
+                if sp is not None and sp.op in ("dot_general", "mul", "div",
+                                                "convert_element_type"):
+                    score_side, mask_side = s_, m_
+                    break
+            if score_side is not None and not isinstance(mask_side, GLit):
+                value_path.append(p)
+                mask_operand, mask_mode = mask_side, "add"
+                cur = score_side
+                p = M.producer(g, cur)
+
+        # optional scale
+        scale = 1.0
+        scale_mode = "mul"
+        if p is not None and p.op in ("mul", "div"):
+            a, b = p.invars
+            lv = M.scalar_lit(b)
+            other = a
+            if lv is None and p.op == "mul":
+                lv, other = M.scalar_lit(a), b
+            if lv is not None:
+                scale = float(lv)
+                scale_mode = "div" if p.op == "div" else "mul"
+                value_path.append(p)
+                cur = other
+                p = M.producer(g, cur)
+
+        # optional convert between QK dot and scale
+        converts: List[GNode] = []
+        cur = M.skip_converts(g, cur, converts)
+        value_path.extend(converts)
+        p = M.producer(g, cur)
+
+        if p is None or not M.is_qk_dot(p):
+            return None
+        qk = p
+        value_path.append(qk)
+
+        # ---- forward from softmax output --------------------------------
+        out_v = sm["out"]
+        pv = None
+        fwd_converts: List[GNode] = []
+        seek: GVar = out_v
+        for _ in range(3):
+            users = g.users(seek)
+            if len(users) != 1 or g.is_output(seek):
+                break
+            u = users[0]
+            if u.op in ("convert_element_type", "copy"):
+                fwd_converts.append(u)
+                seek = u.outvars[0]
+                continue
+            if M.is_pv_dot(u) and isinstance(u.invars[0], GVar) \
+                    and u.invars[0].vid == seek.vid:
+                pv = u
+            break
+        if pv is None:
+            return None
+        value_path.extend(fwd_converts)
+        value_path.append(pv)
+
+        # ---- operands ----------------------------------------------------
+        q_op, k_op = qk.invars[0], qk.invars[1]
+        v_op = pv.invars[1]
+        k0, gk, k_chain = M.unwrap_kv_expand(g, k_op)
+        v0, gv, v_chain = M.unwrap_kv_expand(g, v_op)
+        groups = 1
+        if gk == gv and gk > 1:
+            groups = gk
+            value_path.extend(k_chain)
+            value_path.extend(v_chain)
+            k_op, v_op = k0, v0
+
+        nids: Set[int] = {n.nid for n in value_path} | {n.nid for n in aux_path}
+        interior = [n for n in value_path if n.nid != pv.nid]
+        if not M.uses_confined(g, interior, nids):
+            return None
+
+        return {
+            "qk": qk,
+            "pv": pv,
+            "value_path": value_path,
+            "aux_path": aux_path,
+            "q": q_op,
+            "k": k_op,
+            "v": v_op,
+            "mask": mask_operand,
+            "mask_mode": mask_mode,
+            "causal": causal,
+            "scale": scale,
+            "scale_mode": scale_mode,
+            "groups": groups,
+        }
+
+    # -- rewrite ---------------------------------------------------------------
+
+    def _fuse(self, g: Graph, m: Dict[str, Any]) -> None:
+        pv: GNode = m["pv"]
+        out = pv.outvars[0]
+        invars: List[Operand] = [m["q"], m["k"], m["v"]]
+        has_mask = m["mask"] is not None
+        if has_mask:
+            invars.append(m["mask"])
+        params = {
+            "scale": m["scale"],
+            "scale_mode": m["scale_mode"],
+            "causal": m["causal"],
+            "groups": m["groups"],
+            "has_mask": has_mask,
+            "mask_mode": m["mask_mode"],
+            "out_dtype": str(np.dtype(out.dtype)) if out.dtype is not None else None,
+            "impl": self.impl,
+        }
+        fused = g.insert_node_like(
+            pv, "forge.sdpa", params, invars, [out.aval],
+            meta={"fused_from": len(m["value_path"])},
+        )
+        g.replace_all_uses(out, fused.outvars[0])
+        M.erase_set(g, m["value_path"] + m["aux_path"])
+
+    def _scan(self, g: Graph, limit: Optional[int], fuse: bool):
+        """One scan over the graph; fuses immediately when ``fuse`` so later
+        matches see post-rewrite operands (stale-reference safety)."""
+        out: List[Dict[str, Any]] = []
+        claimed: Set[int] = set()
+        for node in list(g.nodes.values()):
+            if limit is not None and len(out) >= limit:
+                break
+            if node.nid not in g.nodes or node.op != "exp" or node.nid in claimed:
+                continue
+            m = self._match_chain(g, node)
+            if m is None:
+                continue
+            nids = {n.nid for n in m["value_path"]}
+            if nids & claimed:
+                continue
+            claimed |= nids
+            out.append(m)
+            if fuse:
+                self._fuse(g, m)
+        return out
+
+    def run(self, g: Graph) -> bool:
+        n_matched = len(self._scan(g, None, fuse=False))
+        n_fuse = math.ceil(self.alpha * n_matched) if n_matched else 0
+        fused = self._scan(g, n_fuse, fuse=True) if n_fuse else []
+        self.last_detail = {
+            "matched": n_matched,
+            "fused": len(fused),
+            "causal": sum(1 for m in fused if m["causal"]),
+            "gqa": sum(1 for m in fused if m["groups"] > 1),
+        }
+        return bool(fused)

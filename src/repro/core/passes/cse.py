@@ -1,0 +1,70 @@
+"""Pass 2 — common subexpression elimination (paper §4.3.2, Listing 4).
+
+Hash-consing over ``(op, canonical-params, operand-keys)`` triples: two
+nodes computing the same primitive on the same producers collapse onto
+the first occurrence (``replace_all_uses`` + erase), exactly the paper's
+``_fx_node_key`` scheme with FX node names replaced by SSA vids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+from ..graph import Graph, GLit, GVar
+from .base import ForgePass
+
+
+def _canon(x: Any) -> Any:
+    """Canonicalize a params value / literal into a hashable key."""
+    if isinstance(x, (bool, int, float, str, bytes, type(None))):
+        return x
+    if isinstance(x, (tuple, list)):
+        return tuple(_canon(e) for e in x)
+    if isinstance(x, dict):
+        return tuple(sorted((k, _canon(v)) for k, v in x.items()))
+    if isinstance(x, np.ndarray):
+        if x.size <= 256:
+            return ("ndarray", x.shape, str(x.dtype), x.tobytes())
+        return ("ndarray-big", x.shape, str(x.dtype), id(x))
+    if hasattr(x, "shape") and hasattr(x, "dtype"):  # jax array / aval
+        return ("aval", tuple(x.shape), str(x.dtype), id(x))
+    try:
+        hash(x)
+        return x
+    except TypeError:
+        return repr(x)
+
+
+def node_key(node) -> Tuple:
+    ops = []
+    for iv in node.invars:
+        if isinstance(iv, GVar):
+            ops.append(("v", iv.vid))
+        else:  # GLit
+            ops.append(("l", _canon(np.asarray(iv.val))))
+    params = _canon(node.params)
+    return (node.op, params, tuple(ops))
+
+
+class CSEPass(ForgePass):
+    name = "cse"
+
+    def run(self, g: Graph) -> bool:
+        canonical: Dict[Tuple, Any] = {}
+        erased = 0
+        for node in list(g.nodes.values()):
+            if node.meta.get("no_cse"):
+                continue
+            key = node_key(node)
+            first = canonical.get(key)
+            if first is None or first.nid not in g.nodes:
+                canonical[key] = node
+                continue
+            # redirect all uses of every output onto the first occurrence
+            for ov, cv in zip(node.outvars, first.outvars):
+                g.replace_all_uses(ov, cv)
+            g.erase_node(node)
+            erased += 1
+        self.last_detail = {"merged": erased}
+        return erased > 0

@@ -1,0 +1,49 @@
+"""Pass 1 — dead code elimination (paper §4.3.1, Listing 3).
+
+Backward reachability walk from the graph outputs; every node not reached
+is erased.  Removes capture artifacts (iota/mask subgraphs orphaned by the
+fusion passes, dead shape arithmetic, unused multi-output legs).
+"""
+from __future__ import annotations
+
+from typing import Set
+
+from ..graph import Graph, GVar
+from .base import ForgePass
+
+
+class DCEPass(ForgePass):
+    name = "dce"
+
+    def run(self, g: Graph) -> bool:
+        live_vids: Set[int] = set()
+        stack = [ov for ov in g.outvars if isinstance(ov, GVar)]
+        live_nodes: Set[int] = set()
+        while stack:
+            v = stack.pop()
+            if v.vid in live_vids:
+                continue
+            live_vids.add(v.vid)
+            pr = g.producer_of.get(v.vid)
+            if pr is None:
+                continue
+            nid = pr[0]
+            if nid in live_nodes:
+                continue
+            live_nodes.add(nid)
+            node = g.nodes.get(nid)
+            if node is None:
+                continue
+            for iv in node.invars:
+                if isinstance(iv, GVar):
+                    stack.append(iv)
+
+        dead = [n for nid, n in g.nodes.items() if nid not in live_nodes]
+        # erase in reverse topological order so use counts drain cleanly
+        for node in reversed(dead):
+            # a dead node's outputs may still be 'used' by other dead nodes
+            # later in the order — reverse order guarantees those were
+            # already erased.
+            g.erase_node(node)
+        self.last_detail = {"erased": len(dead)}
+        return bool(dead)

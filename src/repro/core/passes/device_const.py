@@ -1,0 +1,61 @@
+"""Pass — device-constant insertion (paper Table 10's "Device Constant").
+
+The paper inserts explicit device-placement constants so NPU dispatches
+never re-marshal host literals.  Our executor analogue: every non-scalar
+literal (``GLit``) embedded in a node's operands would be re-converted to a
+device array on *every* interpreted dispatch.  This pass promotes them to
+graph constants, which the ``CompiledExecutor`` pre-loads into the register
+file exactly once at build time (paper: "pre-loaded constants" in Listing
+9's ``regs = dict(self.constants)``).
+
+Scalar literals stay frozen in-place (they parameterize kernels, not
+buffers).  Promotion is idempotent: identical literals (by value) share one
+constant slot, so the fixpoint loop cannot grow the constant pool.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import numpy as np
+
+from ..graph import Graph, GLit, GVar
+from .base import ForgePass
+
+#: literals with at least this many elements are promoted
+_PROMOTE_MIN_ELEMS = 2
+
+
+class DeviceConstantPass(ForgePass):
+    name = "device_constant"
+
+    def __init__(self):
+        self.last_detail: Dict[str, Any] = {}
+
+    def run(self, g: Graph) -> bool:
+        promoted = 0
+        pool: Dict[Any, GVar] = {}
+        # seed pool with existing constants so repeats reuse them
+        for cv, cval in zip(g.constvars, g.consts):
+            arr = np.asarray(cval)
+            if arr.size <= 4096:
+                pool.setdefault(
+                    (arr.shape, str(arr.dtype), arr.tobytes()), cv
+                )
+        for node in g.nodes.values():
+            for i, iv in enumerate(node.invars):
+                if not isinstance(iv, GLit):
+                    continue
+                arr = np.asarray(iv.val)
+                if arr.size < _PROMOTE_MIN_ELEMS:
+                    continue
+                key = (arr.shape, str(arr.dtype), arr.tobytes()) \
+                    if arr.size <= 4096 else ("big", id(iv.val))
+                cv = pool.get(key)
+                if cv is None:
+                    cv = g.add_const(arr, iv.aval)
+                    pool[key] = cv
+                node.invars[i] = cv
+                g.users_of.setdefault(cv.vid, set()).add(node.nid)
+                promoted += 1
+        self.last_detail = {"promoted": promoted}
+        return promoted > 0

@@ -1,0 +1,136 @@
+"""Pass 3 — constant folding (paper §4.3.3).
+
+Two rewrites, exactly as the paper describes for transformer graphs:
+
+* **literal evaluation** — nodes whose operands are all compile-time
+  constants (literals / captured consts) are evaluated once at compile
+  time and replaced by a graph constant.  This folds RoPE frequency
+  tables, dtype-cast chains and shape arithmetic introduced by tracing.
+  A size cap keeps huge materializations (e.g. a 4k x 4k causal mask)
+  out of the constant pool — those are handled by attention fusion.
+* **identity arithmetic** — ``x+0``, ``x-0``, ``x*1``, ``x/1``,
+  ``x**1`` collapse onto ``x`` (paper: "identity arithmetic that arises
+  in shape calculations").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..graph import Graph, GLit, GNode, GVar
+from .base import ForgePass
+
+#: ops never folded (control flow / fused dispatches / effectful)
+_SKIP = ("scan", "while", "cond", "pjit", "custom_", "forge.")
+
+#: identity table: op -> (identity value, which operand may be the literal)
+_IDENTITIES = {
+    "add": (0.0, "either"),
+    "sub": (0.0, "rhs"),
+    "mul": (1.0, "either"),
+    "div": (1.0, "rhs"),
+}
+
+
+def _is_scalar_lit(x: Any, value: float) -> bool:
+    if not isinstance(x, GLit):
+        return False
+    arr = np.asarray(x.val)
+    return arr.size == 1 and float(arr.reshape(())) == value
+
+
+class ConstantFoldingPass(ForgePass):
+    name = "constant_folding"
+
+    def __init__(self, max_elements: int = 1 << 20):
+        self.max_elements = max_elements
+
+    def _const_value(self, g: Graph, iv) -> Optional[np.ndarray]:
+        """Return the compile-time value of an operand, or None."""
+        if isinstance(iv, GLit):
+            return np.asarray(iv.val)
+        for cv, cval in zip(g.constvars, g.consts):
+            if cv.vid == iv.vid:
+                v = np.asarray(cval) if not hasattr(cval, "shape") else cval
+                return v
+        return None
+
+    def _try_identity(self, g: Graph, node: GNode) -> bool:
+        ident = _IDENTITIES.get(node.op)
+        if ident is None or len(node.invars) != 2:
+            return False
+        val, side = ident
+        a, b = node.invars
+        keep = None
+        if side in ("rhs", "either") and _is_scalar_lit(b, val) and isinstance(a, GVar):
+            keep = a
+        elif side == "either" and _is_scalar_lit(a, val) and isinstance(b, GVar):
+            keep = b
+        if keep is None:
+            return False
+        out = node.outvars[0]
+        if tuple(keep.shape) != tuple(out.shape) or keep.dtype != out.dtype:
+            return False
+        g.replace_all_uses(out, keep)
+        g.erase_node(node)
+        return True
+
+    def _try_pow_identity(self, g: Graph, node: GNode) -> bool:
+        if node.op != "integer_pow" or node.params.get("y") != 1:
+            return False
+        a = node.invars[0]
+        if not isinstance(a, GVar):
+            return False
+        g.replace_all_uses(node.outvars[0], a)
+        g.erase_node(node)
+        return True
+
+    def _try_fold(self, g: Graph, node: GNode) -> bool:
+        if node.prim is None or any(node.op.startswith(s) for s in _SKIP):
+            return False
+        out_elems = sum(int(np.prod(ov.shape or (1,))) for ov in node.outvars)
+        if out_elems > self.max_elements:
+            return False
+        vals: List[np.ndarray] = []
+        for iv in node.invars:
+            v = self._const_value(g, iv)
+            if v is None:
+                return False
+            if getattr(v, "size", 0) > self.max_elements:
+                return False
+            vals.append(v)
+        try:
+            import jax
+
+            # escape any enclosing trace: folding must produce concrete
+            # values even when the Forge pipeline runs inside an outer jit
+            # (the scan-over-layers integration path)
+            with jax.ensure_compile_time_eval():
+                outs = node.prim.bind(*vals, **node.params)
+        except Exception:
+            return False
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+        from jax.core import Tracer
+
+        if any(isinstance(o, Tracer) for o in outs):
+            return False  # still abstract — not foldable here
+        for ov, res in zip(node.outvars, outs):
+            cv = g.add_const(np.asarray(res), ov.aval)
+            g.replace_all_uses(ov, cv)
+        g.erase_node(node)
+        return True
+
+    def run(self, g: Graph) -> bool:
+        folded = idents = 0
+        for node in list(g.nodes.values()):
+            if node.nid not in g.nodes:
+                continue
+            if self._try_identity(g, node) or self._try_pow_identity(g, node):
+                idents += 1
+                continue
+            if self._try_fold(g, node):
+                folded += 1
+        self.last_detail = {"folded": folded, "identities": idents}
+        return (folded + idents) > 0

@@ -1,0 +1,203 @@
+"""Pass 6 — layout optimization (paper §4.3.6), adapted to TPU.
+
+The paper inserts ``.contiguous()`` / channels-last conversions at NPU
+boundaries and cancels redundant conversions.  LM workloads on TPU have no
+NHWC notion; the layout concerns that *do* exist at the XLA/Mosaic level
+are:
+
+* **transpose ∘ transpose** cancellation (inverse permutations),
+* **convert_element_type chains** — collapse ``convert(convert(x))`` and
+  erase no-op converts (dtype unchanged),
+* **reshape ∘ reshape** collapse,
+* **transpose absorption into dot_general**: a rank-2 weight arriving
+  through ``transpose`` is consumed by adjusting the contraction dims
+  instead (the jaxpr-level analogue of the paper's K-transpose unwrap —
+  avoids materializing the transposed copy at the kernel boundary),
+* **MXU block-shape hints**: fused ``forge.*`` nodes are annotated with
+  128-aligned tile hints (the ``NPU_PREFERRED_LAYOUTS`` table analogue);
+  the Pallas wrappers read these to pick BlockSpecs.
+
+A secondary sub-pass (mirroring the paper's redundant-conversion
+cancellation) guarantees idempotence so the fixpoint loop cannot inflate
+the graph.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..graph import Graph, GLit, GNode, GVar
+from .base import ForgePass
+from . import _match as M
+
+# the MXU-preferred tile table: op -> (sublane, lane) multiples
+MXU_PREFERRED_TILES: Dict[str, Tuple[int, int]] = {
+    "forge.sdpa": (128, 128),
+    "forge.linear_act": (128, 128),
+    "forge.swiglu": (128, 128),
+    "dot_general": (128, 128),
+}
+
+
+def _inverse_perm(p: Tuple[int, ...], q: Tuple[int, ...]) -> bool:
+    if len(p) != len(q):
+        return False
+    comp = [p[i] for i in q]
+    return comp == list(range(len(p)))
+
+
+class LayoutOptimizationPass(ForgePass):
+    name = "layout_optimization"
+
+    def __init__(self, rewrite: bool = True):
+        #: λ='hints' keeps only the tile annotation sub-pass
+        self.rewrite = rewrite
+        self.last_detail: Dict[str, Any] = {}
+
+    def _cancel_transposes(self, g: Graph) -> int:
+        n = 0
+        for node in list(g.nodes.values()):
+            if node.nid not in g.nodes or node.op != "transpose":
+                continue
+            inner = M.producer(g, node.invars[0])
+            if inner is None or inner.op != "transpose":
+                continue
+            p1 = tuple(inner.params.get("permutation", ()))
+            p2 = tuple(node.params.get("permutation", ()))
+            if not _inverse_perm(p1, p2):
+                continue
+            g.replace_all_uses(node.outvars[0], inner.invars[0])
+            g.erase_node(node)
+            if not g.n_uses(inner.outvars[0]) and not g.is_output(inner.outvars[0]):
+                g.erase_node(inner)
+            n += 1
+        return n
+
+    def _collapse_converts(self, g: Graph) -> int:
+        n = 0
+        for node in list(g.nodes.values()):
+            if node.nid not in g.nodes or node.op != "convert_element_type":
+                continue
+            src = node.invars[0]
+            out = node.outvars[0]
+            # no-op convert
+            if isinstance(src, GVar) and src.dtype == out.dtype:
+                g.replace_all_uses(out, src)
+                g.erase_node(node)
+                n += 1
+                continue
+            # convert(convert(x)) -> convert(x) when the inner convert is
+            # widening-then-narrowing or same-direction (value-preserving
+            # collapse only: inner must be exclusively ours)
+            inner = M.producer(g, src)
+            if inner is None or inner.op != "convert_element_type":
+                continue
+            inner_src = inner.invars[0]
+            if not isinstance(inner_src, GVar):
+                continue
+            src_dt = np.dtype(inner_src.dtype)
+            mid_dt = np.dtype(src.dtype)
+            dst_dt = np.dtype(out.dtype)
+            # safe collapses: same dtype round-trip, or widening middle
+            widening = (
+                mid_dt.kind == src_dt.kind == dst_dt.kind == "f"
+                and mid_dt.itemsize >= src_dt.itemsize
+                and mid_dt.itemsize >= dst_dt.itemsize
+            )
+            if not (src_dt == dst_dt and widening) and not widening:
+                continue
+            if g.n_uses(src) != 1:
+                continue
+            node.invars[0] = inner_src
+            g.users_of[src.vid].discard(node.nid)
+            g.users_of.setdefault(inner_src.vid, set()).add(node.nid)
+            if src_dt == dst_dt:
+                g.replace_all_uses(out, inner_src)
+                g.erase_node(node)
+            if not g.n_uses(inner.outvars[0]) and not g.is_output(inner.outvars[0]):
+                g.erase_node(inner)
+            n += 1
+        return n
+
+    def _collapse_reshapes(self, g: Graph) -> int:
+        n = 0
+        for node in list(g.nodes.values()):
+            if node.nid not in g.nodes or node.op != "reshape":
+                continue
+            inner = M.producer(g, node.invars[0])
+            if inner is None or inner.op != "reshape":
+                continue
+            if inner.params.get("dimensions") or node.params.get("dimensions"):
+                continue  # reshape-with-transpose: leave alone
+            if g.n_uses(inner.outvars[0]) != 1:
+                continue
+            src = inner.invars[0]
+            if not isinstance(src, GVar):
+                continue
+            if tuple(src.shape) == tuple(node.outvars[0].shape):
+                g.replace_all_uses(node.outvars[0], src)
+                g.erase_node(node)
+            else:
+                node.invars[0] = src
+                g.users_of[inner.outvars[0].vid].discard(node.nid)
+                g.users_of.setdefault(src.vid, set()).add(node.nid)
+            if not g.n_uses(inner.outvars[0]) and not g.is_output(inner.outvars[0]):
+                g.erase_node(inner)
+            n += 1
+        return n
+
+    def _absorb_dot_transpose(self, g: Graph) -> int:
+        """dot(x, transpose(w₂ᴰ)) → dot(x, w) with flipped contraction dim."""
+        n = 0
+        for node in list(g.nodes.values()):
+            if node.nid not in g.nodes or node.op != "dot_general":
+                continue
+            d = M.dot_dims(node)
+            if d is None:
+                continue
+            lc, rc, lb, rb = d
+            rhs = node.invars[1]
+            tp = M.producer(g, rhs)
+            if tp is None or tp.op != "transpose":
+                continue
+            src = tp.invars[0]
+            if len(src.shape) != 2 or tuple(tp.params.get("permutation", ())) != (1, 0):
+                continue
+            if rb:  # batched rhs — skip
+                continue
+            new_rc = tuple(1 - c for c in rc)
+            node.params["dimension_numbers"] = ((lc, new_rc), (lb, rb))
+            node.invars[1] = src
+            g.users_of[rhs.vid].discard(node.nid)
+            g.users_of.setdefault(src.vid, set()).add(node.nid)
+            if not g.n_uses(tp.outvars[0]) and not g.is_output(tp.outvars[0]):
+                g.erase_node(tp)
+            n += 1
+        return n
+
+    def _annotate_tiles(self, g: Graph) -> int:
+        n = 0
+        for node in g.nodes.values():
+            hint = MXU_PREFERRED_TILES.get(node.op)
+            if hint is not None and "block_hint" not in node.meta:
+                node.meta["block_hint"] = hint
+                n += 1
+        return n
+
+    def run(self, g: Graph) -> bool:
+        t = c = r = a = 0
+        if self.rewrite:
+            t = self._cancel_transposes(g)
+            c = self._collapse_converts(g)
+            r = self._collapse_reshapes(g)
+            a = self._absorb_dot_transpose(g)
+        h = self._annotate_tiles(g)
+        self.last_detail = {
+            "transposes_cancelled": t,
+            "converts_collapsed": c,
+            "reshapes_collapsed": r,
+            "dot_transposes_absorbed": a,
+            "tiles_annotated": h,
+        }
+        return (t + c + r + a) > 0

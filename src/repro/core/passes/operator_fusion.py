@@ -1,0 +1,424 @@
+"""Pass 5 — operator fusion (paper §4.3.5, Listing 6).
+
+Targets the complementary pattern set: a linear projection immediately
+followed by a point-wise activation.  In the traced graph each linear,
+bias-add and activation is a separate primitive chain (silu alone is
+``mul(h, logistic(h))``; tanh-gelu is a 7-node polynomial chain) — each a
+separate kernel boundary materializing the (tokens, d_ff) intermediate in
+HBM.  Matched chains become single ``forge.linear_act`` nodes dispatching
+the tiled Pallas matmul+bias+activation kernel (activation applied in VMEM
+on the final K step; intermediate never leaves the MXU accumulator).
+
+Fusion patterns (paper: linear+relu / linear+gelu / linear+silu / mm+add):
+
+* ``linear [+bias] + {relu, silu, gelu-tanh, gelu-exact, tanh}``
+* ``linear [+bias] + residual-add``  (the paper's mm+add)
+* ``swiglu``:  ``silu(x·Wg) ⊙ (x·Wu)`` → one ``forge.swiglu`` node — a
+  beyond-paper mega-fusion for SwiGLU FFNs (both gate matmuls share the
+  x tile in VMEM).
+
+Like the paper's pass, the dispatch side caches compiled kernels: our
+fused callables are jitted once per shape via the XLA compilation cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from ..graph import Graph, GLit, GNode, GVar, Operand
+from .base import ForgePass
+from . import _match as M
+
+_GELU_C0 = 0.044715
+_GELU_C1 = math.sqrt(2.0 / math.pi)  # 0.7978845608
+_INV_SQRT2 = 1.0 / math.sqrt(2.0)  # 0.70710678
+
+
+def _close(a: Optional[float], b: float, tol: float = 0.02) -> bool:
+    return a is not None and abs(a - b) <= tol * max(1.0, abs(b))
+
+
+class OperatorFusionPass(ForgePass):
+    name = "operator_fusion"
+
+    def __init__(self, alpha: float = 1.0, impl: Optional[str] = None,
+                 enable_swiglu: bool = True):
+        self.alpha = alpha
+        self.impl = impl
+        self.enable_swiglu = enable_swiglu
+        self.last_detail: Dict[str, Any] = {}
+
+    # -- activation recognizers (anchored at the last node of the chain) -----
+
+    def _match_relu(self, g: Graph, node: GNode) -> Optional[Tuple[Operand, List[GNode]]]:
+        if node.op != "max" or len(node.invars) != 2:
+            return None
+        a, b = node.invars
+        if M.scalar_lit(b) == 0.0 and isinstance(a, GVar):
+            return a, [node]
+        if M.scalar_lit(a) == 0.0 and isinstance(b, GVar):
+            return b, [node]
+        return None
+
+    def _match_silu(self, g: Graph, node: GNode) -> Optional[Tuple[Operand, List[GNode]]]:
+        # mul(h, logistic(h))
+        if node.op != "mul":
+            return None
+        for h, l_ in (node.invars, node.invars[::-1]):
+            lp = M.producer(g, l_)
+            if lp is not None and lp.op == "logistic" \
+                    and isinstance(lp.invars[0], GVar) and isinstance(h, GVar) \
+                    and lp.invars[0].vid == h.vid:
+                return h, [lp, node]
+        return None
+
+    def _match_tanh(self, g: Graph, node: GNode) -> Optional[Tuple[Operand, List[GNode]]]:
+        if node.op == "tanh" and isinstance(node.invars[0], GVar):
+            # bare tanh activation — but not the one inside a gelu chain
+            users = g.users(node.outvars[0])
+            if any(u.op == "add" and any(M.scalar_lit(iv) == 1.0 for iv in u.invars)
+                   for u in users):
+                return None
+            return node.invars[0], [node]
+        return None
+
+    def _match_gelu_tanh(self, g: Graph, node: GNode) -> Optional[Tuple[Operand, List[GNode]]]:
+        """mul(h, mul(0.5, add(1, tanh(mul(c1, add(h, mul(c0, h^3)))))))."""
+        if node.op != "mul":
+            return None
+        for h, wrap in (node.invars, node.invars[::-1]):
+            if not isinstance(h, GVar):
+                continue
+            m_half = M.producer(g, wrap)
+            if m_half is None or m_half.op != "mul":
+                continue
+            a, b = m_half.invars
+            if _close(M.scalar_lit(a), 0.5):
+                inner = b
+            elif _close(M.scalar_lit(b), 0.5):
+                inner = a
+            else:
+                continue
+            add1 = M.producer(g, inner)
+            if add1 is None or add1.op != "add":
+                continue
+            a, b = add1.invars
+            if _close(M.scalar_lit(a), 1.0):
+                tanh_v = b
+            elif _close(M.scalar_lit(b), 1.0):
+                tanh_v = a
+            else:
+                continue
+            tanh_n = M.producer(g, tanh_v)
+            if tanh_n is None or tanh_n.op != "tanh":
+                continue
+            m_c1 = M.producer(g, tanh_n.invars[0])
+            if m_c1 is None or m_c1.op != "mul":
+                continue
+            a, b = m_c1.invars
+            if _close(M.scalar_lit(a), _GELU_C1):
+                poly = b
+            elif _close(M.scalar_lit(b), _GELU_C1):
+                poly = a
+            else:
+                continue
+            add_p = M.producer(g, poly)
+            if add_p is None or add_p.op != "add":
+                continue
+            a, b = add_p.invars
+            hh, cube_side = (a, b) if (isinstance(a, GVar) and a.vid == h.vid) else (b, a)
+            if not (isinstance(hh, GVar) and hh.vid == h.vid):
+                continue
+            m_c0 = M.producer(g, cube_side)
+            if m_c0 is None or m_c0.op != "mul":
+                continue
+            a, b = m_c0.invars
+            if _close(M.scalar_lit(a), _GELU_C0):
+                pow_v = b
+            elif _close(M.scalar_lit(b), _GELU_C0):
+                pow_v = a
+            else:
+                continue
+            pow_n = M.producer(g, pow_v)
+            if pow_n is None or pow_n.op != "integer_pow" or pow_n.params.get("y") != 3:
+                continue
+            if not (isinstance(pow_n.invars[0], GVar) and pow_n.invars[0].vid == h.vid):
+                continue
+            return h, [pow_n, m_c0, add_p, m_c1, tanh_n, add1, m_half, node]
+        return None
+
+    def _match_gelu_exact(self, g: Graph, node: GNode) -> Optional[Tuple[Operand, List[GNode]]]:
+        """mul(mul(0.5, h), erfc(mul(neg(h), 1/sqrt2)))  [jax.nn.gelu exact]."""
+        if node.op != "mul":
+            return None
+        for lhs, rhs in (node.invars, node.invars[::-1]):
+            half_n = M.producer(g, lhs)
+            erfc_n = M.producer(g, rhs)
+            if half_n is None or erfc_n is None or erfc_n.op != "erfc":
+                continue
+            if half_n.op != "mul":
+                continue
+            a, b = half_n.invars
+            if _close(M.scalar_lit(a), 0.5):
+                h = b
+            elif _close(M.scalar_lit(b), 0.5):
+                h = a
+            else:
+                continue
+            if not isinstance(h, GVar):
+                continue
+            m_n = M.producer(g, erfc_n.invars[0])
+            if m_n is None or m_n.op != "mul":
+                continue
+            a, b = m_n.invars
+            neg_side = None
+            if _close(M.scalar_lit(b), _INV_SQRT2):
+                neg_side = a
+            elif _close(M.scalar_lit(a), _INV_SQRT2):
+                neg_side = b
+            if neg_side is None:
+                continue
+            neg_n = M.producer(g, neg_side)
+            if neg_n is None or neg_n.op != "neg":
+                continue
+            if not (isinstance(neg_n.invars[0], GVar) and neg_n.invars[0].vid == h.vid):
+                continue
+            return h, [neg_n, m_n, erfc_n, half_n, node]
+        return None
+
+    _ACT_MATCHERS = (
+        ("silu", "_match_silu"),
+        ("gelu", "_match_gelu_tanh"),
+        ("gelu_exact", "_match_gelu_exact"),
+        ("relu", "_match_relu"),
+        ("tanh", "_match_tanh"),
+    )
+
+    def _match_activation(self, g: Graph, node: GNode):
+        for act, meth in self._ACT_MATCHERS:
+            res = getattr(self, meth)(g, node)
+            if res is not None:
+                h, chain = res
+                return act, h, chain
+        return None
+
+    # -- linear-producer helper (skips dtype converts from fp32-accum dots) ----
+
+    def _linear_producer(self, g: Graph, h: Operand):
+        """Walk h through converts to a plain linear dot.
+        Returns (dot_node, convert_chain) or None."""
+        converts: List[GNode] = []
+        base = M.skip_converts(g, h, converts)
+        dp = M.producer(g, base)
+        if dp is not None and M.is_plain_linear(dp):
+            return dp, converts
+        return None
+
+    # -- bias detection --------------------------------------------------------
+
+    def _match_bias_add(self, g: Graph, h: Operand):
+        """h == add(dot_out, broadcast(b[1-D]))?  Returns (dot_out, b, chain)."""
+        p = M.producer(g, h)
+        if p is None or p.op != "add":
+            return None
+        for dot_side, bias_side in (p.invars, p.invars[::-1]):
+            lp = self._linear_producer(g, dot_side)
+            if lp is None:
+                continue
+            dp, converts = lp
+            bp = M.producer(g, bias_side)
+            if bp is not None and bp.op == "broadcast_in_dim":
+                src = bp.invars[0]
+                if len(src.shape) == 1 and src.shape[0] == dot_side.shape[-1]:
+                    return dot_side, src, [p, bp] + converts, dp
+            if isinstance(bias_side, GVar) and len(bias_side.shape) == 1 \
+                    and bias_side.shape[0] == dot_side.shape[-1]:
+                return dot_side, bias_side, [p] + converts, dp
+        return None
+
+    # -- pattern: swiglu ---------------------------------------------------------
+
+    def _match_swiglu(self, g: Graph, node: GNode) -> Optional[Dict[str, Any]]:
+        """mul(silu(dot(x,Wg)), dot(x,Wu)) with a shared x."""
+        if node.op != "mul":
+            return None
+        for gate_v, up_v in (node.invars, node.invars[::-1]):
+            silu_m = None
+            gp = M.producer(g, gate_v)
+            if gp is not None:
+                silu_m = self._match_silu(g, gp)
+            if silu_m is None:
+                continue
+            h, silu_chain = silu_m
+            lp_g = self._linear_producer(g, h)
+            lp_u = self._linear_producer(g, up_v)
+            if lp_g is None or lp_u is None:
+                continue
+            gate_dot, conv_g = lp_g
+            up_dot, conv_u = lp_u
+            xg, wg = gate_dot.invars
+            xu, wu = up_dot.invars
+            if not (isinstance(xg, GVar) and isinstance(xu, GVar) and xg.vid == xu.vid):
+                continue
+            chain = [gate_dot, up_dot] + conv_g + conv_u + silu_chain + [node]
+            return {
+                "kind": "swiglu",
+                "anchor": node,
+                "x": xg,
+                "wg": wg,
+                "wu": wu,
+                "chain": chain,
+            }
+        return None
+
+    # -- pattern: linear (+bias) (+act | +residual) -------------------------------
+
+    def _match_linear_act(self, g: Graph, node: GNode) -> Optional[Dict[str, Any]]:
+        act_m = self._match_activation(g, node)
+        if act_m is None:
+            return None
+        act, h, act_chain = act_m
+        chain = list(act_chain)
+        bias = None
+        bm = self._match_bias_add(g, h)
+        if bm is not None:
+            dot_out, bias, bias_chain, dot = bm
+            chain.extend(bias_chain)
+        else:
+            lp = self._linear_producer(g, h)
+            if lp is None:
+                return None
+            dot, converts = lp
+            chain.extend(converts)
+        chain.append(dot)
+        x, w = dot.invars[0], dot.invars[1]
+        return {
+            "kind": "linear_act",
+            "anchor": node,
+            "x": x,
+            "w": w,
+            "b": bias,
+            "act": act,
+            "residual": None,
+            "chain": chain,
+        }
+
+    def _match_mm_add(self, g: Graph, node: GNode) -> Optional[Dict[str, Any]]:
+        """add(dot(x,W) [+bias], residual) — residual same-shape (paper mm+add)."""
+        if node.op != "add":
+            return None
+        out_shape = tuple(node.outvars[0].shape)
+        for dot_side, res_side in (node.invars, node.invars[::-1]):
+            if not isinstance(res_side, GVar) or tuple(res_side.shape) != out_shape:
+                continue
+            chain: List[GNode] = [node]
+            bias = None
+            bm = self._match_bias_add(g, dot_side)
+            if bm is not None:
+                _, bias, bias_chain, dot = bm
+                chain.extend(bias_chain)
+            else:
+                lp = self._linear_producer(g, dot_side)
+                if lp is None:
+                    continue
+                dot, converts = lp
+                chain.extend(converts)
+            chain.append(dot)
+            # residual must not itself be the dot output
+            rp = M.producer(g, res_side)
+            if rp is not None and rp.nid == dot.nid:
+                continue
+            return {
+                "kind": "linear_act",
+                "anchor": node,
+                "x": dot.invars[0],
+                "w": dot.invars[1],
+                "b": bias,
+                "act": None,
+                "residual": res_side,
+                "chain": chain,
+            }
+        return None
+
+    # -- rewrite -------------------------------------------------------------------
+
+    def _fuse(self, g: Graph, m: Dict[str, Any]) -> None:
+        anchor: GNode = m["anchor"]
+        out = anchor.outvars[0]
+        if m["kind"] == "swiglu":
+            params = {"impl": self.impl,
+                      "out_dtype": str(np.dtype(out.dtype))}
+            fused = g.insert_node_like(
+                anchor, "forge.swiglu", params, [m["x"], m["wg"], m["wu"]],
+                [out.aval], meta={"fused_from": len(m["chain"])},
+            )
+        else:
+            invars: List[Operand] = [m["x"], m["w"]]
+            if m["b"] is not None:
+                invars.append(m["b"])
+            if m["residual"] is not None:
+                invars.append(m["residual"])
+            params = {
+                "act": m["act"],
+                "has_bias": m["b"] is not None,
+                "has_residual": m["residual"] is not None,
+                "out_dtype": str(np.dtype(out.dtype)),
+                "impl": self.impl,
+            }
+            fused = g.insert_node_like(
+                anchor, "forge.linear_act", params, invars, [out.aval],
+                meta={"fused_from": len(m["chain"])},
+            )
+        g.replace_all_uses(out, fused.outvars[0])
+        M.erase_set(g, m["chain"])
+
+    def _scan(self, g: Graph, limit: Optional[int], fuse: bool):
+        """One scan; fuses immediately when ``fuse`` so later matches see
+        post-rewrite operands (stale-reference safety)."""
+        out: List[Dict[str, Any]] = []
+        claimed: Set[int] = set()
+
+        def try_one(m: Optional[Dict[str, Any]]) -> bool:
+            if m is None:
+                return False
+            nids = {n.nid for n in m["chain"]}
+            if nids & claimed:
+                return False
+            interior = [n for n in m["chain"] if n.nid != m["anchor"].nid]
+            if not M.uses_confined(g, interior, nids | {m["anchor"].nid}):
+                return False
+            claimed.update(nids)
+            out.append(m)
+            if fuse:
+                self._fuse(g, m)
+            return True
+
+        matchers = []
+        if self.enable_swiglu:
+            matchers.append(self._match_swiglu)
+        matchers += [self._match_linear_act, self._match_mm_add]
+        for matcher in matchers:
+            for node in list(g.nodes.values()):
+                if limit is not None and len(out) >= limit:
+                    return out
+                if node.nid in claimed or node.nid not in g.nodes:
+                    continue
+                try_one(matcher(g, node))
+        return out
+
+    def run(self, g: Graph) -> bool:
+        n_matched = len(self._scan(g, None, fuse=False))
+        n_fuse = math.ceil(self.alpha * n_matched) if n_matched else 0
+        fused = self._scan(g, n_fuse, fuse=True) if n_fuse else []
+        self.last_detail = {
+            "matched": n_matched,
+            "fused": len(fused),
+            "swiglu": sum(1 for m in fused if m["kind"] == "swiglu"),
+            "residual": sum(
+                1 for m in fused
+                if m["kind"] == "linear_act" and m.get("residual") is not None
+            ),
+        }
+        return bool(fused)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, TokenDataset, write_synthetic_corpus
+
+__all__ = ["DataConfig", "TokenDataset", "write_synthetic_corpus"]

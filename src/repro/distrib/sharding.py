@@ -1,0 +1,290 @@
+"""Sharding plans: DP / FSDP / TP / EP / SP over the production mesh.
+
+A :class:`ShardingPlan` maps every parameter, optimizer-state, input and
+cache leaf to a ``PartitionSpec`` using family-aware trailing-dim rules:
+
+* **TP** — attention heads, FFN hidden, vocab over the ``model`` axis,
+* **EP** — MoE expert dim over ``model`` (dispatch/combine become
+  all-to-all under GSPMD),
+* **FSDP/ZeRO** — params *additionally* sharded over the data axes
+  (``("pod","data")`` multi-pod); XLA inserts per-layer all-gathers
+  inside the scanned block,
+* **SP (sequence parallel for serving)** — decode KV caches shard the
+  *sequence* dim over ``model`` (flash-decoding split-K: GSPMD inserts
+  the softmax-stat all-reduces),
+* batch dims over ``("pod", "data")``.
+
+Every spec passes through :func:`safe_pspec`, which drops mesh axes that
+do not divide the dim (recorded in ``plan.fallbacks``) — e.g. the
+global_batch=1 ``long_500k`` cell replicates its batch dim instead of
+failing.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+Axis = Any  # str | tuple[str, ...] | None
+
+
+def mesh_axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def dp_axes(mesh: Mesh) -> Axis:
+    """The data-parallel axes: ('pod','data') on multi-pod meshes."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def safe_pspec(shape: Sequence[int], spec: Sequence[Axis], mesh: Mesh,
+               log: Optional[List[str]] = None, tag: str = "") -> P:
+    """Drop axes that don't divide their dim (fallback to replication)."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        n = mesh_axis_size(mesh, tuple(ax) if isinstance(ax, (tuple, list))
+                           else ax)
+        if dim % n == 0 and dim > 0:
+            out.append(tuple(ax) if isinstance(ax, (tuple, list)) else ax)
+        else:
+            out.append(None)
+            if log is not None:
+                log.append(f"{tag}: dim {dim} % {ax}({n}) != 0 -> replicated")
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# parameter rules: leaf-name -> trailing-dim axis pattern
+# "F" is the FSDP placeholder (resolves to dp axes or None);
+# "M" is the tensor/model axis.
+# --------------------------------------------------------------------------
+
+_PARAM_RULES: List[Tuple[str, Tuple] ] = [
+    # MoE experts (3-D trailing): expert dim -> model (EP)
+    ("router", (None, "M")),
+    ("w_gate3", ("M", "F", None)),  # (E, d, f) — placeholder, see below
+    # attention
+    ("wq", ("F", "M")),
+    ("wk", ("F", "M")),
+    ("wv", ("F", "M")),
+    ("wo", ("M", "F")),
+    ("bq", ("M",)),
+    ("bk", ("M",)),
+    ("bv", ("M",)),
+    # FFN
+    ("w_gate", ("F", "M")),
+    ("w_up", ("F", "M")),
+    ("w_down", ("M", "F")),
+    ("w_fc", ("F", "M")),
+    ("w_out", ("M", "F")),
+    ("b_fc", ("M",)),
+    ("b_out", (None,)),
+    # embeddings (per-arch overrides below; see ShardingPlan.param_pattern)
+    ("embed", ("M", "F")),
+    ("lm_head", ("F", "M")),
+    # RG-LRU / xLSTM projections
+    ("wx", ("F", "M")),
+    ("wy", ("F", "M")),
+    ("wi", ("F", "M")),
+    ("wr", ("F", "M")),
+    ("w_if", ("F", None)),
+    ("conv", (None, "M")),
+    ("lam", ("M",)),
+    # norms / small
+    ("scale", (None,)),
+    ("bias", (None,)),
+    ("r", (None, None, None)),
+]
+
+_MOE_3D = {"w_gate", "w_up", "w_down"}  # under a 'moe' path → (E, ·, ·)
+
+
+@dataclass
+class ShardingPlan:
+    mesh: Mesh
+    cfg: ModelConfig
+    fsdp: bool = True
+    seq_shard_cache: bool = True  # SP for decode KV caches
+    moe_fsdp_dim: str = "contract"  # 'contract' | 'output' (§Perf knob)
+    vocab_fsdp: bool = False  # lm_head FSDP on vocab dim (§Perf knob)
+    fallbacks: List[str] = field(default_factory=list)
+
+    # -- leaf-level rules -------------------------------------------------------
+
+    def _resolve(self, pattern: Tuple, ndim: int) -> Tuple:
+        dp = dp_axes(self.mesh)
+
+        def one(a):
+            if a == "F":
+                return dp if self.fsdp else None
+            if a == "M":
+                return "model"
+            if a == "MF":  # tp+dp jointly on one dim (vocab-style)
+                return ("model", *dp) if self.fsdp else "model"
+            return a
+
+        conc = tuple(one(a) for a in pattern)
+        if len(conc) < ndim:  # stacked-layer leading dims replicate
+            conc = (None,) * (ndim - len(conc)) + conc
+        return conc[:ndim] if len(conc) > ndim else conc
+
+    def param_pattern(self, path: str, leaf) -> Tuple:
+        ndim = len(leaf.shape)
+        last_name = None
+        for name, pat in _PARAM_RULES:
+            if f"'{name}'" in path:
+                last_name = (name, pat)
+        if last_name is None:
+            return (None,) * ndim
+        name, pat = last_name
+        if name == "lm_head" and self.vocab_fsdp:
+            pat = (None, "MF")  # never shard the head's contraction dim
+        if name == "embed" and self.vocab_fsdp:
+            pat = ("F", "M")
+        # MoE expert tensors: (…, E, a, b) -> expert dim over model (EP).
+        # ``moe_fsdp_dim`` picks where the dp axes live: "contract" (the
+        # GShard default — partial-sums expert activations but keeps
+        # weights stationary) vs "output" (weight all-gathers instead);
+        # measured head-to-head in EXPERIMENTS §Perf.
+        if name in _MOE_3D and "'moe'" in path and "'shared'" not in path:
+            dp = dp_axes(self.mesh)
+            f = dp if self.fsdp else None
+            if self.moe_fsdp_dim == "output":
+                pat = ("model", None, f)
+            else:  # contract
+                pat = ("model", f, None) if name in ("w_gate", "w_up") \
+                    else ("model", None, f)
+            if len(pat) < ndim:
+                pat = (None,) * (ndim - len(pat)) + pat
+            return pat
+        return self._resolve(pat, ndim)
+
+    def param_spec(self, path: str, leaf) -> P:
+        pat = self.param_pattern(path, leaf)
+        return safe_pspec(leaf.shape, pat, self.mesh, self.fallbacks,
+                          tag=f"param{path}")
+
+    def params_shardings(self, params_tree: Any) -> Any:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+        out = []
+        for kp, leaf in flat:
+            path = jax.tree_util.keystr(kp)
+            out.append(NamedSharding(self.mesh, self.param_spec(path, leaf)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- optimizer states ------------------------------------------------------
+
+    def opt_state_shardings(self, opt_state: Any, params_tree: Any) -> Any:
+        """Shape-match states to their param's spec (Adafactor-aware)."""
+        flat_p, _ = jax.tree_util.tree_flatten_with_path(params_tree)
+        by_shape_path = {
+            jax.tree_util.keystr(kp): (leaf, self.param_pattern(
+                jax.tree_util.keystr(kp), leaf))
+            for kp, leaf in flat_p
+        }
+
+        def spec_for(kp, leaf) -> P:
+            path = jax.tree_util.keystr(kp)
+            # find the param whose path is a suffix of this state path
+            for ppath, (pleaf, ppat) in by_shape_path.items():
+                if path.endswith(ppath):
+                    pshape = tuple(pleaf.shape)
+                    lshape = tuple(leaf.shape)
+                    if lshape == pshape:
+                        return safe_pspec(lshape, ppat, self.mesh)
+                    if lshape == pshape[:-1]:  # Adafactor vr
+                        return safe_pspec(lshape, ppat[:-1], self.mesh)
+                    if lshape == pshape[:-2] + pshape[-1:]:  # vc
+                        return safe_pspec(
+                            lshape, ppat[:-2] + ppat[-1:], self.mesh
+                        )
+                    break
+            return P()
+
+        flat_s, treedef = jax.tree_util.tree_flatten_with_path(opt_state)
+        out = [NamedSharding(self.mesh, spec_for(kp, leaf))
+               for kp, leaf in flat_s]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- inputs / caches -------------------------------------------------------------
+
+    def batch_spec(self, leaf) -> P:
+        dp = dp_axes(self.mesh)
+        shape = leaf.shape
+        pat = (dp,) + (None,) * (len(shape) - 1)
+        return safe_pspec(shape, pat, self.mesh, self.fallbacks, "batch")
+
+    def batch_shardings(self, batch: Any) -> Any:
+        return jax.tree_util.tree_map(
+            lambda l: NamedSharding(self.mesh, self.batch_spec(l)), batch
+        )
+
+    def cache_spec(self, path: str, leaf) -> P:
+        dp = dp_axes(self.mesh)
+        shape = leaf.shape
+        nd = len(shape)
+        sp = "model" if self.seq_shard_cache else None
+        if ("'k'" in path or "'v'" in path or "self_k" in path
+                or "self_v" in path or "cross_k" in path or "cross_v" in path):
+            if nd == 5:  # (L, B, KVH, S, hd): batch->dp, seq->model (SP)
+                pat = (None, dp, None, sp, None)
+            elif nd == 4:  # (B, KVH, S, hd) hybrid window cache
+                pat = (dp, None, sp, None)
+            else:
+                pat = (dp,) + (None,) * (nd - 1)
+        elif "'C'" in path and nd == 4:  # mLSTM matrix memory (B,H,dv,dk)
+            pat = (dp, None, "model", None)
+        elif nd >= 2:
+            pat = (dp,) + (None,) * (nd - 2) + ("model",)
+        elif nd == 1:
+            pat = (dp,)
+        else:
+            pat = ()
+        return safe_pspec(shape, pat, self.mesh, self.fallbacks,
+                          f"cache{path}")
+
+    def cache_shardings(self, cache: Any) -> Any:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        out = []
+        for kp, leaf in flat:
+            path = jax.tree_util.keystr(kp)
+            out.append(NamedSharding(self.mesh, self.cache_spec(path, leaf)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def scalar_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def summary(self) -> str:
+        return (f"plan[{self.cfg.name}] mesh={dict(self.mesh.shape)} "
+                f"fsdp={self.fsdp} sp_cache={self.seq_shard_cache} "
+                f"fallbacks={len(self.fallbacks)}")
+
+
+def plan_for(cfg: ModelConfig, mesh: Mesh, *, fsdp: Optional[bool] = None,
+             seq_shard_cache: bool = True,
+             moe_fsdp_dim: str = "contract",
+             vocab_fsdp: bool = False) -> ShardingPlan:
+    if fsdp is None:
+        # FSDP on for models whose bf16 params exceed ~1 GB/chip under pure TP
+        tp = mesh_axis_size(mesh, "model")
+        fsdp = cfg.param_count() * 2 / tp > 1e9
+    return ShardingPlan(mesh=mesh, cfg=cfg, fsdp=fsdp,
+                        seq_shard_cache=seq_shard_cache,
+                        moe_fsdp_dim=moe_fsdp_dim, vocab_fsdp=vocab_fsdp)

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the Forge fused dispatch targets.
+
+Each kernel ships three layers (repo convention):
+
+* ``<name>.py``  — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling,
+* ``ops.py``     — jit'd wrappers with impl selection (pallas / interpret /
+                   XLA fallback) and custom_vjp backward rules,
+* ``ref.py``     — pure-jnp oracles the kernels are validated against.
+
+Kernels: flash_attention (forge.sdpa), fused_linear (forge.linear_act /
+forge.swiglu), rg_lru (forge.rg_lru recurrence).
+"""
+from . import ops, ref
+from .flash_attention import flash_attention
+from .fused_linear import fused_linear_pallas
+from .rg_lru import rg_lru_pallas
+
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention",
+    "fused_linear_pallas",
+    "rg_lru_pallas",
+]

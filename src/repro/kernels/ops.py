@@ -1,0 +1,293 @@
+"""jit'd wrappers around the Forge fused kernels.
+
+Every fused graph node created by the Phase-2 passes (``forge.sdpa``,
+``forge.linear_act``, ``forge.swiglu``) and every pre-fused dispatch unit
+called by model code (``forge_rg_lru`` …) bottoms out here.
+
+Implementation selection (``impl``):
+
+* ``"xla"``      — pure-jnp implementation, numerically identical to the
+                   unfused graph (used on the CPU container and as the
+                   GSPMD-partitionable path for the multi-pod dry-run).
+                   Long sequences switch to a q-chunked scan with O(N·c)
+                   memory (the XLA analogue of the flash kernel).
+* ``"pallas"``   — the TPU Pallas kernels (target hardware).
+* ``"interpret"``— Pallas kernels under ``interpret=True`` (CPU validation).
+
+Resolution order: explicit ``impl`` arg > ``FORGE_KERNEL_IMPL`` env >
+``"xla"``.
+
+The Pallas paths are wrapped in ``jax.custom_vjp`` with reference-jnp
+backward rules so the whole compiled executor stays differentiable.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import ref as _ref
+
+_VALID_IMPLS = ("xla", "pallas", "interpret")
+
+# sequences with Sq*Sk beyond this use the q-chunked softmax path
+_CHUNK_THRESHOLD = 4096 * 4096
+_DEFAULT_Q_CHUNK = 1024
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    impl = impl or os.environ.get("FORGE_KERNEL_IMPL", "xla")
+    if impl not in _VALID_IMPLS:
+        raise ValueError(f"impl must be one of {_VALID_IMPLS}, got {impl!r}")
+    return impl
+
+
+def forge_op(name: str):
+    """Mark a function as an opaque fused dispatch unit.
+
+    The returned function is ``jax.jit``-wrapped with a ``forge_<name>``
+    name, so Phase-1 capture keeps it as a single ``forge.<name>`` graph
+    node routed to the ``accel`` device (the paper's custom-operator
+    registration hook, §9.5).
+    """
+
+    def deco(fn):
+        fn.__name__ = f"forge_{name}"
+        jitted = jax.jit(fn)
+        return jitted
+
+    return deco
+
+
+# --------------------------------------------------------------------------
+# Scaled dot-product attention (the attention-fusion dispatch target)
+# --------------------------------------------------------------------------
+
+
+def _apply_scale(s, scale, scale_mode):
+    if scale is None or scale_mode == "none":
+        return s
+    c = jnp.asarray(scale, s.dtype)
+    if scale_mode == "div":
+        return s / c
+    if scale_mode == "mul":
+        return s * c
+    raise ValueError(f"bad scale_mode {scale_mode!r}")
+
+
+def _expand_kv(x, groups):
+    if groups == 1:
+        return x
+    B, KVH, S, D = x.shape
+    return jnp.broadcast_to(x[:, :, None], (B, KVH, groups, S, D)).reshape(
+        B, KVH * groups, S, D
+    )
+
+
+def _sdpa_xla_direct(q, k, v, mask, *, scale, scale_mode, causal, pet,
+                     out_dtype):
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=pet)
+    s = _apply_scale(s, scale, scale_mode)
+    if causal:
+        Sq, Sk = s.shape[-2], s.shape[-1]
+        row = lax.broadcasted_iota(jnp.int32, (Sq, Sk), 0) + (Sk - Sq)
+        col = lax.broadcasted_iota(jnp.int32, (Sq, Sk), 1)
+        s = jnp.where(row >= col, s, jnp.asarray(jnp.finfo(s.dtype).min, s.dtype))
+    if mask is not None:
+        s = s + mask.astype(s.dtype)
+    p = jax.nn.softmax(s, axis=-1)
+    # single downcast to the requested dtype (no fp32->bf16->fp32 round trip)
+    return jnp.einsum(
+        "bhqk,bhkd->bhqd", p.astype(v.dtype), v, preferred_element_type=pet
+    ).astype(out_dtype)
+
+
+def _sdpa_xla_chunked(q, k, v, mask, *, scale, scale_mode, causal, pet,
+                      q_chunk, out_dtype):
+    """q-chunked softmax attention: O(Sq·c + c·Sk) live memory.
+
+    The XLA analogue of the flash kernel: scan over query chunks, full
+    softmax per chunk.  Memory per step is (B, H, c, Sk).
+    """
+    B, H, Sq, D = q.shape
+    c = min(q_chunk, Sq)
+    while Sq % c != 0:
+        c //= 2
+    c = max(c, 1)
+    nq = Sq // c
+    Sk = k.shape[2]
+
+    def chunk(i):
+        q_i = lax.dynamic_slice_in_dim(q, i * c, c, axis=2)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q_i, k, preferred_element_type=pet)
+        s = _apply_scale(s, scale, scale_mode)
+        if causal:
+            row = lax.broadcasted_iota(jnp.int32, (c, Sk), 0) + i * c + (Sk - Sq)
+            col = lax.broadcasted_iota(jnp.int32, (c, Sk), 1)
+            s = jnp.where(row >= col, s, jnp.asarray(jnp.finfo(s.dtype).min, s.dtype))
+        if mask is not None:
+            m = jnp.broadcast_to(mask, mask.shape[:-2] + (Sq, Sk))
+            m_i = lax.dynamic_slice_in_dim(m, i * c, c, axis=-2)
+            s = s + m_i.astype(s.dtype)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(v.dtype), v, preferred_element_type=pet
+        ).astype(out_dtype)
+
+    outs = lax.map(chunk, jnp.arange(nq))  # (nq, B, H, c, D)
+    return jnp.moveaxis(outs, 0, 2).reshape(B, H, Sq, D)
+
+
+def sdpa(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: Optional[jax.Array] = None,
+    *,
+    scale: Optional[float] = None,
+    scale_mode: str = "mul",
+    causal: bool = False,
+    groups: int = 1,
+    impl: Optional[str] = None,
+    pet=jnp.float32,
+    q_chunk: int = _DEFAULT_Q_CHUNK,
+    out_dtype=None,
+) -> jax.Array:
+    """Fused scaled-dot-product attention dispatch.
+
+    q: (B, H, Sq, D);  k, v: (B, H/groups, Sk, D).  ``mask`` is additive.
+    ``out_dtype`` defaults to v.dtype (fused callables pass the matched
+    graph output dtype so precision is cast exactly once).
+    """
+    impl = resolve_impl(impl)
+    out_dtype = out_dtype or v.dtype
+    if scale is None:
+        scale, scale_mode = 1.0 / (q.shape[-1] ** 0.5), "mul"
+    if impl in ("pallas", "interpret") and mask is None and q.shape[-2] > 1:
+        from .flash_attention import flash_attention
+
+        return flash_attention(
+            q, k, v, scale=scale, scale_mode=scale_mode, causal=causal,
+            groups=groups, interpret=(impl == "interpret"),
+        ).astype(out_dtype)
+    kx, vx = _expand_kv(k, groups), _expand_kv(v, groups)
+    big = q.shape[-2] * kx.shape[-2] > _CHUNK_THRESHOLD
+    if big and q.shape[-2] > 1:
+        return _sdpa_xla_chunked(
+            q, kx, vx, mask, scale=scale, scale_mode=scale_mode,
+            causal=causal, pet=pet, q_chunk=q_chunk, out_dtype=out_dtype,
+        )
+    return _sdpa_xla_direct(
+        q, kx, vx, mask, scale=scale, scale_mode=scale_mode, causal=causal,
+        pet=pet, out_dtype=out_dtype,
+    )
+
+
+# --------------------------------------------------------------------------
+# Fused linear (+bias) (+activation)  — the operator-fusion dispatch target
+# --------------------------------------------------------------------------
+
+
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    act: Optional[str] = None,
+    residual: Optional[jax.Array] = None,
+    impl: Optional[str] = None,
+    pet=None,
+) -> jax.Array:
+    """y = act(x·w + b) (+ residual).  x: (..., K), w: (K, N)."""
+    impl = resolve_impl(impl)
+    if impl in ("pallas", "interpret") and x.ndim >= 2:
+        from .fused_linear import fused_linear_pallas
+
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        y = fused_linear_pallas(
+            x2, w, b, act=act, interpret=(impl == "interpret")
+        ).reshape(*lead, w.shape[-1])
+    else:
+        y = jnp.einsum(
+            "...k,kn->...n", x, w,
+            preferred_element_type=(pet or jnp.promote_types(x.dtype, w.dtype)),
+        ).astype(x.dtype)
+        if b is not None:
+            y = y + b
+        y = _ref.apply_act(y, act)
+    if residual is not None:
+        y = y + residual
+    return y
+
+
+def swiglu(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    *,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Fused SwiGLU gate (beyond-paper mega-fusion): silu(x·Wg) ⊙ (x·Wu)."""
+    impl = resolve_impl(impl)
+    if impl in ("pallas", "interpret"):
+        from .fused_linear import fused_linear_pallas
+
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        g = fused_linear_pallas(x2, w_gate, None, act="silu", interpret=(impl == "interpret"))
+        u = fused_linear_pallas(x2, w_up, None, act=None, interpret=(impl == "interpret"))
+        return (g * u).reshape(*lead, w_gate.shape[-1])
+    return _ref.swiglu_ref(x, w_gate, w_up)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU linear recurrence (pre-fused dispatch for recurrent archs)
+# --------------------------------------------------------------------------
+
+
+def rg_lru(
+    x: jax.Array,
+    a: jax.Array,
+    h0: Optional[jax.Array] = None,
+    *,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """h_t = a_t ⊙ h_{t-1} + x_t over axis 1.  x, a: (B, T, D)."""
+    impl = resolve_impl(impl)
+    if impl in ("pallas", "interpret"):
+        from .rg_lru import rg_lru_pallas
+
+        return rg_lru_pallas(x, a, h0, interpret=(impl == "interpret"))
+    return _ref.rg_lru_ref(x, a, h0)
+
+
+def rms_norm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    eps: float = 1e-6,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Fused RMSNorm dispatch (beyond-paper kernel)."""
+    impl = resolve_impl(impl)
+    if impl in ("pallas", "interpret"):
+        from .rms_norm import rms_norm_pallas
+
+        return rms_norm_pallas(x, w, eps=eps, interpret=(impl == "interpret"))
+    return _ref.rms_norm_ref(x, w, eps)
+
+
+__all__ = [
+    "sdpa",
+    "fused_linear",
+    "swiglu",
+    "rg_lru",
+    "forge_op",
+    "resolve_impl",
+]

@@ -1,0 +1,391 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) cell this driver
+
+1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+2. constructs the family step function (train_step / prefill / serve_step)
+   with the ShardingPlan's in/out shardings,
+3. ``jax.jit(...).lower(**ShapeDtypeStruct inputs).compile()`` — no
+   device allocation anywhere,
+4. records ``memory_analysis()`` (fits?), ``cost_analysis()`` (FLOPs /
+   bytes) and the collective schedule parsed from the optimized HLO,
+5. derives the three roofline terms (launch/roofline.py) and appends the
+   cell to the JSON results file (incremental: reruns skip cached cells).
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  python -m repro.launch.dryrun --all            # every applicable cell
+  python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import (
+    ARCH_IDS,
+    SHAPES,
+    get_config,
+    input_specs,
+    params_specs,
+    shape_applicable,
+)
+from ..distrib.sharding import ShardingPlan, plan_for
+from .mesh import make_production_mesh
+from .roofline import RooflineTerms, collective_bytes, model_flops_for
+from .steps import default_optimizer, make_prefill_step, make_serve_step, make_train_step
+
+RESULTS_DEFAULT = "benchmarks/results/dryrun.json"
+
+
+def _ns(mesh, spec_tree):
+    return spec_tree  # NamedShardings already built by the plan
+
+
+def _memory_analysis(compiled) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    try:
+        m = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(m, k, None)
+            if v is not None:
+                out[k] = float(v)
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0)
+        )
+    except Exception as e:  # pragma: no cover - backend-dependent
+        out["error"] = str(e)
+    return out
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0]
+        return {k: float(v) for k, v in c.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        return {"error_": str(e)}  # type: ignore[dict-item]
+
+
+def _act_policy(mesh, act_shard: Optional[str]):
+    from ..distrib.actsharding import ActivationPolicy
+
+    if act_shard in (None, "off"):
+        return None
+    if act_shard == "logits":  # head-output pin only (MoE archs)
+        return ActivationPolicy(mesh=mesh, only=frozenset({"logits"}))
+    return ActivationPolicy(mesh=mesh,
+                            sequence_parallel=(act_shard == "sp"))
+
+
+def build_cell(cfg, shape_name: str, mesh, *, fsdp: Optional[bool] = None,
+               seq_shard_cache: bool = True, moe_fsdp_dim: str = "contract",
+               vocab_fsdp: bool = False):
+    """Returns (jitted_fn, example_args_kw, plan, kind)."""
+    spec = SHAPES[shape_name]
+    plan = plan_for(cfg, mesh, fsdp=fsdp, seq_shard_cache=seq_shard_cache,
+                    moe_fsdp_dim=moe_fsdp_dim, vocab_fsdp=vocab_fsdp)
+    specs = input_specs(cfg, shape_name)
+    p_sds = params_specs(cfg)
+    p_shard = plan.params_shardings(p_sds)
+
+    if spec.kind == "train":
+        opt = default_optimizer(cfg)
+        o_sds = jax.eval_shape(opt.init, p_sds)
+        o_shard = plan.opt_state_shardings(o_sds, p_sds)
+        b_shard = plan.batch_shardings(specs)
+        step = make_train_step(cfg, opt)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        args = (p_sds, o_sds, specs)
+    elif spec.kind == "prefill":
+        b_shard = plan.batch_shardings(specs)
+        step = make_prefill_step(cfg)
+        fn = jax.jit(step, in_shardings=(p_shard, b_shard))
+        args = (p_sds, specs)
+    else:  # decode
+        cache_sds = specs["cache"]
+        c_shard = plan.cache_shardings(cache_sds)
+        t_shard = plan.batch_shardings(specs["token"])
+        step = make_serve_step(cfg)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, c_shard, t_shard, None),
+            out_shardings=(t_shard, c_shard),
+            donate_argnums=(1,),
+        )
+        args = (p_sds, cache_sds, specs["token"], specs["pos"])
+    return fn, args, plan, spec
+
+
+def _calib_layers(cfg) -> int:
+    """Smallest homogeneous layer-pattern unit for flop calibration."""
+    if cfg.family == "hybrid":
+        return len(cfg.block_pattern or ("rec", "rec", "attn"))
+    if cfg.family == "ssm" and cfg.slstm_every:
+        return cfg.slstm_every
+    return 1
+
+
+def _with_layers(cfg, n: int):
+    kw = dict(n_layers=n, scan_layers=False)
+    if cfg.family == "encdec":
+        kw.update(n_enc_layers=n, n_dec_layers=n)
+    return cfg.with_(**kw)
+
+
+def _measure(cfg, shape_name: str, mesh, *, fsdp, seq_shard_cache,
+             act_shard: Optional[str] = None,
+             moe_fsdp_dim: str = "contract", vocab_fsdp: bool = False):
+    """Lower+compile one variant; return (flops, bytes, coll_bytes)."""
+    from ..distrib.actsharding import use_policy
+
+    fn, args, _, _ = build_cell(cfg, shape_name, mesh, fsdp=fsdp,
+                                seq_shard_cache=seq_shard_cache,
+                                moe_fsdp_dim=moe_fsdp_dim,
+                                vocab_fsdp=vocab_fsdp)
+    with use_policy(_act_policy(mesh, act_shard)):
+        compiled = fn.lower(*args).compile()
+    cost = _cost_analysis(compiled)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    coll.pop("_counts", None)
+    weighted = (2.0 * coll.get("all-reduce", 0.0)
+                + sum(v for k, v in coll.items() if k != "all-reduce"))
+    return (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
+            weighted)
+
+
+def calibrated_totals(cfg, shape_name: str, mesh, *, fsdp,
+                      seq_shard_cache,
+                      act_shard: Optional[str] = None,
+                      moe_fsdp_dim: str = "contract",
+                      vocab_fsdp: bool = False) -> Dict[str, float]:
+    """Exact per-device totals: XLA cost analysis counts a scan body ONCE,
+    so we lower unrolled 1-unit and 2-unit variants and scale the
+    per-layer-unit delta to the full depth (calibration pattern: 1 layer
+    for homogeneous stacks, the block pattern for hybrid/ssm)."""
+    unit = _calib_layers(cfg)
+    L = cfg.n_layers
+    kw = dict(fsdp=fsdp, seq_shard_cache=seq_shard_cache,
+              act_shard=act_shard, moe_fsdp_dim=moe_fsdp_dim,
+              vocab_fsdp=vocab_fsdp)
+    f1, b1, c1 = _measure(_with_layers(cfg, unit), shape_name, mesh, **kw)
+    f2, b2, c2 = _measure(_with_layers(cfg, 2 * unit), shape_name, mesh, **kw)
+    n_units = L / unit
+    return {
+        "flops": f1 + (f2 - f1) * (n_units - 1),
+        "bytes": b1 + (b2 - b1) * (n_units - 1),
+        "coll_bytes": c1 + (c2 - c1) * (n_units - 1),
+        "per_unit": {"flops": f2 - f1, "bytes": b2 - b1,
+                     "coll_bytes": c2 - c1},
+        "base": {"flops": f1, "bytes": b1, "coll_bytes": c1},
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             fuse: Optional[str] = None, fsdp: Optional[bool] = None,
+             seq_shard_cache: bool = True, calibrate: bool = True,
+             act_shard: Optional[str] = None,
+             moe_fsdp_dim: str = "contract", vocab_fsdp: bool = False,
+             mesh=None, verbose: bool = True) -> Dict[str, Any]:
+    from ..distrib.actsharding import use_policy
+
+    cfg = get_config(arch)
+    if fuse is not None:
+        cfg = cfg.with_(fuse=fuse)
+    runs, reason = shape_applicable(cfg, shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}|{shape_name}|{mesh_name}"
+    if not runs:
+        return {"cell": cell_id, "status": "skipped", "reason": reason}
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.perf_counter()
+    fn, args, plan, spec = build_cell(
+        cfg, shape_name, mesh, fsdp=fsdp, seq_shard_cache=seq_shard_cache,
+        moe_fsdp_dim=moe_fsdp_dim, vocab_fsdp=vocab_fsdp,
+    )
+    with use_policy(_act_policy(mesh, act_shard)):
+        lowered = fn.lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = _memory_analysis(compiled)
+    cost = _cost_analysis(compiled)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = collective_bytes(hlo)
+    counts = coll.pop("_counts", {})
+    weighted = (2.0 * coll.get("all-reduce", 0.0)
+                + coll.get("all-gather", 0.0)
+                + coll.get("reduce-scatter", 0.0)
+                + coll.get("all-to-all", 0.0)
+                + coll.get("collective-permute", 0.0))
+
+    # scan bodies are counted once by cost analysis — calibrate exact
+    # totals from unrolled 1-unit / 2-unit lowers (single-pod roofline)
+    calib: Dict[str, Any] = {}
+    if calibrate:
+        try:
+            calib = calibrated_totals(
+                cfg, shape_name, mesh, fsdp=plan.fsdp,
+                seq_shard_cache=plan.seq_shard_cache, act_shard=act_shard,
+                moe_fsdp_dim=moe_fsdp_dim, vocab_fsdp=vocab_fsdp,
+            )
+        except Exception as e:  # pragma: no cover
+            calib = {"error": f"{type(e).__name__}: {e}"}
+
+    flops = calib.get("flops", cost.get("flops", 0.0))
+    bytes_ = calib.get("bytes", cost.get("bytes accessed", 0.0))
+    coll_b = calib.get("coll_bytes", weighted)
+    terms = RooflineTerms(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=bytes_,
+        coll_bytes=coll_b,
+        coll_detail={**coll, "counts": counts},
+        model_flops=model_flops_for(cfg, spec.kind, spec.seq_len,
+                                    spec.global_batch) / chips,
+        bytes_per_device=mem.get("total_bytes_per_device", 0.0),
+    )
+    rec = {
+        "cell": cell_id,
+        "status": "ok",
+        "kind": spec.kind,
+        "fuse": cfg.fuse,
+        "fsdp": plan.fsdp,
+        "seq_shard_cache": plan.seq_shard_cache,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "cost": {k: v for k, v in cost.items() if not k.startswith("error")},
+        "cost_scan_raw": {"flops": cost.get("flops", 0.0),
+                          "coll_bytes": weighted},
+        "calibration": calib,
+        "roofline": terms.as_dict(),
+        "fallbacks": plan.fallbacks[:20],
+        "hlo_sizes": {"n_lines": hlo.count("\n")},
+    }
+    if verbose:
+        print(f"[dryrun] {cell_id}: compile={t_compile:.1f}s "
+              f"flops/dev={terms.hlo_flops:.3g} bytes/dev={terms.hlo_bytes:.3g} "
+              f"coll/dev={terms.coll_bytes:.3g} mem/dev="
+              f"{terms.bytes_per_device/2**30:.2f}GiB dom={terms.dominant}")
+        print(f"  memory_analysis: {mem}")
+    return rec
+
+
+def load_results(path: str) -> Dict[str, Any]:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(path: str, results: Dict[str, Any]) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    os.replace(tmp, path)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["forge-125m"], default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fuse", choices=["forge", "none"], default=None)
+    ap.add_argument("--fsdp", choices=["auto", "on", "off"], default="auto")
+    ap.add_argument("--act-shard", choices=["off", "tp", "sp", "logits"], default="off",
+                    help="activation sharding constraints (§Perf lever)")
+    ap.add_argument("--moe-fsdp-dim", choices=["contract", "output"],
+                    default="contract")
+    ap.add_argument("--vocab-fsdp", action="store_true")
+    ap.add_argument("--no-seq-shard-cache", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DEFAULT)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="variant tag for hillclimb runs")
+    args = ap.parse_args(argv)
+
+    fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                cells.append((arch, shape, mp))
+
+    results = load_results(args.out)
+    n_ok = n_skip = n_fail = 0
+    for arch, shape, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        key = f"{arch}|{shape}|{mesh_name}"
+        if args.tag:
+            key += f"|{args.tag}"
+        if key in results and results[key].get("status") in ("ok", "skipped") \
+                and not args.force:
+            print(f"[dryrun] cached: {key}")
+            continue
+        try:
+            rec = run_cell(
+                arch, shape, multi_pod=mp, fuse=args.fuse, fsdp=fsdp,
+                seq_shard_cache=not args.no_seq_shard_cache,
+                act_shard=args.act_shard,
+                moe_fsdp_dim=args.moe_fsdp_dim,
+                vocab_fsdp=args.vocab_fsdp,
+                calibrate=not mp,  # roofline table is single-pod only
+            )
+            rec["tag"] = args.tag
+            results[key] = rec
+            n_ok += rec["status"] == "ok"
+            n_skip += rec["status"] == "skipped"
+        except Exception as e:  # noqa: BLE001 — sweep must survive
+            traceback.print_exc()
+            results[key] = {"cell": key, "status": "failed",
+                            "error": f"{type(e).__name__}: {e}"}
+            n_fail += 1
+        save_results(args.out, results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed "
+          f"-> {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

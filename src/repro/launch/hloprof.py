@@ -1,0 +1,115 @@
+"""HLO profile for the dry-run world: no wall-clock traces exist on this
+container, so the 'profiler' is the optimized HLO itself — this module
+extracts the top-N collectives by payload, resharding copies, and
+dominant fusions, which is exactly the evidence the §Perf hypothesis
+loop needs (spec: "your profile is lowered.as_text() + cost_analysis()").
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hloprof --arch qwen2.5-14b \
+      --shape train_4k --layers 1
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+from .roofline import _DTYPE_BYTES, _SHAPE_RE
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|copy)"
+    r"(?:-start)?\("
+)
+
+
+def _bytes_of(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def top_collectives(hlo: str, n: int = 15) -> List[Tuple[int, str, str]]:
+    rows = []
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_text, kind = m.group(1), m.group(2)
+        size = _bytes_of(shape_text)
+        meta = ""
+        mm = re.search(r'op_name="([^"]+)"', line)
+        if mm:
+            meta = mm.group(1)[-90:]
+        rows.append((size, kind, meta))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def summarize(hlo: str) -> Dict[str, Tuple[int, float]]:
+    agg: Dict[str, List[float]] = defaultdict(lambda: [0, 0.0])
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        size = _bytes_of(m.group(1))
+        agg[m.group(2)][0] += 1
+        agg[m.group(2)][1] += size
+    return {k: (int(v[0]), v[1]) for k, v in agg.items()}
+
+
+def main(argv=None) -> int:
+    from ..configs import get_config
+    from .dryrun import _with_layers, build_cell
+    from .mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--layers", type=int, default=1)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--fsdp", choices=["auto", "on", "off"], default="auto")
+    ap.add_argument("--act-shard", choices=["off", "tp", "sp", "logits"], default="off")
+    ap.add_argument("--moe-fsdp-dim", choices=["contract", "output"],
+                    default="contract")
+    ap.add_argument("--vocab-fsdp", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = _with_layers(get_config(args.arch), args.layers)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
+    fn, specs, plan, _ = build_cell(cfg, args.shape, mesh, fsdp=fsdp,
+                                    seq_shard_cache=True,
+                                    moe_fsdp_dim=args.moe_fsdp_dim,
+                                    vocab_fsdp=args.vocab_fsdp)
+    from ..distrib.actsharding import use_policy
+    from .dryrun import _act_policy
+
+    with use_policy(_act_policy(mesh, args.act_shard)):
+        compiled = fn.lower(*specs).compile()
+    hlo = compiled.as_text()
+    print(f"== {args.arch} {args.shape} layers={args.layers} "
+          f"mesh={'2x16x16' if args.multi_pod else '16x16'} ==")
+    print("-- totals per kind (count, bytes/device) --")
+    for kind, (cnt, byt) in sorted(summarize(hlo).items(),
+                                   key=lambda kv: -kv[1][1]):
+        print(f"  {kind:20s} n={cnt:4d}  {byt/2**30:10.3f} GiB")
+    print(f"-- top {args.top} by payload --")
+    for size, kind, meta in top_collectives(hlo, args.top):
+        print(f"  {size/2**30:10.3f} GiB  {kind:18s} {meta}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

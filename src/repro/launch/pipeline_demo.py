@@ -1,0 +1,59 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+"""Pipeline-parallelism demo + correctness check.
+
+Builds a 2-stage GPipe over a (pod=2, data=2, model=2) mesh (8 host
+devices), streams 4 microbatches of a 4-layer MLP stack through it, and
+asserts exact agreement with the sequential reference — proving the pod
+axis can be repurposed as a pipeline axis with in-pod GSPMD intact.
+
+  PYTHONPATH=src python -m repro.launch.pipeline_demo
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..distrib.pipeline import gpipe_apply, reference_apply, split_stages
+
+
+def main() -> int:
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    L, d, mb, M, S = 4, 32, 2, 4, 8
+    rng = np.random.default_rng(0)
+    blocks = {
+        "w": jnp.asarray(rng.standard_normal((L, d, d)) / np.sqrt(d),
+                         jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((L, d)) * 0.1, jnp.float32),
+    }
+    stages = split_stages(blocks, 2)  # (2, 2, d, d)
+    stages = jax.device_put(
+        stages,
+        jax.tree_util.tree_map(
+            lambda a: NamedSharding(mesh, P("pod")), stages
+        ),
+    )
+    x = jnp.asarray(rng.standard_normal((M, mb, S, d)), jnp.float32)
+
+    def stage_fn(p, x):
+        for i in range(p["w"].shape[0]):
+            x = jnp.tanh(x @ p["w"][i] + p["b"][i])
+        return x
+
+    out = jax.jit(
+        lambda s, x: gpipe_apply(s, x, stage_fn, mesh=mesh)
+    )(stages, x)
+    expect = reference_apply(jax.device_get(stages), x, stage_fn)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+    print(f"[pipeline] 2-stage GPipe over pod axis: {M} microbatches, "
+          f"bubble={(2 - 1) / (M + 2 - 1):.0%}, output matches sequential "
+          f"reference exactly — OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,164 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (EXPERIMENTS §Roofline):
+
+    compute    = HLO_FLOPs      / (chips × 197 TFLOP/s bf16)
+    memory     = HLO_bytes      / (chips × 819 GB/s HBM)
+    collective = collective_B   / (chips × 50 GB/s/link ICI)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the optimized HLO and sum the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, weighting all-reduce ×2 (ring send+recv)
+— the standard per-device wire-traffic model.  On this CPU container the
+SPMD partitioner runs exactly as it would for TPU, so the collective
+schedule is the real one; only the backend codegen differs.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+#: wire-bytes weight per collective kind (ring model, per device)
+_WEIGHT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-kind result-shape bytes of every collective op in the HLO."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        rhs = rhs.strip()
+        for kind in _COLLECTIVES:
+            # match the op name at the start of the RHS expression
+            # (after the result shape annotation)
+            m = re.match(r"^(?:\([^)]*\)|\S+)\s+(%?[\w-]+)", rhs)
+            opname = None
+            if m:
+                opname = m.group(1).lstrip("%")
+            if opname is None:
+                continue
+            base = opname.split(".")[0]
+            if base == kind or base == kind + "-start":
+                # result shape(s) live between '=' and the op name
+                shape_part = rhs[: rhs.find(opname)]
+                out[kind] += _shape_bytes(shape_part)
+                counts[kind] += 1
+                break
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float  # weighted wire bytes (whole program, per device)
+    coll_detail: Dict[str, float] = field(default_factory=dict)
+    model_flops: float = 0.0  # 6·N·D (dense) / 6·N_active·D (MoE)
+    bytes_per_device: float = 0.0  # peak memory (memory_analysis)
+
+    @property
+    def t_compute(self) -> float:
+        # hlo_flops is PER-DEVICE (XLA cost analysis of the SPMD program),
+        # so the roofline divides by one chip's peak, not the fleet's —
+        # equivalent to global_FLOPs / (chips × peak).
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """max-term / sum-of-terms — how close the dominant term is to
+        being the whole step (1.0 = perfectly balanced on one roof)."""
+        t = [self.t_compute, self.t_memory, self.t_collective]
+        s = max(sum(t), 1e-30)
+        return max(t) / s
+
+    def as_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes, "coll_detail": self.coll_detail,
+            "model_flops": self.model_flops,
+            "bytes_per_device": self.bytes_per_device,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops_for(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """6·N·D with N = (active) params, D = tokens processed this step.
+
+    train: fwd+bwd = 6·N·D.  prefill: 2·N·D.  decode: 2·N·B (one token)."""
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n * seq * batch
+    if shape_kind == "prefill":
+        return 2.0 * n * seq * batch
+    return 2.0 * n * batch  # decode: one new token per sequence

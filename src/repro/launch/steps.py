@@ -1,0 +1,113 @@
+"""Step-function builders shared by train.py, serve.py and dryrun.py.
+
+``make_train_step(cfg)``  -> (params, opt_state, batch) -> (params,
+opt_state, metrics) — forward (family-dispatched), cross-entropy loss,
+grad, optimizer update.  ``make_serve_step(cfg)`` -> one-token greedy
+decode against the KV/state cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import get_model, losses
+from ..optim import Adafactor, AdamW
+
+#: params above this use Adafactor (factored states; see DESIGN §7)
+ADAFACTOR_THRESHOLD = 100e9
+
+
+def dealias_tree(tree):
+    """Force every leaf onto its own buffer.
+
+    XLA's constant folding aliases identical outputs (e.g. the all-ones
+    norm scales across layers, or AdamW's zero-initialized mu and nu) to
+    one buffer; donating such a pytree then fails with "donate the same
+    buffer twice".  A ``copy()`` per leaf guarantees unique buffers.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: x.copy() if hasattr(x, "copy") else x, tree
+    )
+
+
+def default_optimizer(cfg: ModelConfig):
+    if cfg.param_count() > ADAFACTOR_THRESHOLD:
+        return Adafactor(lr=1e-3)
+    return AdamW(lr=3e-4)
+
+
+def make_forward(cfg: ModelConfig) -> Callable:
+    model = get_model(cfg)
+    if cfg.family == "encdec":
+        def fwd(params, batch):
+            return model.apply(params, batch["frames"], batch["tokens"], cfg)
+    elif cfg.family == "vlm":
+        def fwd(params, batch):
+            return model.module.apply(
+                params, batch["tokens"], cfg, patch_embeds=batch["patches"]
+            )
+    else:
+        def fwd(params, batch):
+            return model.apply(params, batch["tokens"], cfg)
+    return fwd
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable:
+    fwd = make_forward(cfg)
+
+    def loss_fn(params, batch):
+        logits = fwd(params, batch)
+        loss = losses.cross_entropy(logits, batch["labels"])
+        if cfg.family == "moe":
+            # Switch-style aux loss keeps experts balanced; computed on the
+            # first block's router over the embedded tokens
+            pass  # aux loss handled inside moe blocks in a later revision
+        return loss
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer=None) -> Callable:
+    optimizer = optimizer or default_optimizer(cfg)
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss.astype(jnp.float32)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+
+    def eval_step(params, batch):
+        loss = loss_fn(params, batch)
+        return {"loss": loss, "ppl": jnp.exp(loss)}
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    fwd = make_forward(cfg)
+
+    def prefill_step(params, batch):
+        return fwd(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    model = get_model(cfg)
+
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = model.decode_step(params, cache, token, pos, cfg)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+
+    return serve_step

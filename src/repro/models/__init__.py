@@ -1,0 +1,74 @@
+"""Model zoo: one module per architecture family, uniform API.
+
+``get_model(cfg)`` returns a :class:`ModelAPI` with
+
+* ``init(key, cfg)``                           params pytree
+* ``apply(params, *inputs, cfg)``              full-sequence logits
+* ``init_cache(...)``                          decode state (None if N/A)
+* ``decode_step(params, cache, tok, pos, cfg)`` one-token serve step
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+from ..configs.base import ModelConfig
+from . import (
+    attention,
+    encdec,
+    layers,
+    losses,
+    moe,
+    rglru,
+    transformer,
+    vlm,
+    xlstm,
+)
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    family: str
+    init: Callable
+    apply: Callable
+    decode_step: Optional[Callable]
+    init_cache: Optional[Callable]
+    module: Any
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family in ("dense", "moe"):
+        m = transformer
+    elif cfg.family == "hybrid":
+        m = rglru
+    elif cfg.family == "ssm":
+        m = xlstm
+    elif cfg.family == "encdec":
+        m = encdec
+    elif cfg.family == "vlm":
+        m = vlm
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return ModelAPI(
+        family=cfg.family,
+        init=m.init,
+        apply=m.apply,
+        decode_step=getattr(m, "decode_step", None),
+        init_cache=getattr(m, "init_cache", None),
+        module=m,
+    )
+
+
+__all__ = [
+    "ModelAPI",
+    "get_model",
+    "attention",
+    "encdec",
+    "layers",
+    "losses",
+    "moe",
+    "rglru",
+    "transformer",
+    "vlm",
+    "xlstm",
+]

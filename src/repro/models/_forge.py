@@ -1,0 +1,68 @@
+"""Forge-pipeline integration glue shared by every model family.
+
+``forge_body(raw_fn, key, example_args)`` captures the block body through
+the full four-phase compiler ONCE per (config, shape) and returns the
+executor's traceable callable; families call it when ``cfg.fuse ==
+'forge'``.  The compile happens lazily inside the enclosing trace (the
+pipeline's passes are trace-safe; see passes/fold.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_CACHE: Dict[str, Callable] = {}
+
+
+def _specs_of(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(tuple(jnp.shape(a)),
+                                       jnp.result_type(a)), tree
+    )
+
+
+def _shape_key(tree) -> str:
+    shapes = jax.tree_util.tree_map(
+        lambda a: (tuple(jnp.shape(a)), str(jnp.result_type(a))), tree
+    )
+    # captured bodies embed the active activation-sharding policy's
+    # constraint ops — cache per policy flavour
+    from ..distrib import actsharding
+
+    pol = actsharding.current()
+    pol_key = (f"tp{pol.tp_axis}/sp{pol.sequence_parallel}"
+               if pol is not None else "nopolicy")
+    return f"{shapes}|{pol_key}"
+
+
+def forge_body(
+    raw_fn: Callable,
+    key_prefix: str,
+    example_args: Tuple[Any, ...],
+    *,
+    enabled: bool = True,
+    remat: bool = False,
+) -> Callable:
+    """Return the (optionally Forge-compiled, optionally remat'd) body."""
+    body = raw_fn
+    if enabled:
+        key = f"{key_prefix}/{_shape_key(example_args)}"
+        hit = _CACHE.get(key)
+        if hit is None:
+            from ..core import ForgeCompiler, PipelineConfig
+
+            mod = ForgeCompiler(PipelineConfig()).compile(
+                raw_fn, *_specs_of(example_args)
+            )
+            hit = mod.as_fn()
+            _CACHE[key] = hit
+        body = hit
+    if remat:
+        body = jax.checkpoint(body)
+    return body
+
+
+def clear_cache() -> None:
+    _CACHE.clear()

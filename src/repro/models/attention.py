@@ -1,0 +1,180 @@
+"""Multi-head / grouped-query attention, written unfused.
+
+The decomposed chain below (projections → RoPE → GQA broadcast-expand →
+dot → scale → iota-where mask → softmax → dot → out-proj) is exactly what
+the Forge attention-fusion pass matches; after Phase 2 the whole middle
+collapses into one ``forge.sdpa`` dispatch.
+
+Supports: full causal self-attention (train/prefill), KV-cache single-
+token decode, bidirectional encoder attention, cross-attention, local
+(banded) attention, and M-RoPE position streams.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..distrib.actsharding import constrain
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+def attn_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: Optional[int] = None,
+    *,
+    qkv_bias: bool = False,
+    dtype=jnp.bfloat16,
+) -> Params:
+    hd = head_dim or d_model // n_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d_model, n_heads * hd, dtype),
+        "wk": L.dense_init(ks[1], d_model, n_kv_heads * hd, dtype),
+        "wv": L.dense_init(ks[2], d_model, n_kv_heads * hd, dtype),
+        "wo": L.dense_init(ks[3], n_heads * hd, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * hd,), dtype)
+    return p
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    B, S, _ = x.shape
+    return x.reshape(B, S, n_heads, -1).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    B, H, S, D = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * D)
+
+
+def _expand_kv(k: jax.Array, groups: int) -> jax.Array:
+    """The canonical GQA broadcast-expansion (unwrapped by fusion)."""
+    if groups == 1:
+        return k
+    B, KVH, S, D = k.shape
+    return jnp.broadcast_to(
+        k[:, :, None], (B, KVH, groups, S, D)
+    ).reshape(B, KVH * groups, S, D)
+
+
+def sdpa_unfused(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    extra_mask: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Decomposed attention: the fusion pass's input pattern."""
+    B, H, Sq, D = q.shape
+    KVH, Sk = k.shape[1], k.shape[2]
+    groups = H // KVH
+    k = _expand_kv(k, groups)
+    v = _expand_kv(v, groups)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * (scale if scale is not None else 1.0 / math.sqrt(D))
+    if window is not None:
+        s = L.local_causal_where(s, Sq, Sk, window)
+    elif causal:
+        s = L.causal_where(s, Sq, Sk)
+    if extra_mask is not None:
+        s = s + extra_mask.astype(s.dtype)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.astype(v.dtype)
+
+
+def attention(
+    x: jax.Array,
+    p: Params,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    rope_cos: Optional[jax.Array] = None,
+    rope_sin: Optional[jax.Array] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    extra_mask: Optional[jax.Array] = None,
+    kv: Optional[jax.Array] = None,  # cross-attention source
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_pos: Optional[jax.Array] = None,
+    cache_valid_len: Optional[jax.Array] = None,  # rotating-buffer masks
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full attention sub-layer.  Returns (out, updated_cache)."""
+    src = kv if kv is not None else x
+    q = L.linear(x, p["wq"], p.get("bq"))
+    k = L.linear(src, p["wk"], p.get("bk"))
+    v = L.linear(src, p["wv"], p.get("bv"))
+    # Megatron-style activation layout pins (see distrib/actsharding.py):
+    # without these GSPMD splits head_dim when KVH % tp != 0 and
+    # all-reduces the score matrix (measured: ~10 GiB/dev/layer).
+    # Decode keeps GSPMD-inferred layouts: pinning heads conflicts with
+    # the sequence-sharded KV cache and re-shards it every step
+    # (measured REFUTATION, EXPERIMENTS §Perf iter 1).
+    q = _split_heads(q, n_heads)
+    k = _split_heads(k, n_kv_heads)
+    v = _split_heads(v, n_kv_heads)
+    if cache is None:
+        q = constrain(q, "heads")
+        k = constrain(k, "kv")
+        v = constrain(v, "kv")
+
+    if rope_cos is not None:
+        q = L.apply_rope(q, rope_cos, rope_sin)
+        if kv is None:  # self-attention: keys rotate too
+            k = L.apply_rope(k, rope_cos, rope_sin)
+
+    new_cache = None
+    if cache is not None:
+        # single-token (or chunk) decode: write at cache_pos, attend to all
+        k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=2)
+        v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=2)
+        new_cache = {"k": k_cache, "v": v_cache}
+        max_len = k_cache.shape[2]
+        if cache_valid_len is not None:
+            # rotating buffer: slots < valid_len hold live entries; softmax
+            # attention is permutation-invariant over keys (RoPE applied
+            # pre-cache), so slot order does not matter.
+            idx = lax.broadcasted_iota(jnp.int32, (1, 1, 1, max_len), 3)
+            mask = jnp.where(idx < cache_valid_len, 0.0,
+                             float(np.finfo(np.float32).min))
+        elif window is not None:
+            idx = lax.broadcasted_iota(jnp.int32, (1, 1, 1, max_len), 3)
+            keep = (idx <= cache_pos) & (idx > cache_pos - window)
+            mask = jnp.where(keep, 0.0, float(np.finfo(np.float32).min))
+        else:
+            mask = L.decode_length_mask(cache_pos, max_len)
+        out = sdpa_unfused(
+            q, k_cache, v_cache, causal=False, extra_mask=mask
+        )
+    else:
+        out = sdpa_unfused(
+            q, k, v, causal=causal, window=window, extra_mask=extra_mask
+        )
+    out = L.linear(_merge_heads(out), p["wo"])
+    return constrain(out, "tokens"), new_cache
+
+
+def make_cache(
+    batch: int, n_kv_heads: int, max_len: int, head_dim: int, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    shape = (batch, n_kv_heads, max_len, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

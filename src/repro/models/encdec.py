@@ -1,0 +1,241 @@
+"""Encoder–decoder transformer backbone (SeamlessM4T-large-v2 layout:
+24 encoder + 24 decoder layers, d_model 1024, 16 heads, GELU d_ff 8192,
+vocab 256 206, tied decoder embedding / LM head).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, T_frames, d_model); this module is the
+transformer backbone only.
+
+Decode: the decoder has causal self-attention (KV cache) + cross-attention
+whose K/V are precomputed once from the encoder output (``encode`` +
+``init_cache``) — so decode shapes RUN for this arch.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from . import attention as A
+from . import layers as L
+from ._forge import forge_body
+
+Params = Dict[str, Any]
+
+
+def _enc_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": A.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim_, dtype=dt),
+        "norm2": L.norm_init(cfg.d_model, cfg.norm),
+        "ffn": L.ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn,
+                          bias=cfg.ffn_bias, dtype=dt),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm1": L.norm_init(cfg.d_model, cfg.norm),
+        "self_attn": A.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim_, dtype=dt),
+        "norm_x": L.norm_init(cfg.d_model, cfg.norm),
+        "cross_attn": A.attn_init(ks[1], cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.head_dim_, dtype=dt),
+        "norm2": L.norm_init(cfg.d_model, cfg.norm),
+        "ffn": L.ffn_init(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn,
+                          bias=cfg.ffn_bias, dtype=dt),
+    }
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    enc = jax.vmap(lambda k: _enc_block_init(k, cfg))(
+        jax.random.split(ks[0], n_enc)
+    )
+    dec = jax.vmap(lambda k: _dec_block_init(k, cfg))(
+        jax.random.split(ks[1], n_dec)
+    )
+    emb = L.embed_init(ks[2], cfg.vocab, cfg.d_model, dt)
+    params = {
+        "enc_blocks": enc,
+        "enc_norm": L.norm_init(cfg.d_model, cfg.norm),
+        "dec_blocks": dec,
+        "dec_norm": L.norm_init(cfg.d_model, cfg.norm),
+        "embed": emb,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[3], cfg.d_model, cfg.vocab, dt)
+    return params
+
+
+def _enc_block(p, x, cos, sin, cfg: ModelConfig):
+    h = L.apply_norm(x, p["norm1"], cfg.norm)
+    a, _ = A.attention(h, p["attn"], n_heads=cfg.n_heads,
+                       n_kv_heads=cfg.n_kv_heads, rope_cos=cos, rope_sin=sin,
+                       causal=False)
+    x = x + a
+    h = L.apply_norm(x, p["norm2"], cfg.norm)
+    return x + L.apply_ffn(h, p["ffn"], cfg.ffn)
+
+
+def _dec_block(p, x, enc_out, cos, sin, cfg: ModelConfig):
+    h = L.apply_norm(x, p["norm1"], cfg.norm)
+    a, _ = A.attention(h, p["self_attn"], n_heads=cfg.n_heads,
+                       n_kv_heads=cfg.n_kv_heads, rope_cos=cos, rope_sin=sin,
+                       causal=True)
+    x = x + a
+    h = L.apply_norm(x, p["norm_x"], cfg.norm)
+    c, _ = A.attention(h, p["cross_attn"], n_heads=cfg.n_heads,
+                       n_kv_heads=cfg.n_kv_heads, causal=False, kv=enc_out)
+    x = x + c
+    h = L.apply_norm(x, p["norm2"], cfg.norm)
+    return x + L.apply_ffn(h, p["ffn"], cfg.ffn)
+
+
+def encode(params: Params, frame_embeds: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = frame_embeds
+    B, T, _ = x.shape
+    cos, sin = L.rope_tables(jnp.arange(T, dtype=jnp.int32), cfg.head_dim_,
+                             cfg.rope_theta)
+
+    one = jax.tree_util.tree_map(lambda a: a[0], params["enc_blocks"])
+    body = forge_body(
+        lambda p, x_, c, s: _enc_block(p, x_, c, s, cfg),
+        f"{cfg.name}/enc", (one, x, cos, sin),
+        enabled=(cfg.fuse == "forge"), remat=cfg.remat,
+    )
+
+    if cfg.scan_layers:
+        def step(carry, p_layer):
+            return body(p_layer, carry, cos, sin), None
+
+        x, _ = lax.scan(step, x, params["enc_blocks"])
+    else:
+        n_enc = cfg.n_enc_layers or cfg.n_layers
+        for i in range(n_enc):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["enc_blocks"])
+            x = body(p_i, x, cos, sin)
+    return L.apply_norm(x, params["enc_norm"], cfg.norm)
+
+
+def apply(
+    params: Params,
+    frame_embeds: jax.Array,
+    dec_tokens: jax.Array,
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Full enc-dec forward: audio-frame embeds + target tokens → logits."""
+    enc_out = encode(params, frame_embeds, cfg)
+    x = L.embed(dec_tokens, params["embed"])
+    B, S, _ = x.shape
+    cos, sin = L.rope_tables(jnp.arange(S, dtype=jnp.int32), cfg.head_dim_,
+                             cfg.rope_theta)
+
+    one = jax.tree_util.tree_map(lambda a: a[0], params["dec_blocks"])
+    body = forge_body(
+        lambda p, x_, e, c, s: _dec_block(p, x_, e, c, s, cfg),
+        f"{cfg.name}/dec", (one, x, enc_out, cos, sin),
+        enabled=(cfg.fuse == "forge"), remat=cfg.remat,
+    )
+
+    if cfg.scan_layers:
+        def step(carry, p_layer):
+            return body(p_layer, carry, enc_out, cos, sin), None
+
+        x, _ = lax.scan(step, x, params["dec_blocks"])
+    else:
+        n_dec = cfg.n_dec_layers or cfg.n_layers
+        for i in range(n_dec):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["dec_blocks"])
+            x = body(p_i, x, enc_out, cos, sin)
+    x = L.apply_norm(x, params["dec_norm"], cfg.norm)
+    return L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
+
+
+# -- decode path -----------------------------------------------------------
+
+
+def init_cache(
+    params: Params,
+    frame_embeds: jax.Array,
+    cfg: ModelConfig,
+    max_len: int,
+) -> Dict[str, Any]:
+    """Run the encoder once; precompute per-layer cross K/V."""
+    enc_out = encode(params, frame_embeds, cfg)
+    B = enc_out.shape[0]
+    dt = jnp.dtype(cfg.dtype)
+
+    def cross_kv(p_layer):
+        k = L.linear(enc_out, p_layer["cross_attn"]["wk"])
+        v = L.linear(enc_out, p_layer["cross_attn"]["wv"])
+        B_, T, _ = k.shape
+        k = k.reshape(B_, T, cfg.n_kv_heads, -1).transpose(0, 2, 1, 3)
+        v = v.reshape(B_, T, cfg.n_kv_heads, -1).transpose(0, 2, 1, 3)
+        return k, v
+
+    cross_k, cross_v = jax.vmap(cross_kv)(params["dec_blocks"])
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+    shape = (n_dec, B, cfg.n_kv_heads, max_len, cfg.head_dim_)
+    return {
+        "self_k": jnp.zeros(shape, dt),
+        "self_v": jnp.zeros(shape, dt),
+        "cross_k": cross_k,
+        "cross_v": cross_v,
+    }
+
+
+def decode_step(
+    params: Params,
+    cache: Dict[str, Any],
+    token: jax.Array,
+    pos: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = L.embed(token, params["embed"])
+    positions = pos[None] if pos.ndim == 0 else pos
+    cos, sin = L.rope_tables(positions, cfg.head_dim_, cfg.rope_theta)
+
+    def step(carry, xs):
+        p, sk, sv, ck, cv = xs
+        h = L.apply_norm(carry, p["norm1"], cfg.norm)
+        a, new_cache = A.attention(
+            h, p["self_attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            rope_cos=cos, rope_sin=sin, cache={"k": sk, "v": sv},
+            cache_pos=pos,
+        )
+        x2 = carry + a
+        h = L.apply_norm(x2, p["norm_x"], cfg.norm)
+        # cross-attention against the precomputed encoder K/V
+        q = L.linear(h, p["cross_attn"]["wq"])
+        B, S, _ = q.shape
+        q = q.reshape(B, S, cfg.n_heads, -1).transpose(0, 2, 1, 3)
+        c = A.sdpa_unfused(q, ck, cv, causal=False)
+        c = c.transpose(0, 2, 1, 3).reshape(B, S, -1)
+        x2 = x2 + L.linear(c, p["cross_attn"]["wo"])
+        h = L.apply_norm(x2, p["norm2"], cfg.norm)
+        x2 = x2 + L.apply_ffn(h, p["ffn"], cfg.ffn)
+        return x2, (new_cache["k"], new_cache["v"])
+
+    x, (new_k, new_v) = lax.scan(
+        step, x,
+        (params["dec_blocks"], cache["self_k"], cache["self_v"],
+         cache["cross_k"], cache["cross_v"]),
+    )
+    x = L.apply_norm(x, params["dec_norm"], cfg.norm)
+    logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
+    new_cache = dict(cache)
+    new_cache["self_k"] = new_k
+    new_cache["self_v"] = new_v
+    return logits, new_cache

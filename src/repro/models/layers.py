@@ -1,0 +1,240 @@
+"""Model-zoo building blocks, written UNFUSED on purpose.
+
+Every layer here is expressed as explicit ``jnp`` primitives (no
+``jax.nn.dot_product_attention``, no pre-fused kernels) so that Phase-2 of
+the Forge pipeline finds the decomposed chains the paper's passes match:
+attention appears as dot→scale→where→softmax→dot, FFNs as dot→add→act,
+RoPE tables as foldable iota arithmetic.
+
+Conventions:
+
+* params are plain nested dicts of ``jnp`` arrays,
+* activations default to bf16 with fp32 accumulation at matmul boundaries
+  (``preferred_element_type``), norms computed in fp32,
+* the causal mask uses the canonical ``row ≥ col`` iota pattern the
+  attention-fusion matcher recognizes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms (computed in fp32, cast back)
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(
+    x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x: jax.Array, p: Params, kind: str = "rmsnorm") -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# linear / embedding
+# --------------------------------------------------------------------------
+
+
+def linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum(
+        "...k,kn->...n", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_head(x: jax.Array, table_or_w: jax.Array, *, transpose: bool) -> jax.Array:
+    """Project to vocab.  ``transpose=True`` -> tied embedding (vocab, d)."""
+    from ..distrib.actsharding import constrain
+
+    w = table_or_w.T if transpose else table_or_w
+    logits = jnp.einsum(
+        "...d,dv->...v", x, w, preferred_element_type=jnp.float32
+    )
+    # keep logits vocab-sharded through the loss/backward: without the pin
+    # the head backward materializes UNSHARDED fp32 logits per device
+    # (40 GiB/step on kimi-k2 — EXPERIMENTS §Perf)
+    return constrain(logits, "logits")
+
+
+# --------------------------------------------------------------------------
+# RoPE — tables are pure iota arithmetic so constant folding pre-computes
+# them (the paper's "RoPE frequency pre-computation" folding)
+# --------------------------------------------------------------------------
+
+
+def rope_tables(
+    positions: jax.Array, head_dim: int, theta: float = 10000.0
+) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for positions: (..., S) -> (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, H, S, D); cos/sin: (S, D/2) or (B, S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> (1, 1, S, half)
+        cos, sin = cos[None, None], sin[None, None]
+    elif cos.ndim == 3:  # (B, S, half) -> (B, 1, S, half)
+        cos, sin = cos[:, None], sin[:, None]
+    o1 = x1 * cos.astype(x.dtype) - x2 * sin.astype(x.dtype)
+    o2 = x2 * cos.astype(x.dtype) + x1 * sin.astype(x.dtype)
+    return jnp.concatenate([o1, o2], axis=-1)
+
+
+def mrope_tables(
+    positions: jax.Array,  # (3, B, S): temporal / height / width position ids
+    head_dim: int,
+    sections: Tuple[int, int, int],
+    theta: float = 1_000_000.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL multimodal RoPE: the head_dim/2 frequency slots are split
+    into (t, h, w) sections, each rotated by its own position stream."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang_all = positions.astype(jnp.float32)[..., None] * freqs  # (3, B, S, half)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[i, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# --------------------------------------------------------------------------
+# masks — canonical patterns the fusion matcher understands
+# --------------------------------------------------------------------------
+
+
+def causal_where(s: jax.Array, sq: int, sk: int) -> jax.Array:
+    """Apply the canonical causal mask to scores ``s`` (..., sq, sk)."""
+    row = lax.broadcasted_iota(jnp.int32, (sq, sk), 0) + (sk - sq)
+    col = lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+    neg = jnp.asarray(jnp.finfo(s.dtype).min, s.dtype)
+    return jnp.where(row >= col, s, neg)
+
+
+def local_causal_where(s: jax.Array, sq: int, sk: int, window: int) -> jax.Array:
+    """Banded causal mask (RecurrentGemma local attention)."""
+    row = lax.broadcasted_iota(jnp.int32, (sq, sk), 0) + (sk - sq)
+    col = lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+    keep = (row >= col) & (row - col < window)
+    neg = jnp.asarray(jnp.finfo(s.dtype).min, s.dtype)
+    return jnp.where(keep, s, neg)
+
+
+def decode_length_mask(pos: jax.Array, max_len: int, dtype=jnp.float32) -> jax.Array:
+    """Additive mask (1, 1, 1, max_len): 0 for idx <= pos else -inf."""
+    idx = lax.broadcasted_iota(jnp.int32, (1, 1, 1, max_len), 3)
+    neg = jnp.asarray(jnp.finfo(dtype).min, dtype)
+    return jnp.where(idx <= pos, jnp.asarray(0.0, dtype), neg)
+
+
+# --------------------------------------------------------------------------
+# FFN variants (unfused: the operator-fusion pass matches these)
+# --------------------------------------------------------------------------
+
+
+def swiglu_ffn(x: jax.Array, p: Params) -> jax.Array:
+    g = linear(x, p["w_gate"])
+    u = linear(x, p["w_up"])
+    h = jax.nn.silu(g) * u
+    return linear(h, p["w_down"])
+
+
+def geglu_ffn(x: jax.Array, p: Params) -> jax.Array:
+    g = linear(x, p["w_gate"])
+    u = linear(x, p["w_up"])
+    h = jax.nn.gelu(g) * u
+    return linear(h, p["w_down"])
+
+
+def gelu_ffn(x: jax.Array, p: Params) -> jax.Array:
+    h = jax.nn.gelu(linear(x, p["w_fc"], p.get("b_fc")))
+    return linear(h, p["w_out"], p.get("b_out"))
+
+
+def ffn_init(
+    key, d_model: int, d_ff: int, kind: str = "swiglu", bias: bool = False,
+    dtype=jnp.bfloat16,
+) -> Params:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    p = {
+        "w_fc": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_out": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if bias:
+        p["b_fc"] = jnp.zeros((d_ff,), dtype)
+        p["b_out"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def apply_ffn(x: jax.Array, p: Params, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return swiglu_ffn(x, p)
+    if kind == "geglu":
+        return geglu_ffn(x, p)
+    return gelu_ffn(x, p)

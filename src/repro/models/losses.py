@@ -1,0 +1,29 @@
+"""Training losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Mean next-token cross-entropy in fp32.  logits: (..., V).
+
+    Sharded-vocab-safe formulation: ``lse - Σ logits·onehot`` keeps the
+    backward purely elementwise (∂ = softmax − onehot).  The naive
+    ``take_along_axis(log_softmax)`` version backwards into a scatter-add
+    that ALL-GATHERS the full logits when V is sharded (measured:
+    40 GiB/device/step on kimi-k2 — EXPERIMENTS §Perf).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.sum(logits * onehot, axis=-1)
+    ll = label_logit - lse
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def perplexity(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.exp(cross_entropy(logits, labels))

@@ -1,0 +1,267 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local
+attention blocks in a (rec, rec, attn) pattern.
+
+The recurrent block (Griffin §2):
+
+    x̃ = conv1d_w4(Wx·x);  gates i, r = σ(Wi·x), σ(Wr·x)
+    a_t = exp(-c · softplus(Λ) · r_t)           (log-space decay)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x̃_t)
+    out = Wo·(gelu(Wy·x) ⊙ h)
+
+The linear recurrence dispatches through ``forge_rg_lru`` — an opaque
+pre-fused unit (paper §9.5 custom-operator registration) backed by the
+Pallas blocked-scan kernel; Phase-1 capture keeps it as one ``accel`` node.
+
+Local attention blocks use a banded causal mask (window 2048); the
+attention-fusion pass fuses them with the predicate kept as a fused-node
+operand.  The heterogeneous layer pattern means layers are applied in a
+Python loop (no scan), documented in DESIGN.md.
+
+``long_500k`` applicability: decode state is O(1) (LRU state + bounded
+window cache), so this arch RUNS the 500k-decode shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..configs.base import ModelConfig
+from ..kernels.ops import forge_op, rg_lru as rg_lru_dispatch
+from . import attention as A
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+# one opaque fused dispatch unit for the whole recurrence (kept by capture)
+@forge_op("rg_lru")
+def _rg_lru_fused(x, a, h0):
+    return rg_lru_dispatch(x, a, h0)
+
+
+def rec_block_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    lru = cfg.lru_dim or d
+    ks = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm": L.norm_init(d, cfg.norm),
+        "wx": L.dense_init(ks[0], d, lru, dt),
+        "wy": L.dense_init(ks[1], d, lru, dt),
+        "wi": L.dense_init(ks[2], d, lru, dt),
+        "wr": L.dense_init(ks[3], d, lru, dt),
+        "wo": L.dense_init(ks[4], lru, d, dt),
+        "conv": (jax.random.normal(ks[5], (cfg.conv_width, lru)) * 0.1
+                 ).astype(dt),
+        "lam": jnp.linspace(0.9, 0.999, lru).astype(jnp.float32),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array,
+                   state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over time.  x: (B, T, D); w: (W, D)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state  # (B, W-1, D): trailing inputs from the previous step
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    return out
+
+
+def _decay(p: Params, r: jax.Array, c: float = 8.0) -> jax.Array:
+    log_a = -c * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    return jnp.exp(log_a)
+
+
+def rec_block_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = L.apply_norm(x, p["norm"], cfg.norm)
+    xt = L.linear(h, p["wx"])
+    xt = _causal_conv1d(xt, p["conv"])
+    i = jax.nn.sigmoid(L.linear(h, p["wi"]))
+    r = jax.nn.sigmoid(L.linear(h, p["wr"]))
+    a = _decay(p, r)
+    gated = (jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6)) * (i * xt).astype(jnp.float32))
+    h0 = jnp.zeros((x.shape[0], xt.shape[-1]), jnp.float32)
+    hseq = _rg_lru_fused(gated, a, h0)
+    y = jax.nn.gelu(L.linear(h, p["wy"])).astype(jnp.float32) * hseq
+    return x + L.linear(y.astype(x.dtype), p["wo"])
+
+
+def rec_block_decode(
+    p: Params, x: jax.Array, state: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token recurrent step with O(1) state {h, conv}."""
+    h = L.apply_norm(x, p["norm"], cfg.norm)  # (B, 1, d)
+    xt = L.linear(h, p["wx"])  # (B, 1, lru)
+    conv_state = state["conv"]  # (B, W-1, lru)
+    xt_conv = _causal_conv1d(xt, p["conv"], state=conv_state)
+    new_conv = jnp.concatenate([conv_state, xt], axis=1)[:, 1:]
+    i = jax.nn.sigmoid(L.linear(h, p["wi"]))
+    r = jax.nn.sigmoid(L.linear(h, p["wr"]))
+    a = _decay(p, r)[:, 0]  # (B, lru)
+    gated = (jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6))
+             * (i * xt_conv).astype(jnp.float32)[:, 0])
+    h_new = a * state["h"] + gated  # (B, lru)
+    y = jax.nn.gelu(L.linear(h, p["wy"])).astype(jnp.float32) * h_new[:, None]
+    out = x + L.linear(y.astype(x.dtype), p["wo"])
+    return out, {"h": h_new, "conv": new_conv}
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+
+
+def _pattern(cfg: ModelConfig) -> Tuple[str, ...]:
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    return tuple(pat[i % len(pat)] for i in range(cfg.n_layers))
+
+
+def attn_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": A.attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim_, dtype=dt),
+        "norm2": L.norm_init(cfg.d_model, cfg.norm),
+        "ffn": L.ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn, dtype=dt),
+    }
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    dt = jnp.dtype(cfg.dtype)
+    blocks = []
+    for i, kind in enumerate(_pattern(cfg)):
+        if kind == "attn":
+            blocks.append(attn_block_init(ks[i], cfg))
+        else:
+            p = rec_block_init(ks[i], cfg)
+            if cfg.d_ff:
+                p["ffn"] = L.ffn_init(
+                    jax.random.fold_in(ks[i], 1), cfg.d_model, cfg.d_ff,
+                    cfg.ffn, dtype=dt,
+                )
+                p["norm2"] = L.norm_init(cfg.d_model, cfg.norm)
+            blocks.append(p)
+    emb = L.embed_init(ks[-2], cfg.vocab, cfg.d_model, dt)
+    params: Params = {
+        "embed": emb,
+        "blocks": blocks,
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[-1], cfg.d_model, cfg.vocab, dt)
+    return params
+
+
+def _attn_block_apply(p, x, cos, sin, cfg: ModelConfig):
+    h = L.apply_norm(x, p["norm1"], cfg.norm)
+    a_out, _ = A.attention(
+        h, p["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        rope_cos=cos, rope_sin=sin, causal=True, window=cfg.window,
+    )
+    x = x + a_out
+    h = L.apply_norm(x, p["norm2"], cfg.norm)
+    return x + L.apply_ffn(h, p["ffn"], cfg.ffn)
+
+
+def _rec_full_apply(p, x, cfg: ModelConfig):
+    x = rec_block_apply(p, x, cfg)
+    if cfg.d_ff:
+        h = L.apply_norm(x, p["norm2"], cfg.norm)
+        x = x + L.apply_ffn(h, p["ffn"], cfg.ffn)
+    return x
+
+
+def apply(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    from ._forge import forge_body
+
+    x = L.embed(tokens, params["embed"])
+    B, S, _ = x.shape
+    cos, sin = L.rope_tables(jnp.arange(S, dtype=jnp.int32), cfg.head_dim_,
+                             cfg.rope_theta)
+    bodies = {}
+    for p, kind in zip(params["blocks"], _pattern(cfg)):
+        # one Forge compile per block kind (shapes identical across layers)
+        if kind not in bodies:
+            if kind == "attn":
+                bodies[kind] = forge_body(
+                    lambda q, x_, c, s: _attn_block_apply(q, x_, c, s, cfg),
+                    f"{cfg.name}/attn", (p, x, cos, sin),
+                    enabled=(cfg.fuse == "forge"), remat=cfg.remat,
+                )
+            else:
+                bodies[kind] = forge_body(
+                    lambda q, x_: _rec_full_apply(q, x_, cfg),
+                    f"{cfg.name}/rec", (p, x),
+                    enabled=(cfg.fuse == "forge"), remat=cfg.remat,
+                )
+        x = bodies[kind](p, x, cos, sin) if kind == "attn" else bodies[kind](p, x)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    return L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Per-layer state: KV (bounded by window) for attn, {h, conv} for rec."""
+    dt = jnp.dtype(cfg.dtype)
+    lru = cfg.lru_dim or cfg.d_model
+    window = min(cfg.window or max_len, max_len)
+    caches = []
+    for kind in _pattern(cfg):
+        if kind == "attn":
+            caches.append(A.make_cache(batch, cfg.n_kv_heads, window,
+                                       cfg.head_dim_, dt))
+        else:
+            caches.append({
+                "h": jnp.zeros((batch, lru), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, lru), dt),
+            })
+    return {"layers": caches}
+
+
+def decode_step(
+    params: Params,
+    cache: Dict[str, Any],
+    token: jax.Array,
+    pos: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = L.embed(token, params["embed"])
+    positions = pos[None] if pos.ndim == 0 else pos
+    cos, sin = L.rope_tables(positions, cfg.head_dim_, cfg.rope_theta)
+    window = cfg.window or cache["layers"][0].get("k", jnp.zeros((1, 1, 1, 1))).shape[2]
+    new_layers = []
+    for p, kind, st in zip(params["blocks"], _pattern(cfg), cache["layers"]):
+        if kind == "attn":
+            h = L.apply_norm(x, p["norm1"], cfg.norm)
+            # rotating local window: write slot = pos % window
+            slot = jnp.mod(pos, window)
+            valid = jnp.minimum(pos + 1, window)
+            a_out, new_st = A.attention(
+                h, p["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                rope_cos=cos, rope_sin=sin, cache=st, cache_pos=slot,
+                cache_valid_len=valid,
+            )
+            x = x + a_out
+            h = L.apply_norm(x, p["norm2"], cfg.norm)
+            x = x + L.apply_ffn(h, p["ffn"], cfg.ffn)
+            new_layers.append(new_st)
+        else:
+            x, new_st = rec_block_decode(p, x, st, cfg)
+            if cfg.d_ff:
+                h = L.apply_norm(x, p["norm2"], cfg.norm)
+                x = x + L.apply_ffn(h, p["ffn"], cfg.ffn)
+            new_layers.append(new_st)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
+    return logits, {"layers": new_layers}

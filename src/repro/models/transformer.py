@@ -1,0 +1,276 @@
+"""Decoder-only transformer LM (dense + MoE + VLM backbones).
+
+The block body is written unfused; when ``cfg.fuse == 'forge'`` it is
+captured and optimized by the Forge pipeline once per (config, shape) and
+the resulting executor is scanned over the layer-stacked parameters —
+keeping the HLO small enough for 512-way GSPMD while the fusion happens
+inside the block exactly as the paper prescribes.
+
+Entry points:
+
+* ``init(key, cfg)``                         — parameter pytree
+* ``apply(params, tokens, cfg, ...)``        — full-sequence logits
+  (training forward / inference prefill)
+* ``init_cache(cfg, batch, max_len)``        — stacked KV cache
+* ``decode_step(params, cache, tok, pos, cfg)`` — one-token serve step
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..configs.base import ModelConfig
+from . import attention as A
+from . import layers as L
+from . import moe as MOE
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p: Params = {
+        "norm1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": A.attn_init(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+            qkv_bias=cfg.qkv_bias, dtype=dt,
+        ),
+        "norm2": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if cfg.family == "moe":
+        p["moe"] = MOE.moe_init(
+            ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts,
+            shared_experts=cfg.shared_experts, shared_d_ff=cfg.shared_d_ff,
+            dtype=dt,
+        )
+    else:
+        p["ffn"] = L.ffn_init(
+            ks[1], cfg.d_model, cfg.d_ff, cfg.ffn, bias=cfg.ffn_bias, dtype=dt
+        )
+    return p
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    emb = L.embed_init(ks[0], cfg.vocab, cfg.d_model, dt)
+    if cfg.scan_layers:
+        blocks = jax.vmap(lambda k: block_init(k, cfg))(
+            jax.random.split(ks[1], cfg.n_layers)
+        )
+    else:
+        blocks = [
+            block_init(k, cfg) for k in jax.random.split(ks[1], cfg.n_layers)
+        ]
+    params: Params = {
+        "embed": emb,
+        "blocks": blocks,
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        # tied configs store ONE copy; apply() reuses params["embed"]
+        # (donation-safe; Phase-1's id()-dedup covers user-tied pytrees)
+        params["lm_head"] = L.dense_init(ks[2], cfg.d_model, cfg.vocab, dt)
+    return params
+
+
+# --------------------------------------------------------------------------
+# block bodies (the Forge capture targets)
+# --------------------------------------------------------------------------
+
+
+def block_apply(
+    p: Params,
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    cfg: ModelConfig,
+) -> jax.Array:
+    h = L.apply_norm(x, p["norm1"], cfg.norm)
+    attn_out, _ = A.attention(
+        h, p["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        rope_cos=cos, rope_sin=sin, causal=True,
+    )
+    x = x + attn_out
+    h = L.apply_norm(x, p["norm2"], cfg.norm)
+    if cfg.family == "moe":
+        ffn_out = MOE.moe_ffn(
+            h, p["moe"], n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+    else:
+        ffn_out = L.apply_ffn(h, p["ffn"], cfg.ffn)
+    return x + ffn_out
+
+
+def block_decode(
+    p: Params,
+    x: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    h = L.apply_norm(x, p["norm1"], cfg.norm)
+    attn_out, new_cache = A.attention(
+        h, p["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        rope_cos=cos, rope_sin=sin,
+        cache={"k": k_cache, "v": v_cache}, cache_pos=pos,
+    )
+    x = x + attn_out
+    h = L.apply_norm(x, p["norm2"], cfg.norm)
+    if cfg.family == "moe":
+        ffn_out = MOE.moe_ffn(
+            h, p["moe"], n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+    else:
+        ffn_out = L.apply_ffn(h, p["ffn"], cfg.ffn)
+    return x + ffn_out, new_cache["k"], new_cache["v"]
+
+
+# --------------------------------------------------------------------------
+# Forge integration: compile the block body once per (cfg, shapes)
+# --------------------------------------------------------------------------
+
+from ._forge import forge_body  # noqa: E402  (shared across families)
+
+
+def _body_fn(cfg: ModelConfig, mode: str, example_args) -> Any:
+    base = block_apply if mode == "apply" else block_decode
+
+    def raw(*args):
+        return base(*args, cfg=cfg)
+
+    return forge_body(
+        raw, f"{cfg.name}/{mode}", example_args,
+        enabled=(cfg.fuse == "forge"), remat=cfg.remat,
+    )
+
+
+# --------------------------------------------------------------------------
+# forward paths
+# --------------------------------------------------------------------------
+
+
+def _positions_default(B: int, S: int) -> jax.Array:
+    return jnp.arange(S, dtype=jnp.int32)
+
+
+def _rope_for(cfg: ModelConfig, positions: jax.Array,
+              mrope_positions: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    if cfg.family == "vlm" and mrope_positions is not None:
+        return L.mrope_tables(
+            mrope_positions, cfg.head_dim_, cfg.mrope_sections, cfg.rope_theta
+        )
+    return L.rope_tables(positions, cfg.head_dim_, cfg.rope_theta)
+
+
+def apply(
+    params: Params,
+    tokens: Optional[jax.Array],
+    cfg: ModelConfig,
+    *,
+    embeds: Optional[jax.Array] = None,
+    mrope_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence forward: (B, S) tokens [or (B, S, D) embeds] → logits."""
+    if embeds is None:
+        x = L.embed(tokens, params["embed"])
+    else:
+        x = embeds
+    B, S, _ = x.shape
+    cos, sin = _rope_for(cfg, _positions_default(B, S), mrope_positions)
+
+    one_block = (
+        jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+        if cfg.scan_layers else params["blocks"][0]
+    )
+    body = _body_fn(cfg, "apply", (one_block, x, cos, sin))
+
+    if cfg.scan_layers:
+        def step(carry, p_layer):
+            return body(p_layer, carry, cos, sin), None
+
+        x, _ = lax.scan(step, x, params["blocks"])
+    else:
+        for p_layer in params["blocks"]:
+            x = body(p_layer, x, cos, sin)
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    return L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int
+) -> Dict[str, jax.Array]:
+    dt = _dtype(cfg)
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim_)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_step(
+    params: Params,
+    cache: Dict[str, jax.Array],
+    token: jax.Array,  # (B, 1) int32
+    pos: jax.Array,  # scalar int32 — write position
+    cfg: ModelConfig,
+    *,
+    embeds: Optional[jax.Array] = None,
+    mrope_positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One serve step: logits for the next token + updated cache."""
+    if embeds is None:
+        x = L.embed(token, params["embed"])
+    else:
+        x = embeds
+    B = x.shape[0]
+    positions = pos[None] if pos.ndim == 0 else pos
+    cos, sin = _rope_for(cfg, positions, mrope_positions)
+
+    one_block = (
+        jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+        if cfg.scan_layers else params["blocks"][0]
+    )
+    k0 = cache["k"][0] if cfg.scan_layers else cache["k"][0]
+    v0 = cache["v"][0] if cfg.scan_layers else cache["v"][0]
+    body = _body_fn(cfg, "decode", (one_block, x, k0, v0, pos, cos, sin))
+
+    if cfg.scan_layers:
+        def step(carry, xs):
+            p_layer, kc, vc = xs
+            y, nk, nv = body(p_layer, carry, kc, vc, pos, cos, sin)
+            return y, (nk, nv)
+
+        x, (new_k, new_v) = lax.scan(
+            step, x, (params["blocks"], cache["k"], cache["v"])
+        )
+    else:
+        ks, vs = [], []
+        for i, p_layer in enumerate(params["blocks"]):
+            x, nk, nv = body(p_layer, x, cache["k"][i], cache["v"][i],
+                             pos, cos, sin)
+            ks.append(nk)
+            vs.append(nv)
+        new_k, new_v = jnp.stack(ks), jnp.stack(vs)
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
+    return logits, {"k": new_k, "v": new_v}

@@ -1,0 +1,336 @@
+"""xLSTM (arXiv:2405.04517): mLSTM + sLSTM blocks.
+
+* **mLSTM** — matrix-memory cell.  Training/prefill uses the *parallel*
+  quadratic form (stabilized exponential-gate attention-like scores with a
+  log-decay matrix D); decode uses the O(1)-state *recurrent* form
+  (C: d×d matrix memory, n: normalizer, m: log stabilizer).  The parallel
+  core is registered as an opaque ``forge_mlstm`` dispatch unit — the
+  attention-fusion pass finds **zero** softmax patterns in this arch
+  (documented inapplicability, DESIGN §Arch-applicability); operator
+  fusion still fuses the projections.
+* **sLSTM** — scalar-memory cell with recurrent h-dependence → inherently
+  sequential: implemented as ``lax.scan`` over time (one block every
+  ``cfg.slstm_every``; 0 disables).
+
+``d_ff = 0`` per the assigned config: blocks carry their own internal
+up/down projections (inner dim = 2·d_model); there is no separate FFN.
+
+``long_500k`` applicability: decode state is O(1) → this arch RUNS the
+500k-decode shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..configs.base import ModelConfig
+from ..kernels.ops import forge_op
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# mLSTM parallel core (one opaque accel dispatch unit)
+# --------------------------------------------------------------------------
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre):
+    """q,k,v: (B,H,S,D); i_pre,f_pre: (B,H,S) pre-activation gates."""
+    B, H, S, D = q.shape
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))  # (B,H,S)
+    cf = jnp.cumsum(logf, axis=-1)
+    # D_ij = cf_i - cf_j + logi_j  for j <= i
+    Dm = cf[..., :, None] - cf[..., None, :] + i_pre.astype(jnp.float32)[..., None, :]
+    row = lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    col = lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    Dm = jnp.where(row >= col, Dm, -jnp.inf)
+    m = jnp.max(Dm, axis=-1, keepdims=True)  # (B,H,S,1)
+    m = jnp.maximum(m, -1e30)  # guard all -inf rows
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    s = s * jnp.exp(Dm - m)
+    n = jnp.maximum(jnp.abs(jnp.sum(s, axis=-1, keepdims=True)),
+                    jnp.exp(-m))
+    h = jnp.einsum("bhqk,bhkd->bhqd", s, v.astype(jnp.float32)) / n
+    return h.astype(v.dtype)
+
+
+@forge_op("mlstm")
+def mlstm_parallel(q, k, v, i_pre, f_pre):
+    return _mlstm_parallel(q, k, v, i_pre, f_pre)
+
+
+def mlstm_recurrent_step(q, k, v, i_pre, f_pre, state):
+    """One decode step.  q,k,v: (B,H,D); gates: (B,H).
+    state = {C: (B,H,D,D), n: (B,H,D), m: (B,H)}."""
+    D = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    logi = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + state["m"], logi)
+    f_sc = jnp.exp(logf + state["m"] - m_new)[..., None]  # (B,H,1)
+    i_sc = jnp.exp(logi - m_new)[..., None]
+    kf, vf, qf = (k.astype(jnp.float32), v.astype(jnp.float32),
+                  q.astype(jnp.float32) / math.sqrt(D))
+    C = f_sc[..., None] * state["C"] + i_sc[..., None] * (
+        vf[..., :, None] * kf[..., None, :]
+    )  # (B,H,Dv,Dk)
+    n = f_sc * state["n"] + i_sc * kf
+    num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h.astype(v.dtype), {"C": C, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# mLSTM block
+# --------------------------------------------------------------------------
+
+
+def mlstm_block_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    inner = 2 * d
+    hd = inner // cfg.n_heads
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm": L.norm_init(d, cfg.norm),
+        "w_up": L.dense_init(ks[0], d, inner, dt),
+        "w_gate": L.dense_init(ks[1], d, inner, dt),
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, inner)) * 0.1
+                 ).astype(dt),
+        "wq": L.dense_init(ks[3], inner, inner, dt),
+        "wk": L.dense_init(ks[4], inner, inner, dt),
+        "wv": L.dense_init(ks[5], inner, inner, dt),
+        "w_if": L.dense_init(ks[6], inner, 2 * cfg.n_heads, dt),
+        "norm_h": L.norm_init(hd, "rmsnorm"),
+        "w_down": L.dense_init(ks[7], inner, d, dt),
+    }
+
+
+def _conv1d(x, w, state=None):
+    W = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+           if state is None else state)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    return out
+
+
+def _split(x, H):
+    B, S, I = x.shape
+    return x.reshape(B, S, H, I // H).transpose(0, 2, 1, 3)
+
+
+def mlstm_block_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    H = cfg.n_heads
+    h = L.apply_norm(x, p["norm"], cfg.norm)
+    u = L.linear(h, p["w_up"])  # (B,S,2d)
+    g = L.linear(h, p["w_gate"])
+    c = jax.nn.silu(_conv1d(u, p["conv"]))
+    q = _split(L.linear(c, p["wq"]), H)
+    k = _split(L.linear(c, p["wk"]), H)
+    v = _split(L.linear(u, p["wv"]), H)
+    gates = L.linear(c, p["w_if"]).astype(jnp.float32)  # (B,S,2H)
+    i_pre = gates[..., :H].transpose(0, 2, 1)
+    f_pre = gates[..., H:].transpose(0, 2, 1) + 3.0  # forget-bias init
+    hm = mlstm_parallel(q, k, v, i_pre, f_pre)  # (B,H,S,hd)
+    hm = L.rms_norm(hm, p["norm_h"]["scale"])
+    B, _, S, hd = hm.shape
+    hm = hm.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    out = hm * jax.nn.silu(g)
+    return x + L.linear(out, p["w_down"])
+
+
+def mlstm_block_decode(
+    p: Params, x: jax.Array, st: Dict[str, Any], cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    H = cfg.n_heads
+    h = L.apply_norm(x, p["norm"], cfg.norm)  # (B,1,d)
+    u = L.linear(h, p["w_up"])
+    g = L.linear(h, p["w_gate"])
+    c_in = _conv1d(u, p["conv"], state=st["conv"])
+    new_conv = jnp.concatenate([st["conv"], u], axis=1)[:, 1:]
+    c = jax.nn.silu(c_in)
+    q = _split(L.linear(c, p["wq"]), H)[:, :, 0]  # (B,H,hd)
+    k = _split(L.linear(c, p["wk"]), H)[:, :, 0]
+    v = _split(L.linear(u, p["wv"]), H)[:, :, 0]
+    gates = L.linear(c, p["w_if"]).astype(jnp.float32)[:, 0]  # (B,2H)
+    i_pre, f_pre = gates[:, :H], gates[:, H:] + 3.0
+    hm, cell = mlstm_recurrent_step(q, k, v, i_pre, f_pre, st["cell"])
+    hm = L.rms_norm(hm, p["norm_h"]["scale"])  # (B,H,hd)
+    B = hm.shape[0]
+    hm = hm.reshape(B, 1, -1)
+    out = hm * jax.nn.silu(g)
+    return x + L.linear(out, p["w_down"]), {"conv": new_conv, "cell": cell}
+
+
+# --------------------------------------------------------------------------
+# sLSTM block (sequential scan)
+# --------------------------------------------------------------------------
+
+
+def slstm_block_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm": L.norm_init(d, cfg.norm),
+        "w_in": L.dense_init(ks[0], d, 4 * d, dt),  # z, i, f, o pre-acts
+        "r": (jax.random.normal(ks[1], (H, hd, 4 * hd))
+              * (1.0 / math.sqrt(hd))).astype(jnp.float32),
+        "w_out": L.dense_init(ks[2], d, d, dt),
+    }
+
+
+def slstm_block_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    h_in = L.apply_norm(x, p["norm"], cfg.norm)
+    pre = L.linear(h_in, p["w_in"]).astype(jnp.float32)  # (B,S,4d)
+    pre = pre.reshape(B, S, H, 4 * hd)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry  # each (B,H,hd); m: (B,H,hd) log stabilizer
+        rec = jnp.einsum("bhd,hdk->bhk", h, p["r"])  # (B,H,4hd)
+        z_p, i_p, f_p, o_p = jnp.split(pre_t + rec, 4, axis=-1)
+        z = jnp.tanh(z_p)
+        o = jax.nn.sigmoid(o_p)
+        logf = jax.nn.log_sigmoid(f_p)
+        m_new = jnp.maximum(logf + m, i_p)
+        i_sc = jnp.exp(i_p - m_new)
+        f_sc = jnp.exp(logf + m - m_new)
+        c_new = f_sc * c + i_sc * z
+        n_new = jnp.maximum(f_sc * n + i_sc, jnp.exp(-m_new))
+        h_new = o * c_new / n_new
+        return (c_new, n_new, h_new, m_new), h_new
+
+    zeros = jnp.zeros((B, H, hd), jnp.float32)
+    init = (zeros, zeros, zeros, zeros - 1e30)
+    (_, _, _, _), hs = lax.scan(step, init, pre.transpose(1, 0, 2, 3))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    return x + L.linear(hs, p["w_out"])
+
+
+def slstm_block_decode(p, x, st, cfg):
+    B, _, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    h_in = L.apply_norm(x, p["norm"], cfg.norm)
+    pre = L.linear(h_in, p["w_in"]).astype(jnp.float32).reshape(B, H, 4 * hd)
+    c, n, h, m = st["c"], st["n"], st["h"], st["m"]
+    rec = jnp.einsum("bhd,hdk->bhk", h, p["r"])
+    z_p, i_p, f_p, o_p = jnp.split(pre + rec, 4, axis=-1)
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    logf = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(logf + m, i_p)
+    i_sc = jnp.exp(i_p - m_new)
+    f_sc = jnp.exp(logf + m - m_new)
+    c_new = f_sc * c + i_sc * z
+    n_new = jnp.maximum(f_sc * n + i_sc, jnp.exp(-m_new))
+    h_new = o * c_new / n_new
+    out = h_new.reshape(B, 1, d).astype(x.dtype)
+    return x + L.linear(out, p["w_out"]), {
+        "c": c_new, "n": n_new, "h": h_new, "m": m_new
+    }
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+
+
+def _kinds(cfg: ModelConfig):
+    return tuple(
+        "slstm" if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0
+        else "mlstm"
+        for i in range(cfg.n_layers)
+    )
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    dt = jnp.dtype(cfg.dtype)
+    blocks = [
+        slstm_block_init(ks[i], cfg) if kind == "slstm"
+        else mlstm_block_init(ks[i], cfg)
+        for i, kind in enumerate(_kinds(cfg))
+    ]
+    emb = L.embed_init(ks[-2], cfg.vocab, cfg.d_model, dt)
+    params = {
+        "embed": emb,
+        "blocks": blocks,
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[-1], cfg.d_model, cfg.vocab, dt)
+    return params
+
+
+def apply(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    from ._forge import forge_body
+
+    x = L.embed(tokens, params["embed"])
+    bodies = {}
+    for p, kind in zip(params["blocks"], _kinds(cfg)):
+        if kind not in bodies:
+            base = slstm_block_apply if kind == "slstm" else mlstm_block_apply
+            bodies[kind] = forge_body(
+                lambda q, x_, _b=base: _b(q, x_, cfg),
+                f"{cfg.name}/{kind}", (p, x),
+                enabled=(cfg.fuse == "forge"), remat=cfg.remat,
+            )
+        x = bodies[kind](p, x)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    return L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0) -> Dict[str, Any]:
+    inner = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd_m = inner // H
+    hd_s = cfg.d_model // H
+    layers = []
+    for kind in _kinds(cfg):
+        if kind == "slstm":
+            def z():  # distinct buffers: donation-safe (no aliasing)
+                return jnp.zeros((batch, H, hd_s), jnp.float32)
+
+            layers.append({"c": z(), "n": z(), "h": z(), "m": z() - 1e30})
+        else:
+            layers.append({
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, inner),
+                                  jnp.dtype(cfg.dtype)),
+                "cell": {
+                    "C": jnp.zeros((batch, H, hd_m, hd_m), jnp.float32),
+                    "n": jnp.zeros((batch, H, hd_m), jnp.float32),
+                    "m": jnp.zeros((batch, H), jnp.float32) - 1e30,
+                },
+            })
+    return {"layers": layers}
+
+
+def decode_step(params, cache, token, pos, cfg):
+    x = L.embed(token, params["embed"])
+    new_layers = []
+    for p, kind, st in zip(params["blocks"], _kinds(cfg), cache["layers"]):
+        if kind == "slstm":
+            x, new_st = slstm_block_decode(p, x, st, cfg)
+        else:
+            x, new_st = mlstm_block_decode(p, x, st, cfg)
+        new_layers.append(new_st)
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
+    return logits, {"layers": new_layers}

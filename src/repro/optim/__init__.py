@@ -1,0 +1,17 @@
+"""Sharded optimizers: AdamW (default) and Adafactor (trillion-param MoE)."""
+from .adamw import AdamW, AdamWState, global_norm
+from .adafactor import Adafactor, AdafactorState
+
+
+def get_optimizer(name: str, **kw):
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise KeyError(f"unknown optimizer {name!r}")
+
+
+__all__ = [
+    "AdamW", "AdamWState", "Adafactor", "AdafactorState",
+    "get_optimizer", "global_norm",
+]

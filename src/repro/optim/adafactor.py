@@ -1,0 +1,109 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments.
+
+Required for the trillion-parameter MoE configs: fp32 Adam states for
+Kimi-K2 would need ~12 TB (> the 8 TB single-pod fleet HBM); Adafactor's
+row/column-factored second moment stores O(n+m) per (n, m) matrix.
+Factored only for leaves with ndim ≥ 2 (the last two dims are factored);
+1-D leaves fall back to an unfactored second moment.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import global_norm
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any  # row stats   (pytree; zeros() scalar where unfactored)
+    vc: Any  # column stats
+    v: Any   # unfactored fallback (zeros scalar where factored)
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    lr: float = 1e-3
+    decay: float = 0.8  # beta2_t = 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+
+    def _factored(self, p) -> bool:
+        return p.ndim >= 2
+
+    def init(self, params: Any) -> AdafactorState:
+        def row(p):
+            if self._factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        def col(p):
+            if self._factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        def full(p):
+            if self._factored(p):
+                return jnp.zeros((), jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        t = jax.tree_util.tree_map
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=t(row, params), vc=t(col, params), v=t(full, params),
+        )
+
+    def update(
+        self, grads: Any, state: AdafactorState, params: Any,
+        lr_scale: jax.Array | float = 1.0,
+    ) -> Tuple[Any, AdafactorState]:
+        step = state.step + 1
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-self.decay)
+        if self.grad_clip is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+        def upd(g, vr, vc, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if self._factored(p):
+                vr2 = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc2 = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                # normalized row stats (Shazeer & Stern Alg. 4)
+                r = vr2 / jnp.maximum(
+                    jnp.mean(vr2, axis=-1, keepdims=True), self.eps
+                )
+                upd_ = g * jax.lax.rsqrt(r + self.eps)[..., None] \
+                    * jax.lax.rsqrt(vc2 + self.eps)[..., None, :]
+                v2 = v
+            else:
+                v2 = beta2 * v + (1 - beta2) * g2
+                upd_ = g * jax.lax.rsqrt(v2 + self.eps)
+                vr2, vc2 = vr, vc
+            # update clipping by RMS (Adafactor §6)
+            rms = jnp.sqrt(jnp.mean(upd_ * upd_) + 1e-30)
+            upd_ = upd_ / jnp.maximum(1.0, rms / self.clip_threshold)
+            new_p = p.astype(jnp.float32) - self.lr * lr_scale * (
+                upd_ + self.weight_decay * p.astype(jnp.float32)
+            )
+            return new_p.astype(p.dtype), vr2, vc2, v2
+
+        flat_p, tree = jax.tree_util.tree_flatten(params)
+        flat_g = tree.flatten_up_to(grads)
+        flat_vr = tree.flatten_up_to(state.vr)
+        flat_vc = tree.flatten_up_to(state.vc)
+        flat_v = tree.flatten_up_to(state.v)
+        out = [upd(g, vr, vc, v, p) for g, vr, vc, v, p
+               in zip(flat_g, flat_vr, flat_vc, flat_v, flat_p)]
+        return tree.unflatten([o[0] for o in out]), AdafactorState(
+            step=step,
+            vr=tree.unflatten([o[1] for o in out]),
+            vc=tree.unflatten([o[2] for o in out]),
+            v=tree.unflatten([o[3] for o in out]),
+        )

@@ -1,0 +1,75 @@
+"""AdamW with decoupled weight decay — pure-pytree implementation.
+
+States are stored in fp32 and shard exactly like the parameters (the
+sharding plan is applied leaf-wise to the state pytree), so the optimizer
+is FSDP/ZeRO-compatible by construction: sharded params → sharded moments
+→ sharded update, no gather.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any  # first moment (pytree like params, fp32)
+    nu: Any  # second moment
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros)
+
+    def update(
+        self, grads: Any, state: AdamWState, params: Any,
+        lr_scale: jax.Array | float = 1.0,
+    ) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        if self.grad_clip is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * g
+            v2 = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m2 / (1 - self.b1 ** step.astype(jnp.float32))
+            vhat = v2 / (1 - self.b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - self.lr * lr_scale * delta
+            return new_p.astype(p.dtype), m2, v2
+
+        flat_p, tree = jax.tree_util.tree_flatten(params)
+        flat_g = tree.flatten_up_to(grads)
+        flat_m = tree.flatten_up_to(state.mu)
+        flat_v = tree.flatten_up_to(state.nu)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tree.unflatten([o[0] for o in out])
+        new_m = tree.unflatten([o[1] for o in out])
+        new_v = tree.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves)
+    )

@@ -1,0 +1,9 @@
+from .compress import compressed_psum, compression_ratio, quantize_int8
+from .failure import SimulatedFault, Supervisor, SupervisorReport
+from .straggler import StragglerMonitor
+
+__all__ = [
+    "compressed_psum", "compression_ratio", "quantize_int8",
+    "SimulatedFault", "Supervisor", "SupervisorReport",
+    "StragglerMonitor",
+]

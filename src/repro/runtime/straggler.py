@@ -1,0 +1,70 @@
+"""Straggler mitigation: per-host step-time EWMA monitor.
+
+A host whose smoothed step time exceeds ``threshold ×`` the fleet median
+is flagged; the mitigation hook then rebalances its data shards (here: a
+work-ratio table the data loader consumes; on a real fleet this hooks the
+coordinator / triggers hot-spare swap-in).  Synchronous SPMD makes the
+whole fleet run at the slowest host's pace — catching a 1.5× straggler
+on 1024 hosts recovers ~33% of fleet throughput.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class StragglerMonitor:
+    n_hosts: int
+    alpha: float = 0.2  # EWMA smoothing
+    threshold: float = 1.5  # x median -> straggler
+    min_samples: int = 5
+
+    _ewma: Optional[np.ndarray] = field(default=None, repr=False)
+    _count: int = 0
+
+    def observe(self, step_times: Dict[int, float] | List[float]) -> None:
+        """Record one step's per-host wall times (seconds)."""
+        if isinstance(step_times, dict):
+            t = np.zeros(self.n_hosts)
+            for h, v in step_times.items():
+                t[h] = v
+        else:
+            t = np.asarray(step_times, dtype=float)
+        assert t.shape == (self.n_hosts,)
+        if self._ewma is None:
+            self._ewma = t.copy()
+        else:
+            self._ewma = (1 - self.alpha) * self._ewma + self.alpha * t
+        self._count += 1
+
+    def stragglers(self) -> List[int]:
+        if self._ewma is None or self._count < self.min_samples:
+            return []
+        med = float(np.median(self._ewma))
+        if med <= 0:
+            return []
+        return [int(h) for h in np.nonzero(self._ewma > self.threshold * med)[0]]
+
+    def work_ratios(self) -> np.ndarray:
+        """Per-host data-share multipliers: stragglers get proportionally
+        less work (normalized to mean 1.0)."""
+        if self._ewma is None:
+            return np.ones(self.n_hosts)
+        speed = 1.0 / np.maximum(self._ewma, 1e-9)
+        return speed * (self.n_hosts / speed.sum())
+
+    def rebalanced_host_batches(self, global_batch: int) -> List[int]:
+        """Integer per-host batch sizes proportional to measured speed,
+        summing exactly to global_batch."""
+        ratios = self.work_ratios()
+        raw = ratios / ratios.sum() * global_batch
+        sizes = np.floor(raw).astype(int)
+        # distribute the remainder to the fastest hosts
+        remainder = global_batch - sizes.sum()
+        order = np.argsort(-(raw - sizes))
+        for i in range(remainder):
+            sizes[order[i % self.n_hosts]] += 1
+        return [int(s) for s in sizes]

@@ -1,0 +1,60 @@
+"""Shared fixtures for the Forge-UGC test suite.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+must see the single real CPU device; only launch/dryrun.py fakes 512.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(42)
+
+
+def make_block_fn():
+    """A GQA transformer block written UNFUSED (the capture target)."""
+
+    def block(x, wq, wk, wv, wo, w1, b1, w2):
+        B, S, E = x.shape
+        H, D = 4, E // 4
+        KVH = 2
+        q = (x @ wq).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+        k = (x @ wk).reshape(B, S, KVH, D).transpose(0, 2, 1, 3)
+        v = (x @ wv).reshape(B, S, KVH, D).transpose(0, 2, 1, 3)
+        g = H // KVH
+        k = jnp.broadcast_to(k[:, :, None], (B, KVH, g, S, D)).reshape(B, H, S, D)
+        v = jnp.broadcast_to(v[:, :, None], (B, KVH, g, S, D)).reshape(B, H, S, D)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+        s = s * (1.0 / np.sqrt(D))
+        row = lax.broadcasted_iota(jnp.int32, (S, S), 0)
+        col = lax.broadcasted_iota(jnp.int32, (S, S), 1)
+        s = jnp.where(row >= col, s, jnp.asarray(jnp.finfo(s.dtype).min, s.dtype))
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, E)
+        o = o @ wo
+        x = x + o
+        h = jax.nn.silu(x @ w1 + b1)
+        return x + h @ w2
+
+    return block
+
+
+def make_block_args(rng, B=2, S=16, E=32, F=64, scale=0.1, dtype=np.float32):
+    shapes = [(B, S, E), (E, E), (E, E // 2), (E, E // 2), (E, E),
+              (E, F), (F,), (F, E)]
+    return [rng.standard_normal(s).astype(dtype) * scale for s in shapes]
+
+
+@pytest.fixture(scope="session")
+def block_fn():
+    return make_block_fn()
+
+
+@pytest.fixture()
+def block_args(rng):
+    return make_block_args(rng)

@@ -1,0 +1,105 @@
+"""Phase-1 capture tests: inlining, tied weights, forge markers, replay."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.capture import graph_to_fn, trace_to_graph
+from repro.kernels.ops import forge_op
+
+
+class TestInlining:
+    def test_softmax_is_flat(self):
+        def f(x):
+            return jax.nn.softmax(x, axis=-1)
+
+        g = trace_to_graph(f, np.ones((4, 8), np.float32)).graph
+        ops = {n.op for n in g.nodes.values()}
+        # softmax inlined to primitive chain, no opaque pjit equation
+        assert "exp" in ops and "reduce_max" in ops and "div" in ops
+        assert not any(o in ("pjit", "jit", "closed_call") for o in ops)
+
+    def test_custom_jvp_inlined(self):
+        def f(x):
+            return jax.nn.relu(x) + jax.nn.gelu(x)
+
+        g = trace_to_graph(f, np.ones((4,), np.float32)).graph
+        assert not any("custom" in n.op for n in g.nodes.values())
+
+    def test_scan_stays_opaque(self):
+        def f(x):
+            def body(c, t):
+                return c + t, c
+
+            return jax.lax.scan(body, x, jnp.arange(3.0))
+
+        g = trace_to_graph(f, np.float32(1.0)).graph
+        assert any(n.op == "scan" for n in g.nodes.values())
+
+    def test_forge_marker_stays_opaque(self):
+        @forge_op("mything")
+        def mything(x):
+            return jnp.tanh(x) * 2.0
+
+        def f(x):
+            return mything(x) + 1.0
+
+        g = trace_to_graph(f, np.ones((4,), np.float32)).graph
+        assert any(n.op == "forge.mything" for n in g.nodes.values())
+
+
+class TestTiedWeights:
+    def test_tied_leaves_merge(self):
+        w = np.ones((4, 4), np.float32)
+
+        def f(params, x):
+            return (x @ params["emb"]) @ params["head"]
+
+        params = {"emb": w, "head": w}  # same object: tied
+        res = trace_to_graph(f, params, np.ones((2, 4), np.float32))
+        assert len(res.tied_map) == 1
+        assert len(res.graph.invars) == res.n_inputs_raw - 1
+
+    def test_untied_leaves_not_merged(self):
+        def f(params, x):
+            return (x @ params["emb"]) @ params["head"]
+
+        params = {
+            "emb": np.ones((4, 4), np.float32),
+            "head": np.ones((4, 4), np.float32),  # equal values, diff objects
+        }
+        res = trace_to_graph(f, params, np.ones((2, 4), np.float32))
+        assert res.tied_map == {}
+
+    def test_tied_replay_correct(self):
+        w = np.random.default_rng(0).standard_normal((4, 4)).astype(np.float32)
+
+        def f(params, x):
+            return (x @ params["emb"]) @ params["head"]
+
+        params = {"emb": w, "head": w}
+        x = np.ones((2, 4), np.float32)
+        res = trace_to_graph(f, params, x)
+        # replay on deduped flat inputs
+        flat, _ = jax.tree_util.tree_flatten((params, x))
+        flat = [v for i, v in enumerate(flat) if i not in res.tied_map]
+        out = graph_to_fn(res.graph)(*flat)[0]
+        np.testing.assert_allclose(out, f(params, x), rtol=1e-6)
+
+
+class TestReplay:
+    def test_graph_to_fn_matches(self, block_fn, block_args):
+        res = trace_to_graph(block_fn, *block_args)
+        out = graph_to_fn(res.graph)(*block_args)[0]
+        expect = block_fn(*block_args)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_shape_dtype_struct_capture(self, block_fn):
+        specs = [
+            jax.ShapeDtypeStruct(s, jnp.float32)
+            for s in [(2, 16, 32), (32, 32), (32, 16), (32, 16), (32, 32),
+                      (32, 64), (64,), (64, 32)]
+        ]
+        res = trace_to_graph(block_fn, *specs)
+        assert res.graph.num_nodes() > 10  # abstract capture works

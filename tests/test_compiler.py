@@ -1,0 +1,126 @@
+"""ForgeCompiler facade, metrics (FGR/CEI/fidelity), autotuner tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AutotuningCompiler,
+    ForgeCompiler,
+    PipelineConfig,
+    forge_compile,
+)
+from repro.core.metrics import (
+    check_compilation_fidelity,
+    compilation_efficiency_index,
+    fidelity,
+    fusion_gain_ratio,
+)
+
+
+class TestFacade:
+    def test_end_to_end(self, block_fn, block_args):
+        mod = forge_compile(block_fn, *block_args)
+        r = mod.result
+        assert r.nodes_after < r.nodes_before
+        assert r.attention_fused >= 1
+        assert r.fused_ops >= 3
+        assert r.total_ms > 0
+        out = mod(*block_args)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(block_fn(*block_args), np.float32),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_pass_table(self, block_fn, block_args):
+        mod = forge_compile(block_fn, *block_args)
+        table = {row["pass"]: row for row in mod.result.pass_table()}
+        # all six paper passes + device-constant present
+        for name in ("dce", "cse", "constant_folding", "device_constant",
+                     "attention_fusion", "operator_fusion",
+                     "layout_optimization"):
+            assert name in table, name
+            assert table[name]["time_ms"] >= 0
+
+    def test_jit_mode(self, block_fn, block_args):
+        mod = forge_compile(block_fn, *block_args)
+        out = mod.jit()(*block_args)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(block_fn(*block_args), np.float32),
+            rtol=1e-3, atol=1e-3,
+        )
+
+    def test_tied_weight_module(self, rng):
+        w = rng.standard_normal((8, 8)).astype(np.float32) * 0.3
+
+        def lm(params, x):
+            h = jnp.tanh(x @ params["emb"])
+            return h @ params["head"].T
+
+        params = {"emb": w, "head": w}
+        x = rng.standard_normal((2, 8)).astype(np.float32)
+        mod = forge_compile(lm, params, x)
+        assert mod.result.tied_weights == 1
+        np.testing.assert_allclose(
+            np.asarray(mod(params, x)), np.asarray(lm(params, x)),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_summary_renders(self, block_fn, block_args):
+        mod = forge_compile(block_fn, *block_args)
+        s = mod.result.summary()
+        assert "nodes:" in s and "rho_buf" in s
+
+
+class TestMetrics:
+    def test_fgr_above_one(self, block_fn, block_args):
+        r = fusion_gain_ratio(block_fn, *block_args)
+        assert r["fgr"] > 1.0
+        assert r["score_alpha1"] < r["score_alpha0"]
+
+    def test_cei(self):
+        # 2x speedup for 0.5 s compile -> CEI 4.0
+        assert compilation_efficiency_index(10.0, 5.0, 500.0) == pytest.approx(4.0)
+
+    def test_fidelity_protocol(self, block_fn, block_args):
+        rep = check_compilation_fidelity(block_fn, *block_args)
+        # unit-scale weights -> tight numerical agreement
+        assert rep.max_abs_diff < 1e-3
+        assert rep.kl_divergence < 1e-6
+
+    def test_fidelity_identical(self):
+        a = {"logits": jnp.ones((2, 8))}
+        rep = fidelity(a, a)
+        assert rep.max_abs_diff == 0.0 and rep.kl_divergence == 0.0
+
+
+class TestAutotuner:
+    def test_grid_size(self, block_fn, block_args):
+        tr = AutotuningCompiler().tune(block_fn, *block_args)
+        assert len(tr.candidates) >= 45
+        assert tr.best.score <= min(c.score for c in tr.candidates)
+
+    def test_autotuned_compile_runs(self, block_fn, block_args):
+        mod = AutotuningCompiler().compile(block_fn, *block_args)
+        out = mod(*block_args)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(block_fn(*block_args), np.float32),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_aggressive_fusion_wins(self, block_fn, block_args):
+        """Paper Table 17: cost improves monotonically with α."""
+        from repro.core.capture import trace_to_graph
+        from repro.core.cost_model import score_graph
+        from repro.core.passes import run_forge_passes
+
+        scores = []
+        for alpha in (0.0, 0.5, 1.0):
+            g = trace_to_graph(block_fn, *block_args).graph
+            run_forge_passes(g, cfg=PipelineConfig(alpha=alpha))
+            scores.append(score_graph(g).score)
+        assert scores[0] >= scores[1] >= scores[2]
+        assert scores[2] < scores[0]

@@ -1,0 +1,89 @@
+"""Unit tests for the RGraph IR (repro.core.graph)."""
+import numpy as np
+import pytest
+
+from repro.core._jax_internal import ShapedArray
+from repro.core.graph import Graph, GLit, GVar
+
+
+def _aval(shape=(2, 2), dtype=np.float32):
+    return ShapedArray(shape, np.dtype(dtype))
+
+
+def build_chain():
+    """a = in+in; b = a*a; out = b"""
+    g = Graph()
+    x = g.add_input(_aval(), "x")
+    n1 = g.add_node("add", None, {}, [x, x], [_aval()])
+    n2 = g.add_node("mul", None, {}, [n1.outvars[0], n1.outvars[0]], [_aval()])
+    g.outvars = [n2.outvars[0]]
+    return g, x, n1, n2
+
+
+class TestGraphBasics:
+    def test_validate_ok(self):
+        g, *_ = build_chain()
+        g.validate()
+
+    def test_use_counts(self):
+        g, x, n1, n2 = build_chain()
+        assert g.n_uses(x) == 2
+        assert g.n_uses(n1.outvars[0]) == 2
+        assert g.n_uses(n2.outvars[0]) == 1  # graph output
+
+    def test_producer_users(self):
+        g, x, n1, n2 = build_chain()
+        assert g.producer(n1.outvars[0]) is n1
+        assert g.users(n1.outvars[0]) == [n2]
+        assert g.producer(x) is None
+
+    def test_replace_all_uses(self):
+        g, x, n1, n2 = build_chain()
+        g.replace_all_uses(n1.outvars[0], x)
+        assert all(
+            iv.vid == x.vid for iv in n2.invars if isinstance(iv, GVar)
+        )
+        assert g.n_uses(n1.outvars[0]) == 0
+        g.erase_node(n1)
+        g.validate()
+
+    def test_replace_updates_outputs(self):
+        g, x, n1, n2 = build_chain()
+        g.replace_all_uses(n2.outvars[0], n1.outvars[0])
+        assert g.outvars[0].vid == n1.outvars[0].vid
+        g.erase_node(n2)
+        g.validate()
+
+    def test_erase_in_use_raises(self):
+        g, x, n1, n2 = build_chain()
+        with pytest.raises(ValueError):
+            g.erase_node(n1)
+
+    def test_use_before_def_detected(self):
+        g = Graph()
+        x = g.add_input(_aval())
+        phantom = g.new_var(_aval())
+        g.add_node("add", None, {}, [x, phantom], [_aval()])
+        g.outvars = [x]
+        with pytest.raises(AssertionError):
+            g.validate()
+
+    def test_insert_node_like_position(self):
+        g, x, n1, n2 = build_chain()
+        fused = g.insert_node_like(n1, "forge.test", {}, [x], [_aval()])
+        nids = list(g.nodes.keys())
+        assert nids.index(fused.nid) == nids.index(n1.nid) + 1
+        # def-before-use must hold if n2 consumes the fused output
+        g.replace_all_uses(n1.outvars[0], fused.outvars[0])
+        g.erase_node(n1)
+        g.validate()
+
+    def test_depth(self):
+        g, *_ = build_chain()
+        assert g.depth() == 2
+
+    def test_const_tracking(self):
+        g = Graph()
+        c = g.add_const(np.ones((3,)))
+        assert g.constvars == [c]
+        assert np.array_equal(g.consts[0], np.ones((3,)))

@@ -1,0 +1,346 @@
+"""Phase-2 pass tests: each pass + the fixpoint pipeline + fusion variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.core.capture import graph_to_fn, trace_to_graph
+from repro.core.passes import (
+    AttentionFusionPass,
+    CSEPass,
+    ConstantFoldingPass,
+    DCEPass,
+    DeviceConstantPass,
+    LayoutOptimizationPass,
+    OperatorFusionPass,
+    PipelineConfig,
+    run_forge_passes,
+)
+
+
+def capture(fn, *args):
+    return trace_to_graph(fn, *args).graph
+
+
+def assert_equiv(g, fn, args, rtol=1e-5, atol=1e-5):
+    out = graph_to_fn(g)(*args)
+    expect = fn(*args)
+    if not isinstance(expect, (tuple, list)):
+        expect = [expect]
+    for o, e in zip(out, expect):
+        np.testing.assert_allclose(
+            np.asarray(o, dtype=np.float32),
+            np.asarray(e, dtype=np.float32),
+            rtol=rtol, atol=atol,
+        )
+
+
+class TestDCE:
+    def test_erases_dead_chain(self):
+        def f(x):
+            dead = jnp.sum(x * 3.0)  # noqa: F841 — dead subexpression
+            return x + 1.0
+
+        g = capture(f, np.ones((4,), np.float32))
+        n0 = g.num_nodes()
+        DCEPass().run(g)
+        assert g.num_nodes() < n0
+        g.validate()
+        assert_equiv(g, f, [np.ones((4,), np.float32)])
+
+    def test_noop_on_live_graph(self):
+        def f(x):
+            return x * 2.0 + 1.0
+
+        g = capture(f, np.ones((4,), np.float32))
+        assert DCEPass().run(g) is False
+
+
+class TestCSE:
+    def test_merges_duplicates(self):
+        def f(x):
+            a = jnp.tanh(x)
+            b = jnp.tanh(x)
+            return a + b
+
+        g = capture(f, np.ones((4,), np.float32))
+        n0 = g.num_nodes()
+        assert CSEPass().run(g)
+        assert g.num_nodes() == n0 - 1
+        assert_equiv(g, f, [np.ones((4,), np.float32)])
+
+    def test_respects_params(self):
+        def f(x):
+            return jnp.sum(x, axis=0) + jnp.sum(x, axis=1)
+
+        g = capture(f, np.ones((4, 4), np.float32))
+        n0 = g.num_nodes()
+        CSEPass().run(g)
+        assert g.num_nodes() == n0  # different axes: not CSE-able
+
+
+class TestConstantFolding:
+    def test_folds_const_subgraph(self):
+        def f(x):
+            table = jnp.arange(8.0) * 2.0 + 1.0  # pure-constant chain
+            return x * table
+
+        g = capture(f, np.ones((8,), np.float32))
+        ConstantFoldingPass().run(g)
+        DCEPass().run(g)
+        ops = [n.op for n in g.nodes.values()]
+        assert ops.count("mul") == 1  # only the data-dependent mul survives
+        assert_equiv(g, f, [np.ones((8,), np.float32)])
+
+    def test_identity_arith(self):
+        def f(x):
+            return (x + 0.0) * 1.0
+
+        g = capture(f, np.ones((4,), np.float32))
+        ConstantFoldingPass().run(g)
+        assert g.num_nodes() == 0  # both identities collapse
+        assert_equiv(g, f, [np.ones((4,), np.float32)])
+
+    def test_size_cap(self):
+        def f(x):
+            big = jnp.ones((2048, 2048)) * 2.0  # 4M elements > cap
+            return x + big[0, 0]
+
+        g = capture(f, np.float32(1.0))
+        p = ConstantFoldingPass(max_elements=1 << 20)
+        p.run(g)
+        # the 4M-element broadcast must not be materialized
+        assert all(np.prod(np.shape(c)) <= 1 << 20 for c in g.consts)
+
+
+def _sdpa_fn(causal=True, gqa=False, scale=True, extra_mask=False):
+    def f(q, k, v, *rest):
+        B, H, S, D = q.shape
+        if gqa:
+            KVH = k.shape[1]
+            grp = H // KVH
+            k2 = jnp.broadcast_to(k[:, :, None], (B, KVH, grp, S, D)).reshape(B, H, S, D)
+            v2 = jnp.broadcast_to(v[:, :, None], (B, KVH, grp, S, D)).reshape(B, H, S, D)
+        else:
+            k2, v2 = k, v
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k2, preferred_element_type=jnp.float32)
+        if scale:
+            s = s * (1.0 / np.sqrt(D))
+        if causal:
+            row = lax.broadcasted_iota(jnp.int32, (S, S), 0)
+            col = lax.broadcasted_iota(jnp.int32, (S, S), 1)
+            s = jnp.where(row >= col, s, jnp.asarray(jnp.finfo(s.dtype).min, s.dtype))
+        if extra_mask:
+            s = s + rest[0]
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v2.dtype), v2)
+
+    return f
+
+
+def _sdpa_args(rng, B=1, H=4, KVH=4, S=8, D=4, extra_mask=False):
+    args = [
+        rng.standard_normal((B, H, S, D)).astype(np.float32) * 0.5,
+        rng.standard_normal((B, KVH, S, D)).astype(np.float32) * 0.5,
+        rng.standard_normal((B, KVH, S, D)).astype(np.float32) * 0.5,
+    ]
+    if extra_mask:
+        args.append(rng.standard_normal((B, H, S, S)).astype(np.float32))
+    return args
+
+
+class TestAttentionFusion:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("gqa", [True, False])
+    def test_variants(self, rng, causal, gqa):
+        f = _sdpa_fn(causal=causal, gqa=gqa)
+        args = _sdpa_args(rng, KVH=2 if gqa else 4)
+        g = capture(f, *args)
+        ConstantFoldingPass().run(g)
+        p = AttentionFusionPass()
+        assert p.run(g), f"no fusion for causal={causal} gqa={gqa}"
+        node = next(n for n in g.nodes.values() if n.op == "forge.sdpa")
+        assert node.params["causal"] == causal
+        assert node.params["groups"] == (2 if gqa else 1)
+        g.validate()
+        assert_equiv(g, f, args)
+
+    def test_additive_mask_kept_as_operand(self, rng):
+        f = _sdpa_fn(causal=False, extra_mask=True)
+        args = _sdpa_args(rng, extra_mask=True)
+        g = capture(f, *args)
+        p = AttentionFusionPass()
+        assert p.run(g)
+        node = next(n for n in g.nodes.values() if n.op == "forge.sdpa")
+        assert node.params["has_mask"] and node.params["mask_mode"] == "add"
+        assert len(node.invars) == 4
+        assert_equiv(g, f, args)
+
+    def test_no_scale_uses_identity(self, rng):
+        f = _sdpa_fn(causal=False, scale=False)
+        args = _sdpa_args(rng)
+        g = capture(f, *args)
+        assert AttentionFusionPass().run(g)
+        node = next(n for n in g.nodes.values() if n.op == "forge.sdpa")
+        assert node.params["scale"] == 1.0
+        assert_equiv(g, f, args)
+
+    def test_alpha_zero_disables(self, rng):
+        f = _sdpa_fn()
+        args = _sdpa_args(rng)
+        g = capture(f, *args)
+        p = AttentionFusionPass(alpha=0.0)
+        assert p.run(g) is False
+        assert p.last_detail["matched"] == 1
+
+    def test_shared_scores_not_fused(self, rng):
+        """If the softmax output feeds a second consumer, fusion must bail."""
+
+        def f(q, k, v):
+            s = jnp.einsum("bhqd,bhkd->bhqk", q, k)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+            return o, p  # p escapes!
+
+        args = _sdpa_args(rng)
+        g = capture(f, *args)
+        assert AttentionFusionPass().run(g) is False
+
+
+class TestOperatorFusion:
+    @pytest.mark.parametrize("act", ["relu", "silu", "gelu", "tanh"])
+    @pytest.mark.parametrize("bias", [True, False])
+    def test_linear_act(self, rng, act, bias):
+        actf = {"relu": jax.nn.relu, "silu": jax.nn.silu,
+                "gelu": jax.nn.gelu, "tanh": jnp.tanh}[act]
+
+        def f(x, w, b):
+            h = x @ w
+            if bias:
+                h = h + b
+            return actf(h)
+
+        x = rng.standard_normal((4, 8)).astype(np.float32) * 0.5
+        w = rng.standard_normal((8, 16)).astype(np.float32) * 0.5
+        b = rng.standard_normal((16,)).astype(np.float32) * 0.5
+        g = capture(f, x, w, b)
+        p = OperatorFusionPass()
+        assert p.run(g)
+        node = next(n for n in g.nodes.values() if n.op == "forge.linear_act")
+        assert node.params["act"] == act
+        assert node.params["has_bias"] == bias
+        assert_equiv(g, f, [x, w, b], rtol=1e-4, atol=1e-5)
+
+    def test_gelu_exact(self, rng):
+        def f(x, w):
+            return jax.nn.gelu(x @ w, approximate=False)
+
+        x = rng.standard_normal((4, 8)).astype(np.float32) * 0.5
+        w = rng.standard_normal((8, 8)).astype(np.float32) * 0.5
+        g = capture(f, x, w)
+        assert OperatorFusionPass().run(g)
+        node = next(n for n in g.nodes.values() if n.op == "forge.linear_act")
+        assert node.params["act"] == "gelu_exact"
+        assert_equiv(g, f, [x, w], rtol=1e-4, atol=1e-5)
+
+    def test_swiglu(self, rng):
+        def f(x, wg, wu):
+            return jax.nn.silu(x @ wg) * (x @ wu)
+
+        x = rng.standard_normal((4, 8)).astype(np.float32) * 0.5
+        wg = rng.standard_normal((8, 16)).astype(np.float32) * 0.5
+        wu = rng.standard_normal((8, 16)).astype(np.float32) * 0.5
+        g = capture(f, x, wg, wu)
+        p = OperatorFusionPass()
+        assert p.run(g)
+        assert any(n.op == "forge.swiglu" for n in g.nodes.values())
+        assert_equiv(g, f, [x, wg, wu], rtol=1e-4, atol=1e-5)
+
+    def test_mm_residual(self, rng):
+        def f(x, w, r):
+            return x @ w + r
+
+        x = rng.standard_normal((4, 8)).astype(np.float32)
+        w = rng.standard_normal((8, 8)).astype(np.float32)
+        r = rng.standard_normal((4, 8)).astype(np.float32)
+        g = capture(f, x, w, r)
+        assert OperatorFusionPass().run(g)
+        node = next(n for n in g.nodes.values() if n.op == "forge.linear_act")
+        assert node.params["has_residual"]
+        assert_equiv(g, f, [x, w, r], rtol=1e-5, atol=1e-5)
+
+
+class TestLayout:
+    def test_transpose_cancel(self, rng):
+        def f(x):
+            return jnp.transpose(jnp.transpose(x, (1, 0)), (1, 0)) + 1.0
+
+        x = rng.standard_normal((3, 5)).astype(np.float32)
+        g = capture(f, x)
+        assert LayoutOptimizationPass().run(g)
+        assert not any(n.op == "transpose" for n in g.nodes.values())
+        assert_equiv(g, f, [x])
+
+    def test_noop_convert_erased(self, rng):
+        def f(x):
+            return x.astype(jnp.float32) + 1.0  # already f32
+
+        x = rng.standard_normal((4,)).astype(np.float32)
+        g = capture(f, x)
+        LayoutOptimizationPass().run(g)
+        assert not any(n.op == "convert_element_type" for n in g.nodes.values())
+
+    def test_dot_transpose_absorbed(self, rng):
+        def f(x, w):
+            return x @ w.T
+
+        x = rng.standard_normal((4, 8)).astype(np.float32)
+        w = rng.standard_normal((16, 8)).astype(np.float32)
+        g = capture(f, x, w)
+        assert LayoutOptimizationPass().run(g)
+        assert not any(n.op == "transpose" for n in g.nodes.values())
+        assert_equiv(g, f, [x, w], rtol=1e-5)
+
+
+class TestDeviceConstant:
+    def test_promotes_array_literals(self):
+        def f(x):
+            return x + jnp.asarray([1.0, 2.0, 3.0, 4.0])
+
+        g = capture(f, np.ones((4,), np.float32))
+        n_consts0 = len(g.consts)
+        p = DeviceConstantPass()
+        changed = p.run(g)
+        if changed:
+            assert len(g.consts) > n_consts0
+        # idempotent
+        assert p.run(g) is False
+
+
+class TestPipeline:
+    def test_fixpoint_converges(self, block_fn, block_args):
+        g = capture(block_fn, *block_args)
+        recs = run_forge_passes(g, cfg=PipelineConfig(max_rounds=3))
+        rounds = {r.round for r in recs}
+        # second round must be a no-op (fixpoint) -> at most 2 rounds run
+        last_round = max(rounds)
+        assert not any(r.modified for r in recs if r.round == last_round)
+
+    def test_node_reduction_band(self, block_fn, block_args):
+        g = capture(block_fn, *block_args)
+        n0 = g.num_nodes()
+        run_forge_passes(g)
+        assert g.num_nodes() < n0 * 0.9  # at least 10% reduction
+
+    def test_semantics_preserved(self, block_fn, block_args):
+        g = capture(block_fn, *block_args)
+        run_forge_passes(g)
+        assert_equiv(g, block_fn, block_args, rtol=1e-4, atol=1e-4)
+
+    def test_ablation_hooks(self, block_fn, block_args):
+        g = capture(block_fn, *block_args)
+        cfg = PipelineConfig(enable={"attention_fusion": False})
+        run_forge_passes(g, cfg=cfg)
+        assert not any(n.op == "forge.sdpa" for n in g.nodes.values())
+        assert any(n.op == "forge.linear_act" for n in g.nodes.values())

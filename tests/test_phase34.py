@@ -1,0 +1,230 @@
+"""Phase 3+4 tests: lowering, liveness, linear-scan allocation, scheduling,
+executor — unit + hypothesis property tests on the invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bufalloc import allocate, validate_allocation, allocate_from_liveness
+from repro.core.capture import trace_to_graph
+from repro.core.executor import CompiledExecutor, build_executor
+from repro.core.liveness import LivenessInfo, analyze_liveness
+from repro.core.lowering import RegRef, lower_to_rgir, route_device
+from repro.core.passes import run_forge_passes
+from repro.core.scheduler import schedule, verify_topological
+
+
+def lowered(fn, *args, optimize=True):
+    g = trace_to_graph(fn, *args).graph
+    if optimize:
+        run_forge_passes(g)
+    return g, lower_to_rgir(g)
+
+
+class TestLowering:
+    def test_device_routing(self):
+        assert route_device("forge.sdpa") == "accel"
+        assert route_device("dot_general") == "accel"
+        assert route_device("add") == "host"
+
+    def test_structure(self, block_fn, block_args):
+        g, prog = lowered(block_fn, *block_args)
+        assert len(prog.ops) == g.num_nodes()
+        assert len(prog.input_regs) == len(g.invars)
+        # every RegRef must point at a defined register
+        defined = set(prog.input_regs) | set(prog.constants)
+        for op in prog.ops:
+            for a in op.frozen_args:
+                if isinstance(a, RegRef):
+                    assert a.reg in defined, f"undefined reg {a.reg}"
+            defined.update(op.output_regs)
+        assert all(r in defined for r in prog.output_regs)
+
+    def test_frozen_literals(self):
+        def f(x):
+            return x * 3.0
+
+        g, prog = lowered(f, np.ones((4,), np.float32), optimize=False)
+        op = prog.ops[0]
+        lits = [a for a in op.frozen_args if not isinstance(a, RegRef)]
+        assert len(lits) == 1 and float(lits[0]) == 3.0
+
+    def test_unused_consts_dropped(self):
+        def f(x):
+            dead_const = jnp.arange(128.0)  # folded then dead
+            return x + 1.0 + dead_const[0] * 0.0
+
+        g = trace_to_graph(f, np.float32(2.0)).graph
+        run_forge_passes(g)
+        prog = lower_to_rgir(g)
+        # all loaded constants must actually be referenced
+        used = set()
+        for op in prog.ops:
+            for a in op.frozen_args:
+                if isinstance(a, RegRef):
+                    used.add(a.reg)
+        used.update(prog.output_regs)
+        assert set(prog.constants) <= used
+
+
+class TestLiveness:
+    def test_intervals(self, block_fn, block_args):
+        _, prog = lowered(block_fn, *block_args)
+        live = analyze_liveness(prog)
+        n = len(prog.ops)
+        for r, (s, e) in live.intervals.items():
+            assert -1 <= s <= n and s <= e <= n
+        # dead_after never frees outputs
+        for regs in live.dead_after.values():
+            assert not (set(regs) & set(prog.output_regs))
+
+    def test_dead_after_is_last_use(self, block_fn, block_args):
+        _, prog = lowered(block_fn, *block_args)
+        live = analyze_liveness(prog)
+        for idx, regs in live.dead_after.items():
+            for r in regs:
+                # r must not be read by any later instruction
+                for later in prog.ops[idx + 1:]:
+                    assert r not in later.input_regs
+
+
+class TestLinearScan:
+    def test_reduction_on_real_graph(self, block_fn, block_args):
+        _, prog = lowered(block_fn, *block_args)
+        live = analyze_liveness(prog)
+        alloc = allocate_from_liveness(live)
+        assert alloc.n_buffers < alloc.n_vregs
+        validate_allocation(alloc, live)
+
+    @given(
+        st.lists(
+            st.tuples(st.integers(0, 60), st.integers(0, 30)),
+            min_size=1, max_size=80,
+        )
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_property_no_double_booking(self, raw):
+        """Linear scan never assigns overlapping intervals to one buffer."""
+        lifetimes = {
+            i: (s, s + d) for i, (s, d) in enumerate(raw)
+        }
+        alloc = allocate(lifetimes, pinned=set())
+        live = LivenessInfo(intervals=lifetimes, dead_after={}, pinned=set())
+        validate_allocation(alloc, live)
+
+    @given(
+        st.lists(
+            st.tuples(st.integers(0, 40), st.integers(0, 20)),
+            min_size=2, max_size=60,
+        ),
+        st.sets(st.integers(0, 59)),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_property_pinned_dedicated(self, raw, pinned_idx):
+        lifetimes = {i: (s, s + d) for i, (s, d) in enumerate(raw)}
+        pinned = {i for i in pinned_idx if i in lifetimes}
+        alloc = allocate(lifetimes, pinned=pinned)
+        # pinned regs never share their buffer with anyone
+        bufs = {}
+        for r, b in alloc.reg_to_buf.items():
+            bufs.setdefault(b, []).append(r)
+        for r in pinned:
+            assert len(bufs[alloc.reg_to_buf[r]]) == 1
+
+
+class TestScheduler:
+    def test_reduces_transitions(self, block_fn, block_args):
+        _, prog = lowered(block_fn, *block_args)
+        res = schedule(prog)
+        assert res.delta_after <= res.delta_before
+        verify_topological(prog, res.order)
+
+    def test_permutation_valid(self, block_fn, block_args):
+        _, prog = lowered(block_fn, *block_args)
+        res = schedule(prog)
+        assert sorted(res.order) == list(range(len(prog.ops)))
+
+    @given(st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_property_random_dag_topological(self, data):
+        """Scheduling any random primitive DAG preserves dependencies."""
+        n = data.draw(st.integers(2, 12))
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+
+        def f(x):
+            vals = [x]
+            for i in range(n):
+                a = vals[int(rng.integers(0, len(vals)))]
+                b = vals[int(rng.integers(0, len(vals)))]
+                op = int(rng.integers(0, 3))
+                if op == 0:
+                    vals.append(a + b)
+                elif op == 1:
+                    vals.append(a * 0.5 + jnp.tanh(b))
+                else:
+                    vals.append(a @ b)
+            return vals[-1]
+
+        g = trace_to_graph(f, np.ones((4, 4), np.float32)).graph
+        prog = lower_to_rgir(g)
+        res = schedule(prog)
+        verify_topological(prog, res.order)
+
+
+class TestExecutor:
+    def test_matches_reference(self, block_fn, block_args):
+        g = trace_to_graph(block_fn, *block_args).graph
+        run_forge_passes(g)
+        ex = build_executor(g)
+        out = ex.execute(*block_args)[0]
+        expect = block_fn(*block_args)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_reorder_equivalence(self, block_fn, block_args):
+        """Scheduled vs unscheduled execution must agree exactly."""
+        g = trace_to_graph(block_fn, *block_args).graph
+        run_forge_passes(g)
+        a = build_executor(g, reorder=True).execute(*block_args)[0]
+        b = build_executor(g, reorder=False).execute(*block_args)[0]
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_stats(self, block_fn, block_args):
+        g = trace_to_graph(block_fn, *block_args).graph
+        run_forge_passes(g)
+        ex = build_executor(g)
+        s = ex.stats
+        assert s.n_vregs > s.n_buffers
+        assert 0.0 < s.rho_buf < 1.0
+        assert s.delta_after <= s.delta_before
+        assert s.n_accel + s.n_host == s.n_instructions
+
+    def test_jit_mode(self, block_fn, block_args):
+        g = trace_to_graph(block_fn, *block_args).graph
+        run_forge_passes(g)
+        ex = build_executor(g)
+        out = jax.jit(lambda *a: ex.as_fn()(*a))(*block_args)[0]
+        expect = block_fn(*block_args)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32),
+            rtol=1e-3, atol=1e-3,
+        )
+
+    def test_differentiable(self, block_fn, block_args):
+        g = trace_to_graph(block_fn, *block_args).graph
+        run_forge_passes(g)
+        ex = build_executor(g)
+
+        def loss(*args):
+            return jnp.sum(ex.as_fn()(*args)[0] ** 2)
+
+        def loss_ref(*args):
+            return jnp.sum(block_fn(*args) ** 2)
+
+        gx = jax.grad(loss)(*[jnp.asarray(a) for a in block_args])
+        gr = jax.grad(loss_ref)(*[jnp.asarray(a) for a in block_args])
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(gr),
+                                   rtol=2e-2, atol=2e-3)
