@@ -4,16 +4,17 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (paper-table mapping):
 
-    compile_time    Table 4 + Fig. 3 (phase breakdown, depth scaling)
-    node_reduction  Table 5 + Fig. 4
-    fidelity        Table 6
-    latency         Tables 7/8/22 (interpret-unfused vs fused vs jit)
-    pass_profile    Tables 10/11
-    fgr_cei         Tables 12/13
-    ablation        Tables 14/15/17/18
-    bufalloc_sched  Tables 16/21
-    variance        Table 19
-    roofline_report §Roofline (reads the dry-run results JSON)
+    compile_time      Table 4 + Fig. 3 (phase breakdown, depth scaling)
+    node_reduction    Table 5 + Fig. 4
+    fidelity          Table 6
+    latency           Tables 7/8/22 (interpret-unfused vs fused vs jit)
+    pass_profile      Tables 10/11
+    fgr_cei           Tables 12/13
+    ablation          Tables 14/15/17/18
+    bufalloc_sched    Tables 16/21
+    dispatch_overhead interpret vs segment_jit backend + compile-cache hits
+    variance          Table 19
+    roofline_report   §Roofline (reads the dry-run results JSON)
 """
 from __future__ import annotations
 
@@ -33,6 +34,7 @@ MODULES = (
     "fgr_cei",
     "ablation",
     "bufalloc_sched",
+    "dispatch_overhead",
     "variance",
     "roofline_report",
 )

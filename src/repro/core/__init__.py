@@ -7,6 +7,8 @@ Public API:
 * :class:`AutotuningCompiler` — grid-search over {α, λ, π, ι}.
 * :mod:`repro.core.metrics` — FGR, CEI, fidelity protocol.
 """
+from .backends import Backend, available_backends, get_backend, register_backend
+from .cache import CompileCache, fingerprint_program, get_compile_cache
 from .capture import CaptureResult, graph_to_fn, trace_to_graph
 from .compiler import (
     CompilationResult,
@@ -31,6 +33,13 @@ __all__ = [
     "TuneResult",
     "CompiledExecutor",
     "build_executor",
+    "Backend",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "CompileCache",
+    "fingerprint_program",
+    "get_compile_cache",
     "Graph",
     "GLit",
     "GNode",

@@ -1,0 +1,32 @@
+"""Phase-4 pluggable backends (see DESIGN.md §Backends).
+
+Importing this package registers the built-in backends:
+
+* ``interpret``   — per-instruction Python dispatch (paper Listing 9),
+* ``segment_jit`` — one ``jax.jit`` program per device-affine segment,
+* ``reference``   — unscheduled, unallocated fidelity oracle.
+"""
+from .base import (
+    Backend,
+    ExecutorLike,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from .interpret import InterpretBackend
+from .reference import ReferenceBackend, ReferenceExecutor
+from .segment_jit import CompiledSegment, SegmentExecutor, SegmentJitBackend
+
+__all__ = [
+    "Backend",
+    "ExecutorLike",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "InterpretBackend",
+    "ReferenceBackend",
+    "ReferenceExecutor",
+    "SegmentJitBackend",
+    "SegmentExecutor",
+    "CompiledSegment",
+]

@@ -1,0 +1,28 @@
+"""The ``interpret`` backend — per-instruction Python dispatch.
+
+Wraps the classic :class:`~repro.core.executor.CompiledExecutor`: one
+Python-level dispatch per RGIR instruction over the physical buffer file.
+This is the measurable analogue of the paper's per-dispatch NPU
+round-trip world and the baseline the ``segment_jit`` backend is
+benchmarked against (benchmarks/dispatch_overhead.py).
+"""
+from __future__ import annotations
+
+from ..executor import CompiledExecutor, analyze_program
+from ..lowering import RGIRProgram
+from .base import Backend, register_backend
+
+
+@register_backend
+class InterpretBackend(Backend):
+    name = "interpret"
+
+    def build(
+        self,
+        prog: RGIRProgram,
+        *,
+        reorder: bool = True,
+        validate: bool = True,
+    ) -> CompiledExecutor:
+        analyzed = analyze_program(prog, reorder=reorder, validate=validate)
+        return CompiledExecutor(analyzed.prog, analyzed=analyzed)

@@ -1,0 +1,180 @@
+"""Content-addressed compile cache (the serve-path hot loop, DESIGN.md §Cache).
+
+The per-layer block bodies compiled by ``models/_forge.forge_body`` and
+the serve/train step builders are structurally identical across layers
+and across server restarts of the same shape: recompiling them through
+Phase 4 is pure waste.  This module fingerprints the *lowered* RGIR
+program — opcodes, device tags, register topology, avals, frozen-literal
+values, params, and device-constant values — and memoizes the backend
+build keyed by ``(backend, reorder, fingerprint)``.
+
+The fingerprint deliberately hashes constant *values* (not just shapes):
+a graph with different baked device constants is a different program.
+Weights passed as program *inputs* (the normal per-layer case) do not
+enter the key, so identical layer topologies hit regardless of their
+parameter values.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from .lowering import RegRef, RGIRProgram
+
+
+class UncacheableProgram(Exception):
+    """The program embeds values that cannot be content-addressed.
+
+    Raised when a constant or frozen arg is a live JAX tracer — e.g. a
+    block body compiled *inside* an enclosing trace (models/_forge.py)
+    whose closed-over activations become graph constants.  A tracer has
+    no stable value to hash (repr encodes only shape/dtype), and caching
+    its executor would leak the tracer past its trace, so such compiles
+    bypass the cache entirely.
+    """
+
+
+def _hash_value(h: "hashlib._Hash", v: Any) -> None:
+    """Feed one frozen literal / constant into the hasher."""
+    if isinstance(v, jax.core.Tracer):
+        raise UncacheableProgram("live tracer in program constants")
+    try:
+        a = np.asarray(v)
+        if a.dtype == object:  # pointer-array tobytes is nondeterministic
+            raise TypeError("object array")
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    except Exception:  # non-array frozen arg: fall back to repr
+        h.update(repr(v).encode())
+
+
+def _hash_obj(h: "hashlib._Hash", obj: Any) -> None:
+    """Structural hash for op params.
+
+    Arrays are hashed by dtype/shape/bytes — NEVER by repr, whose
+    element elision on large arrays would let two different programs
+    collide onto one cache key.  Containers recurse; everything else
+    (ints, strings, dimension-number tuples already covered by the
+    tuple case, sub-jaxprs) falls back to repr.
+    """
+    if isinstance(obj, (np.ndarray, np.generic)):
+        _hash_value(h, obj)
+    elif isinstance(obj, (tuple, list)):
+        h.update(b"(")
+        for x in obj:
+            _hash_obj(h, x)
+        h.update(b")")
+    elif isinstance(obj, dict):
+        h.update(b"{")
+        for k in sorted(obj, key=repr):
+            h.update(repr(k).encode())
+            _hash_obj(h, obj[k])
+        h.update(b"}")
+    elif hasattr(obj, "shape") and hasattr(obj, "dtype"):  # jax arrays
+        _hash_value(h, obj)
+    else:
+        h.update(repr(obj).encode())
+
+
+#: dtype -> encoded name; jax dtype ``__str__`` is slow and dtypes are
+#: few, so memoizing keeps the cache-hit path well under the build path
+_DTYPE_BYTES: dict = {}
+
+
+def _hash_aval(h: "hashlib._Hash", aval: Any) -> None:
+    dtype = getattr(aval, "dtype", None)
+    db = _DTYPE_BYTES.get(dtype)
+    if db is None:
+        db = _DTYPE_BYTES.setdefault(dtype, str(dtype).encode())
+    h.update(str(getattr(aval, "shape", None)).encode())
+    h.update(db)
+
+
+def fingerprint_program(prog: RGIRProgram) -> str:
+    """Canonical RGIR fingerprint: the compile-cache key material."""
+    h = hashlib.sha256()
+    h.update(f"v1|{prog.n_vregs}|{prog.input_regs}|{prog.output_regs}|".encode())
+    for r in sorted(prog.constants):
+        h.update(f"c{r}:".encode())
+        _hash_value(h, prog.constants[r])
+    for op in prog.ops:
+        h.update(f"|{op.opcode}@{op.device}".encode())
+        h.update(f"i{op.input_regs}o{op.output_regs}".encode())
+        for a in op.frozen_args:
+            if isinstance(a, RegRef):
+                h.update(f"r{a.reg}".encode())
+            else:
+                _hash_value(h, a)
+        for aval in op.out_avals:
+            _hash_aval(h, aval)
+        if op.params:
+            for k in sorted(op.params):
+                h.update(k.encode())
+                _hash_obj(h, op.params[k])
+    return h.hexdigest()
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class CompileCache:
+    """Thread-safe LRU mapping fingerprint keys to built executors."""
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[str, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    def get(self, key: str) -> Optional[Any]:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return entry
+
+    def put(self, key: str, value: Any) -> None:
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+
+#: process-wide default cache shared by every ForgeCompiler instance
+_GLOBAL_CACHE = CompileCache()
+
+
+def get_compile_cache() -> CompileCache:
+    return _GLOBAL_CACHE

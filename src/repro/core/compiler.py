@@ -21,6 +21,13 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 
+from .backends import ExecutorLike, get_backend
+from .cache import (
+    CompileCache,
+    UncacheableProgram,
+    fingerprint_program,
+    get_compile_cache,
+)
 from .capture import CaptureResult, trace_to_graph
 from .cost_model import CostBreakdown, score_graph
 from .executor import CompiledExecutor, ExecutorStats
@@ -42,13 +49,19 @@ class CompilationResult:
     capture_ms: float = 0.0
     optimize_ms: float = 0.0
     lower_ms: float = 0.0
-    backend_ms: float = 0.0  # schedule + alloc + codegen
+    backend_ms: float = 0.0  # schedule + alloc + codegen (or cache lookup)
     total_ms: float = 0.0
     # Phase-4 statistics
     executor_stats: Optional[ExecutorStats] = None
     cost: Optional[CostBreakdown] = None
     tied_weights: int = 0
     config: Optional[PipelineConfig] = None
+    # Phase-4 backend + compile-cache provenance
+    backend: str = "interpret"
+    cache_hit: bool = False
+    cache_key: Optional[str] = None
+    cache_hits: int = 0  # global counter snapshots at compile time
+    cache_misses: int = 0
 
     @property
     def node_reduction(self) -> float:
@@ -88,6 +101,18 @@ class CompilationResult:
                 f"rho_buf={s.rho_buf:.1%} delta {s.delta_before}->"
                 f"{s.delta_after} (-{s.transition_reduction:.1%})"
             )
+            seg_note = (
+                f" segments={s.n_segments} "
+                f"(compiled={s.n_compiled_segments}, "
+                f"internal_regs={s.n_internal_regs})"
+                if s.n_compiled_segments
+                else ""
+            )
+            lines.append(
+                f"backend={self.backend} "
+                f"cache={'hit' if self.cache_hit else 'miss'}"
+                f"{seg_note}"
+            )
         if self.cost:
             lines.append(f"cost score: {self.cost.score:.2f}")
         return "\n".join(lines)
@@ -98,7 +123,7 @@ class CompiledModule:
 
     def __init__(
         self,
-        executor: CompiledExecutor,
+        executor: ExecutorLike,
         capture: CaptureResult,
         result: CompilationResult,
         graph: Graph,
@@ -154,12 +179,30 @@ class CompiledModule:
 
 
 class ForgeCompiler:
-    """Four-phase compiler facade (paper Figure 1)."""
+    """Four-phase compiler facade (paper Figure 1).
 
-    def __init__(self, config: Optional[PipelineConfig] = None,
-                 *, reorder: bool = True):
+    Phase 4 is delegated to a pluggable :class:`~repro.core.backends.Backend`
+    (``interpret`` | ``segment_jit`` | ``reference``) resolved from the
+    ``backend=`` knob (argument wins over ``config.backend``), and the
+    backend build is memoized in a content-addressed compile cache keyed
+    by the lowered program's RGIR fingerprint.
+    """
+
+    def __init__(
+        self,
+        config: Optional[PipelineConfig] = None,
+        *,
+        reorder: bool = True,
+        backend: Optional[str] = None,
+        cache: Optional[CompileCache] = None,
+    ):
         self.config = config or PipelineConfig()
         self.reorder = reorder
+        self.backend_name = backend or self.config.backend
+        get_backend(self.backend_name)  # fail fast on unknown names
+        self.cache = cache if cache is not None else (
+            get_compile_cache() if self.config.compile_cache else None
+        )
 
     def compile(self, fn: Callable, *example_args: Any) -> CompiledModule:
         t_total = time.perf_counter()
@@ -179,9 +222,27 @@ class ForgeCompiler:
         prog = lower_to_rgir(g)
         lower_ms = (time.perf_counter() - t0) * 1e3
 
-        # Phase 4 — analysis + codegen
+        # Phase 4 — backend codegen (compile-cache hit: a dictionary read)
         t0 = time.perf_counter()
-        executor = CompiledExecutor(prog, reorder=self.reorder)
+        backend = get_backend(self.backend_name)
+        cache_key: Optional[str] = None
+        executor = None
+        if self.cache is not None:
+            try:
+                cache_key = (
+                    f"{self.backend_name}|reorder={int(self.reorder)}|"
+                    f"{fingerprint_program(prog)}"
+                )
+                executor = self.cache.get(cache_key)
+            except UncacheableProgram:
+                # tracer-valued constants (compile inside an enclosing
+                # trace): no stable content address — bypass the cache
+                cache_key = None
+        cache_hit = executor is not None
+        if executor is None:
+            executor = backend.build(prog, reorder=self.reorder)
+            if self.cache is not None and cache_key is not None:
+                self.cache.put(cache_key, executor)
         backend_ms = (time.perf_counter() - t0) * 1e3
 
         cost = score_graph(g, self.config.precision)
@@ -196,10 +257,20 @@ class ForgeCompiler:
             lower_ms=lower_ms,
             backend_ms=backend_ms,
             total_ms=(time.perf_counter() - t_total) * 1e3,
-            executor_stats=executor.stats,
+            # on a hit the executor is shared: report its analysis stats
+            # but not the run counters other modules accumulated on it
+            executor_stats=(
+                executor.stats.fresh_snapshot() if cache_hit
+                else executor.stats
+            ),
             cost=cost,
             tied_weights=len(cap.tied_map),
             config=self.config,
+            backend=self.backend_name,
+            cache_hit=cache_hit,
+            cache_key=cache_key,
+            cache_hits=self.cache.stats.hits if self.cache else 0,
+            cache_misses=self.cache.stats.misses if self.cache else 0,
         )
         return CompiledModule(executor, cap, result, g)
 
@@ -208,9 +279,10 @@ def forge_compile(
     fn: Callable,
     *example_args: Any,
     config: Optional[PipelineConfig] = None,
+    backend: Optional[str] = None,
     **config_kwargs: Any,
 ) -> CompiledModule:
-    """One-shot convenience API: ``forge_compile(f, x)(x2)``."""
+    """One-shot convenience API: ``forge_compile(f, x, backend="segment_jit")``."""
     if config is None:
         config = PipelineConfig(**config_kwargs)
-    return ForgeCompiler(config).compile(fn, *example_args)
+    return ForgeCompiler(config, backend=backend).compile(fn, *example_args)

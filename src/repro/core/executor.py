@@ -26,8 +26,9 @@ Two execution modes:
 """
 from __future__ import annotations
 
+import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -36,7 +37,12 @@ import numpy as np
 from .bufalloc import AllocationResult, allocate_from_liveness
 from .liveness import LivenessInfo, analyze_liveness
 from .lowering import RGIRProgram, lower_to_rgir
-from .scheduler import ScheduleResult, schedule, verify_topological
+from .scheduler import (
+    ScheduleResult,
+    compute_segments,
+    schedule,
+    verify_topological,
+)
 
 
 @dataclass
@@ -49,13 +55,90 @@ class ExecutorStats:
     rho_buf: float = 0.0
     delta_before: int = 0
     delta_after: int = 0
+    #: all-time high-water mark of the physical buffer file (max over calls)
     peak_live_buffers: int = 0
+    #: high-water mark of the most recent ``execute()`` call only
+    last_peak_live_buffers: int = 0
+    # -- segment backend statistics (zero for per-op backends) ------------
+    n_segments: int = 0
+    n_compiled_segments: int = 0
+    #: registers whose whole life is inside one segment (never hit a slot)
+    n_internal_regs: int = 0
+    #: segments dispatched by the most recent ``execute()`` call
+    last_segments_executed: int = 0
+    #: segments dispatched across all calls
+    total_segments_executed: int = 0
+
+    def __post_init__(self) -> None:
+        # per-call counters are folded in under a lock so a shared stats
+        # object stays consistent when the batched server runs concurrent
+        # requests against one compiled executor
+        self._lock = threading.Lock()
+
+    def note_call(self, peak: int, segments_executed: int = 0) -> None:
+        """Record one ``execute()`` call's per-call counters (thread-safe)."""
+        with self._lock:
+            self.last_peak_live_buffers = peak
+            self.peak_live_buffers = max(self.peak_live_buffers, peak)
+            self.last_segments_executed = segments_executed
+            self.total_segments_executed += segments_executed
 
     @property
     def transition_reduction(self) -> float:
         if self.delta_before == 0:
             return 0.0
         return 1.0 - self.delta_after / self.delta_before
+
+    def fresh_snapshot(self) -> "ExecutorStats":
+        """Copy with run counters zeroed (static analysis fields kept).
+
+        A compile-cache hit hands a *shared* executor to a new module;
+        its CompilationResult must not report execution history that
+        other modules accumulated on that executor.
+        """
+        return _dc_replace(
+            self,
+            peak_live_buffers=0,
+            last_peak_live_buffers=0,
+            last_segments_executed=0,
+            total_segments_executed=0,
+        )
+
+
+@dataclass
+class AnalyzedProgram:
+    """Phase-4 analysis product shared by every backend.
+
+    Scheduling runs *first*, then liveness and linear-scan allocation are
+    recomputed on the scheduled order (see DESIGN.md for the soundness
+    argument) — ``prog`` is already renumbered into schedule order.
+    """
+
+    prog: RGIRProgram
+    sched: ScheduleResult
+    live: LivenessInfo
+    alloc: AllocationResult
+
+
+def analyze_program(
+    prog: RGIRProgram, *, reorder: bool = True, validate: bool = True
+) -> AnalyzedProgram:
+    """Run Phase 4a-c: schedule, then liveness + allocation on that order."""
+    sched = schedule(prog)
+    if not reorder:
+        identity = list(range(len(prog.ops)))
+        sched = ScheduleResult(
+            order=identity,
+            delta_before=sched.delta_before,
+            delta_after=sched.delta_before,
+            segments=compute_segments([op.device for op in prog.ops]),
+        )
+    if validate:
+        verify_topological(prog, sched.order)
+    scheduled = prog.renumber(sched.order)
+    live = analyze_liveness(scheduled)
+    alloc = allocate_from_liveness(live)
+    return AnalyzedProgram(prog=scheduled, sched=sched, live=live, alloc=alloc)
 
 
 class CompiledExecutor:
@@ -67,22 +150,16 @@ class CompiledExecutor:
         *,
         reorder: bool = True,
         validate: bool = True,
+        analyzed: Optional[AnalyzedProgram] = None,
     ):
-        sched = schedule(prog)
-        if not reorder:
-            sched = ScheduleResult(
-                order=list(range(len(prog.ops))),
-                delta_before=sched.delta_before,
-                delta_after=sched.delta_before,
-            )
-        if validate:
-            verify_topological(prog, sched.order)
-        self.prog = prog.renumber(sched.order)
-        self.sched = sched
+        if analyzed is None:
+            analyzed = analyze_program(prog, reorder=reorder, validate=validate)
+        self.prog = analyzed.prog
+        self.sched = analyzed.sched
 
         # liveness + allocation on the *scheduled* stream (soundness)
-        self.live: LivenessInfo = analyze_liveness(self.prog)
-        self.alloc: AllocationResult = allocate_from_liveness(self.live)
+        self.live: LivenessInfo = analyzed.live
+        self.alloc: AllocationResult = analyzed.alloc
         self._r2b = self.alloc.reg_to_buf
         self.dead_after = self.live.dead_after
 
@@ -100,8 +177,9 @@ class CompiledExecutor:
             n_vregs=self.alloc.n_vregs,
             n_buffers=self.alloc.n_buffers,
             rho_buf=self.alloc.rho_buf,
-            delta_before=sched.delta_before,
-            delta_after=sched.delta_after,
+            delta_before=self.sched.delta_before,
+            delta_after=self.sched.delta_after,
+            n_segments=self.sched.n_segments,
         )
 
     # -- interpreted mode ------------------------------------------------------
@@ -128,7 +206,7 @@ class CompiledExecutor:
             # eager GC: free buffers whose register died here
             for r in self.dead_after.get(idx, ()):  # pragma: no branch
                 bufs.pop(r2b[r], None)
-        self.stats.peak_live_buffers = max(self.stats.peak_live_buffers, peak)
+        self.stats.note_call(peak)
         return [bufs[b] for b in self._output_bufs]
 
     # -- traced mode -----------------------------------------------------------
@@ -172,8 +250,14 @@ class CompiledExecutor:
 
 
 def build_executor(
-    g, *, reorder: bool = True, validate: bool = True
-) -> CompiledExecutor:
-    """Lower a Phase-2 graph and build the executor (Phases 3+4)."""
+    g,
+    *,
+    reorder: bool = True,
+    validate: bool = True,
+    backend: str = "interpret",
+):
+    """Lower a Phase-2 graph and build an executor (Phases 3+4)."""
     prog = lower_to_rgir(g)
-    return CompiledExecutor(prog, reorder=reorder, validate=validate)
+    from .backends import get_backend  # local: backends import this module
+
+    return get_backend(backend).build(prog, reorder=reorder, validate=validate)

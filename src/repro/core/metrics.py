@@ -129,3 +129,25 @@ def check_compilation_fidelity(
     mod = ForgeCompiler(config or PipelineConfig()).compile(fn, *concrete_args)
     post = mod(*concrete_args)
     return fidelity(pre, post)
+
+
+def check_backend_fidelity(
+    fn: Callable,
+    *concrete_args: Any,
+    backends: Sequence[str] = ("interpret", "segment_jit"),
+    config: Optional[PipelineConfig] = None,
+) -> Dict[str, FidelityReport]:
+    """Compare every Phase-4 backend against the ``reference`` oracle.
+
+    The reference backend executes the same lowered program with no
+    scheduling and no buffer sharing, so any divergence here isolates a
+    Phase-4 (backend-layer) bug from a Phase-1..3 one.
+    """
+    cfg = config or PipelineConfig()
+    oracle = ForgeCompiler(cfg, backend="reference").compile(fn, *concrete_args)
+    ref_out = oracle(*concrete_args)
+    reports: Dict[str, FidelityReport] = {}
+    for name in backends:
+        mod = ForgeCompiler(cfg, backend=name).compile(fn, *concrete_args)
+        reports[name] = fidelity(ref_out, mod(*concrete_args))
+    return reports

@@ -19,10 +19,39 @@ liveness/allocation on the scheduled order (recorded in DESIGN.md).
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass
-from typing import Dict, List, Set, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Set, Tuple
 
 from .lowering import RGIRProgram
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One maximal device-affine run of the *scheduled* stream.
+
+    ``[start, stop)`` indexes into the scheduled instruction order; every
+    instruction inside is on ``device``.  Segments are the unit handed to
+    a backend as a single compiled program (nGraph/oneDNN-graph style
+    partitions), so by construction ``n_segments == δ_after + 1``.
+    """
+
+    start: int  # inclusive, scheduled-order index
+    stop: int  # exclusive
+    device: str  # 'accel' | 'host'
+
+    def __len__(self) -> int:
+        return self.stop - self.start
+
+
+def compute_segments(devices: Sequence[str]) -> List[Segment]:
+    """Partition a device sequence into maximal same-device runs."""
+    segments: List[Segment] = []
+    start = 0
+    for i in range(1, len(devices) + 1):
+        if i == len(devices) or devices[i] != devices[start]:
+            segments.append(Segment(start=start, stop=i, device=devices[start]))
+            start = i
+    return segments
 
 
 @dataclass
@@ -30,12 +59,18 @@ class ScheduleResult:
     order: List[int]  # permutation: new position -> old index
     delta_before: int
     delta_after: int
+    #: maximal device-affine runs of the scheduled stream (tile [0, n))
+    segments: List[Segment] = field(default_factory=list)
 
     @property
     def transition_reduction(self) -> float:
         if self.delta_before == 0:
             return 0.0
         return 1.0 - self.delta_after / self.delta_before
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
 
 
 def _transitions(devices: List[str]) -> int:
@@ -85,8 +120,14 @@ def schedule(prog: RGIRProgram) -> ScheduleResult:
                 heapq.heappush(ready[prog.ops[j].device], j)
 
     before = _transitions([op.device for op in prog.ops])
-    after = _transitions([prog.ops[i].device for i in order])
-    return ScheduleResult(order=order, delta_before=before, delta_after=after)
+    scheduled_devices = [prog.ops[i].device for i in order]
+    after = _transitions(scheduled_devices)
+    return ScheduleResult(
+        order=order,
+        delta_before=before,
+        delta_after=after,
+        segments=compute_segments(scheduled_devices),
+    )
 
 
 def verify_topological(prog: RGIRProgram, order: List[int]) -> None:

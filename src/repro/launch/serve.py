@@ -28,9 +28,21 @@ from .steps import make_serve_step
 
 
 class BatchedServer:
-    """Fixed-slot batch server with greedy decoding."""
+    """Fixed-slot batch server with greedy decoding.
 
-    def __init__(self, cfg, params, max_len: int = 256, mode: str = "jit"):
+    ``mode='forge'`` routes the decode step through the four-phase Forge
+    pipeline and executes it on the selected Phase-4 backend
+    (``segment_jit`` by default: one XLA program per device-affine
+    segment, compile-cached across server rebuilds).
+
+    Known limitation vs ``mode='jit'``: the backend path does not yet
+    donate the KV-cache buffers (``donate_argnums``), so each decode step
+    materializes a fresh cache pytree — ~2x cache memory and extra
+    allocation churn at large ``max_len`` (see DESIGN.md §Backends).
+    """
+
+    def __init__(self, cfg, params, max_len: int = 256, mode: str = "jit",
+                 backend: str = "segment_jit"):
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)
@@ -39,6 +51,9 @@ class BatchedServer:
         if mode == "jit":
             self.serve_step = jax.jit(self.serve_step, donate_argnums=(1,))
         self.mode = mode
+        self.backend = backend
+        self.forge_module = None  # built lazily at first prefill (mode=forge)
+        self._forge_shape = None  # (batch,) the module was compiled for
 
     def prefill(self, prompts: np.ndarray):
         """Sequential prefill via decode steps (cache warm-up)."""
@@ -50,6 +65,20 @@ class BatchedServer:
         # donation-safe: identical zero-state leaves must not share buffers
         cache = dealias_tree(self.model.init_cache(self.cfg, B, self.max_len))
         tok = jnp.asarray(prompts[:, :1], jnp.int32)
+        if self.mode == "forge" and self._forge_shape != (B,):
+            # (re)compile for this batch shape — the compiled program is
+            # shape-specialized, so replaying a B=4 module on B=8 inputs
+            # would be silently wrong; identical shapes hit the compile
+            # cache, so a rebuild is a dictionary read
+            from .steps import make_forge_serve_step
+
+            self.forge_module = make_forge_serve_step(
+                self.cfg,
+                (self.params, cache, tok, jnp.asarray(0, jnp.int32)),
+                backend=self.backend,
+            )
+            self._forge_shape = (B,)
+            self.serve_step = self.forge_module
         for i in range(P):
             pos = jnp.asarray(i, jnp.int32)
             tok_i = jnp.asarray(prompts[:, i:i + 1], jnp.int32)
@@ -91,9 +120,21 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--mode", choices=["jit", "interpret"], default="jit")
+    ap.add_argument("--mode", choices=["jit", "interpret", "forge"],
+                    default="jit")
+    ap.add_argument("--backend", default="segment_jit",
+                    help="Phase-4 backend for --mode forge "
+                         "(interpret | segment_jit | reference)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.mode == "forge":
+        from repro.core import get_backend
+
+        try:  # fail fast, before paying model init
+            get_backend(args.backend)
+        except ValueError as e:
+            ap.error(str(e))
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.family == "encdec":
@@ -104,13 +145,25 @@ def main(argv=None) -> int:
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
 
-    server = BatchedServer(cfg, params, max_len=args.max_len, mode=args.mode)
+    server = BatchedServer(cfg, params, max_len=args.max_len, mode=args.mode,
+                           backend=args.backend)
     res = server.generate(prompts.astype(np.int32), args.gen)
     print(f"[serve] {cfg.name} batch={args.batch} "
           f"prefill={res['prefill_s']:.2f}s "
           f"decode mean={res['decode_ms_mean']:.1f}ms "
           f"p50={res['decode_ms_p50']:.1f} p99={res['decode_ms_p99']:.1f} "
           f"({res['tok_per_s']:.0f} tok/s)")
+    if server.forge_module is not None:
+        r = server.forge_module.result
+        s = r.executor_stats
+        from repro.core import get_compile_cache
+
+        cs = get_compile_cache().stats
+        print(f"[serve] forge backend={r.backend} cache_hit={r.cache_hit} "
+              f"segments={s.n_segments} (compiled={s.n_compiled_segments}) "
+              f"delta={s.delta_before}->{s.delta_after} "
+              f"cache hit_rate={cs.hit_rate:.1%} "
+              f"({cs.hits}h/{cs.misses}m)")
     assert res["tokens"].shape == (args.batch, args.gen)
     return 0
 

@@ -111,3 +111,23 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
         return next_tok[:, None], new_cache
 
     return serve_step
+
+
+def make_forge_serve_step(
+    cfg: ModelConfig,
+    example_args: Tuple[Any, ...],
+    *,
+    backend: str = "segment_jit",
+):
+    """Forge-compile the one-token decode step through all four phases.
+
+    Returns the :class:`~repro.core.compiler.CompiledModule` (callable on
+    the ``(params, cache, token, pos)`` signature).  Identical decode
+    graphs — same config/shapes across server restarts or batch slots —
+    hit the content-addressed compile cache, so rebuilding a server is a
+    dictionary lookup instead of a Phase-4 recompile.
+    """
+    from ..core import forge_compile
+
+    step = make_serve_step(cfg)
+    return forge_compile(step, *example_args, backend=backend)

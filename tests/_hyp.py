@@ -1,0 +1,46 @@
+"""Optional-hypothesis shim for the test suite.
+
+``hypothesis`` is an *optional* test dependency (declared under the
+``test`` extra in pyproject.toml).  When it is absent the property tests
+must skip cleanly instead of aborting collection with ModuleNotFoundError
+— which previously took the whole tier-1 suite down.  Import ``given``,
+``settings`` and ``st`` from here instead of from ``hypothesis``.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # deliberately NOT functools.wraps: the strategy parameters
+            # must not leak into the signature pytest resolves fixtures from
+            def wrapper(self=None):  # noqa: ARG001
+                pytest.skip("hypothesis not installed (pip install .[test])")
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Accepts any strategy construction; values are never drawn."""
+
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):  # noqa: ARG001
+                return None
+
+            return strategy
+
+    st = _StrategyStub()

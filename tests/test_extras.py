@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # optional dep: skips when absent
 
 from repro.kernels import ops, ref
 from repro.kernels.rms_norm import rms_norm_pallas

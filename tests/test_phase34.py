@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # optional dep: skips when absent
 
 from repro.core.bufalloc import allocate, validate_allocation, allocate_from_liveness
 from repro.core.capture import trace_to_graph

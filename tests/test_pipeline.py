@@ -5,6 +5,7 @@ CPU device, so the end-to-end check runs in a subprocess with
 ``--xla_force_host_platform_device_count=8`` (the same isolation rule as
 the dry-run: never fake device counts inside the main test process).
 """
+import os
 import subprocess
 import sys
 
@@ -56,7 +57,10 @@ class TestGPipeEndToEnd:
             [sys.executable, "-m", "repro.launch.pipeline_demo"],
             capture_output=True, text=True, timeout=300,
             env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                 "HOME": "/root"},
+                 "HOME": "/root",
+                 # force host platform: a scrubbed env must not make the
+                 # child probe for TPUs (it hangs on metadata fetch)
+                 "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
             cwd="/root/repo",
         )
         assert res.returncode == 0, res.stderr[-2000:]

@@ -1,0 +1,138 @@
+"""Scheduler property tests (ISSUE 1 satellite): corrupted orders are
+rejected, segment boundaries exactly tile the stream, and segment count
+equals δ_after + 1.
+
+Written seed-parametrized (no hypothesis dependency) so they always run
+under the tier-1 command; the hypothesis-based DAG sweep lives in
+test_phase34.py and activates when the optional dep is installed.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.capture import trace_to_graph
+from repro.core.lowering import lower_to_rgir
+from repro.core.passes import run_forge_passes
+from repro.core.scheduler import (
+    Segment,
+    compute_segments,
+    schedule,
+    verify_topological,
+)
+
+
+def random_dag_program(seed: int, n_ops: int = 10):
+    """Lower a random primitive DAG mixing host and accel ops."""
+    rng = np.random.default_rng(seed)
+
+    def f(x):
+        vals = [x]
+        for _ in range(n_ops):
+            a = vals[int(rng.integers(0, len(vals)))]
+            b = vals[int(rng.integers(0, len(vals)))]
+            op = int(rng.integers(0, 3))
+            if op == 0:
+                vals.append(a + b)  # host
+            elif op == 1:
+                vals.append(a * 0.5 + jnp.tanh(b))  # host
+            else:
+                vals.append(a @ b)  # accel (dot_general)
+        return vals[-1]
+
+    return lower_to_rgir(trace_to_graph(f, np.ones((4, 4), np.float32)).graph)
+
+
+SEEDS = list(range(25))
+
+
+def block_program(block_fn, block_args):
+    g = trace_to_graph(block_fn, *block_args).graph
+    run_forge_passes(g)
+    return lower_to_rgir(g)
+
+
+class TestVerifyTopologicalRejects:
+    def test_rejects_swapped_dependency(self, block_fn, block_args):
+        """Deliberately corrupt the order: swap a producer after its reader."""
+        prog = block_program(block_fn, block_args)
+        res = schedule(prog)
+        verify_topological(prog, res.order)  # sanity: valid as produced
+        pos = {old: new for new, old in enumerate(res.order)}
+        # find a (producer, consumer) pair and swap their slots
+        writer = {}
+        for i, op in enumerate(prog.ops):
+            for r in op.output_regs:
+                writer[r] = i
+        for i, op in enumerate(prog.ops):
+            for r in op.input_regs:
+                w = writer.get(r)
+                if w is not None and w != i:
+                    bad = list(res.order)
+                    bad[pos[w]], bad[pos[i]] = bad[pos[i]], bad[pos[w]]
+                    with pytest.raises(AssertionError, match="violates"):
+                        verify_topological(prog, bad)
+                    return
+        pytest.fail("block program has no data dependency?!")
+
+    @pytest.mark.parametrize("seed", SEEDS[:10])
+    def test_rejects_corrupted_random_dags(self, seed):
+        prog = random_dag_program(seed)
+        res = schedule(prog)
+        rng = np.random.default_rng(seed)
+        rejected = False
+        for _ in range(20):
+            bad = list(res.order)
+            i, j = rng.integers(0, len(bad), 2)
+            if i == j:
+                continue
+            bad[i], bad[j] = bad[j], bad[i]
+            try:
+                verify_topological(prog, bad)
+            except AssertionError:
+                rejected = True
+        # on a 10-op chain-ish DAG at least one random swap must violate
+        assert rejected
+
+    def test_accepts_valid_order(self):
+        prog = random_dag_program(0)
+        verify_topological(prog, list(range(len(prog.ops))))
+
+
+class TestSegmentTiling:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_segments_exactly_tile_stream(self, seed):
+        prog = random_dag_program(seed)
+        res = schedule(prog)
+        n = len(prog.ops)
+        assert res.segments[0].start == 0
+        assert res.segments[-1].stop == n
+        for a, b in zip(res.segments, res.segments[1:]):
+            assert a.stop == b.start  # contiguous, no gap, no overlap
+            assert a.device != b.device  # maximality
+        assert sum(len(s) for s in res.segments) == n
+        # every instruction inside a segment is on the segment's device
+        scheduled = prog.renumber(res.order)
+        for seg in res.segments:
+            for i in range(seg.start, seg.stop):
+                assert scheduled.ops[i].device == seg.device
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_segment_count_is_delta_plus_one(self, seed):
+        prog = random_dag_program(seed)
+        res = schedule(prog)
+        assert res.n_segments == res.delta_after + 1
+
+    def test_segment_count_on_block(self, block_fn, block_args):
+        prog = block_program(block_fn, block_args)
+        res = schedule(prog)
+        assert res.n_segments == res.delta_after + 1
+
+    def test_compute_segments_unit(self):
+        segs = compute_segments(["a", "a", "h", "h", "h", "a"])
+        assert segs == [
+            Segment(0, 2, "a"),
+            Segment(2, 5, "h"),
+            Segment(5, 6, "a"),
+        ]
+        assert compute_segments([]) == []
+        assert compute_segments(["h"]) == [Segment(0, 1, "h")]
