@@ -25,6 +25,10 @@ from repro.models import transformer as T
 WARMUP = 10
 ITERS = 50
 
+#: fast (CI smoke) mode — set by ``run.py --fast``; modules that honour
+#: it shrink their sweeps/iteration counts to seconds-scale
+FAST = False
+
 
 # --------------------------------------------------------------------------
 # model ladder: GPT-2-layout blocks at increasing depth (CPU-sized width)

@@ -13,8 +13,11 @@ Prints ``name,us_per_call,derived`` CSV rows (paper-table mapping):
     ablation          Tables 14/15/17/18
     bufalloc_sched    Tables 16/21
     dispatch_overhead interpret vs segment_jit backend + compile-cache hits
+    shape_buckets     recompile-per-shape vs bucketed ShapeKey reuse
     variance          Table 19
     roofline_report   §Roofline (reads the dry-run results JSON)
+
+``--fast`` runs CI-smoke-sized sweeps (see common.FAST).
 """
 from __future__ import annotations
 
@@ -35,6 +38,7 @@ MODULES = (
     "ablation",
     "bufalloc_sched",
     "dispatch_overhead",
+    "shape_buckets",
     "variance",
     "roofline_report",
 )
@@ -44,8 +48,14 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke mode: seconds-scale sweeps")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(MODULES)
+    if args.fast:
+        from . import common
+
+        common.FAST = True
 
     csv = Csv()
     failures = 0

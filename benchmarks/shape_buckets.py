@@ -1,0 +1,111 @@
+"""Shape buckets: recompile-per-shape vs bucketed reuse (ISSUE 2).
+
+A variable-batch workload against a shape-specialized compiler pays full
+Phase 1-4 cost on every new batch size; the ShapeKey bucketing front
+bounds that to one compile per bucket at the price of padded ("wasted")
+rows.  This benchmark sweeps batch sizes over both strategies and
+reports compiles triggered, pad waste, per-size p50 latency, and a
+bucketed-vs-exact max-abs fidelity check (the pad-mask soundness
+acceptance: ≤ 1e-5).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import CompileCache, ForgeCompiler, PipelineConfig
+from repro.models import get_model
+
+from . import common
+from .common import Csv, ladder_config
+
+SWEEP = (1, 2, 3, 5, 8, 13)
+FAST_SWEEP = (1, 2, 3, 5)
+
+
+def _forward_fn(fast: bool):
+    """(fn, args_for(B)): batch-polymorphic LM forward on the ladder."""
+    cfg = ladder_config(1 if fast else 2, d_model=64 if fast else 128)
+    cfg = cfg.with_(fuse="none", scan_layers=False, remat=False)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    S = 16 if fast else 32
+
+    def fn(p, tokens):
+        return model.apply(p, tokens, cfg)
+
+    def args_for(B: int):
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(B), (B, S), 0, cfg.vocab
+        )
+        return params, tokens
+
+    return fn, args_for
+
+
+def _p50(fn, *args, iters: int) -> float:
+    lat = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        lat.append((time.perf_counter() - t0) * 1e3)
+    return float(np.percentile(np.asarray(lat), 50))
+
+
+def run(csv: Csv) -> None:
+    fast = common.FAST
+    sweep = FAST_SWEEP if fast else SWEEP
+    iters = 3 if fast else 15
+    fn, args_for = _forward_fn(fast)
+    backend = "segment_jit"
+
+    # -- baseline: recompile Phases 1-4 for every concrete batch size ----
+    naive_compile_ms = 0.0
+    naive_out = {}
+    for B in sweep:
+        args = args_for(B)
+        mod = ForgeCompiler(
+            PipelineConfig(backend=backend), cache=CompileCache()
+        ).compile(fn, *args)
+        naive_compile_ms += mod.result.total_ms
+        naive_out[B] = np.asarray(mod(*args), np.float32)
+        csv.row(
+            f"shape_buckets/naive_B{B}",
+            _p50(mod, *args, iters=iters) * 1e3,
+            f"compile_ms={mod.result.total_ms:.0f}",
+        )
+    csv.row(
+        "shape_buckets/naive_total",
+        naive_compile_ms * 1e3,
+        f"compiles={len(sweep)};strategy=recompile-per-shape",
+    )
+
+    # -- bucketed: one program per pow2 ShapeKey, pad-and-mask -----------
+    comp = ForgeCompiler(
+        PipelineConfig(backend=backend), cache=CompileCache()
+    )
+    bm = comp.compile_bucketed(fn, in_axes=(None, 0), out_axes=0,
+                               policy="pow2")
+    max_diff = 0.0
+    for B in sweep:
+        args = args_for(B)
+        out = np.asarray(bm(*args), np.float32)
+        max_diff = max(max_diff, float(np.max(np.abs(out - naive_out[B]))))
+        csv.row(
+            f"shape_buckets/bucketed_B{B}",
+            _p50(bm, *args, iters=iters) * 1e3,
+            f"bucket={bm.shape_key_for(*args)[0]}",
+        )
+    s = bm.stats
+    assert max_diff <= 1e-5, f"pad-mask fidelity broke: {max_diff}"
+    csv.row(
+        "shape_buckets/bucketed_total",
+        s.compile_s * 1e6,
+        f"compiles={s.compiles};pad_waste={s.pad_waste:.1%};"
+        f"hit_rate={s.hit_rate:.1%};"
+        f"compile_speedup={naive_compile_ms / max(s.compile_s * 1e3, 1e-9):.2f}x;"
+        f"max_abs_vs_exact={max_diff:.2e}",
+    )

@@ -8,18 +8,36 @@ Public API:
 * :mod:`repro.core.metrics` — FGR, CEI, fidelity protocol.
 """
 from .backends import Backend, available_backends, get_backend, register_backend
-from .cache import CompileCache, fingerprint_program, get_compile_cache
+from .cache import (
+    CompileCache,
+    fingerprint_program,
+    get_compile_cache,
+    make_cache_key,
+)
 from .capture import CaptureResult, graph_to_fn, trace_to_graph
 from .compiler import (
+    BucketedModule,
     CompilationResult,
     CompiledModule,
     ForgeCompiler,
     forge_compile,
+    forge_compile_bucketed,
 )
 from .autotune import AutotuningCompiler, TuneResult
 from .executor import CompiledExecutor, build_executor
 from .graph import Graph, GLit, GNode, GVar
 from .passes import PipelineConfig, run_forge_passes
+from .shapekey import (
+    BucketPolicy,
+    BucketStats,
+    ExactPolicy,
+    LadderPolicy,
+    PadPlan,
+    Pow2Policy,
+    ShapeKey,
+    get_bucket_policy,
+    infer_poly_axes,
+)
 
 __all__ = [
     "CaptureResult",
@@ -27,8 +45,20 @@ __all__ = [
     "trace_to_graph",
     "CompilationResult",
     "CompiledModule",
+    "BucketedModule",
     "ForgeCompiler",
     "forge_compile",
+    "forge_compile_bucketed",
+    "BucketPolicy",
+    "BucketStats",
+    "ExactPolicy",
+    "LadderPolicy",
+    "PadPlan",
+    "Pow2Policy",
+    "ShapeKey",
+    "get_bucket_policy",
+    "infer_poly_axes",
+    "make_cache_key",
     "AutotuningCompiler",
     "TuneResult",
     "CompiledExecutor",

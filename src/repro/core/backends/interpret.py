@@ -5,6 +5,11 @@ Python-level dispatch per RGIR instruction over the physical buffer file.
 This is the measurable analogue of the paper's per-dispatch NPU
 round-trip world and the baseline the ``segment_jit`` backend is
 benchmarked against (benchmarks/dispatch_overhead.py).
+
+Bucketed (pad-and-mask) execution is supported through the executor's
+``execute_padded`` (PaddedExecutionMixin): per-instruction dispatch is
+shape-oblivious, so the padded rows simply ride along each op and are
+sliced off the outputs.
 """
 from __future__ import annotations
 

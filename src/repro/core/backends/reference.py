@@ -10,12 +10,12 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List
 
-from ..executor import ExecutorStats
+from ..executor import ExecutorStats, PaddedExecutionMixin
 from ..lowering import RGIRProgram
 from .base import Backend, register_backend
 
 
-class ReferenceExecutor:
+class ReferenceExecutor(PaddedExecutionMixin):
     """Straight-line evaluator over a one-slot-per-vreg register file."""
 
     def __init__(self, prog: RGIRProgram):

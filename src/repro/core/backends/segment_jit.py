@@ -29,7 +29,12 @@ import jax
 import numpy as np
 
 from ..bufalloc import allocate
-from ..executor import AnalyzedProgram, ExecutorStats, analyze_program
+from ..executor import (
+    AnalyzedProgram,
+    ExecutorStats,
+    PaddedExecutionMixin,
+    analyze_program,
+)
 from ..lowering import RGIROp, RGIRProgram
 from .base import Backend, register_backend
 
@@ -70,8 +75,15 @@ def _make_segment_fn(
     return seg_fn
 
 
-class SegmentExecutor:
-    """Segment-at-a-time executor over the physical buffer file."""
+class SegmentExecutor(PaddedExecutionMixin):
+    """Segment-at-a-time executor over the physical buffer file.
+
+    Bucketed (pad-and-mask) calls arrive via ``execute_padded``: the
+    segment programs were traced/XLA-compiled at the bucket shapes, so a
+    narrower concrete batch is padded up to the bucket extent — keeping
+    every per-segment jit cache at exactly one entry per bucket — and
+    the masked rows are sliced off the outputs.
+    """
 
     def __init__(self, analyzed: AnalyzedProgram, *, warmup: bool = True):
         self.prog = analyzed.prog

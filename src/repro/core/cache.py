@@ -121,6 +121,24 @@ def fingerprint_program(prog: RGIRProgram) -> str:
     return h.hexdigest()
 
 
+def make_cache_key(
+    backend: str,
+    reorder: bool,
+    fingerprint: str,
+    shape_key: Optional[Any] = None,
+) -> str:
+    """Compose the compile-cache key (DESIGN.md §Cache).
+
+    ``shape_key`` is the canonical bucket ShapeKey of a bucketed compile:
+    the program was captured at the *bucket* shapes, so every concrete
+    shape that pads into the bucket produces this same key — one cache
+    entry (and one backend build) serves them all.  Exact-shape compiles
+    omit the component, keeping pre-bucketing keys stable.
+    """
+    sk = f"|bucket={shape_key}" if shape_key is not None else ""
+    return f"{backend}|reorder={int(reorder)}{sk}|{fingerprint}"
+
+
 @dataclass
 class CacheStats:
     hits: int = 0

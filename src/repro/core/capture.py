@@ -60,6 +60,24 @@ class CaptureResult:
     n_inputs_raw: int
     tied_map: Dict[int, int] = field(default_factory=dict)  # dup leaf idx -> canonical idx
     capture_ms: float = 0.0
+    #: per-raw-flat-leaf batch-polymorphic axis (None = shape-fixed leaf);
+    #: recorded at capture so later phases can pad/mask along these axes
+    poly_axes: Tuple[Optional[int], ...] = ()
+    #: the concrete extent of the polymorphic axes at capture time
+    poly_extent: Optional[int] = None
+
+    def poly_axes_flat(self) -> Tuple[Optional[int], ...]:
+        """Polymorphic axes of the *executor-level* flat inputs.
+
+        The executor signature drops tied duplicate leaves; this view
+        drops their axes identically so it zips with
+        ``CompiledModule._flatten_inputs`` output.
+        """
+        if not self.poly_axes:
+            return ()
+        return tuple(
+            a for i, a in enumerate(self.poly_axes) if i not in self.tied_map
+        )
 
 
 def _sub_jaxpr(eqn) -> Optional[ClosedJaxpr]:
@@ -168,14 +186,28 @@ def trace_to_graph(
     *example_args: Any,
     tie_weights: bool = True,
     inline: bool = True,
+    poly_axes: Any = None,
 ) -> CaptureResult:
     """Capture ``fn`` as a Graph (Phase 1).
 
     ``example_args`` may be pytrees of concrete arrays or
     ``jax.ShapeDtypeStruct`` stand-ins (the dry-run path).
+
+    ``poly_axes`` (``vmap``-``in_axes``-style tree prefix) marks which
+    input dims are batch-polymorphic; the axes and their concrete extent
+    are recorded on the result for the bucketing front
+    (:class:`~repro.core.compiler.BucketedModule`) — the captured graph
+    itself is still specialized to the example (bucket) shapes.
     """
     t0 = time.perf_counter()
     flat, in_tree = jax.tree_util.tree_flatten(example_args)
+    axes_flat: Tuple[Optional[int], ...] = ()
+    poly_extent: Optional[int] = None
+    if poly_axes is not None:
+        from .shapekey import flatten_axes, infer_extent
+
+        axes_flat = tuple(flatten_axes(poly_axes, example_args))
+        poly_extent = infer_extent(flat, axes_flat)
     closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
     _, out_tree = jax.tree_util.tree_flatten(out_shape)
     out_tree = jax.tree_util.tree_structure(out_shape)
@@ -202,6 +234,8 @@ def trace_to_graph(
         n_inputs_raw=len(flat),
         tied_map=tied,
         capture_ms=(time.perf_counter() - t0) * 1e3,
+        poly_axes=axes_flat,
+        poly_extent=poly_extent,
     )
     return res
 

@@ -15,9 +15,10 @@ per-pass profile, buffer/transition statistics, phase timings).
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 
@@ -27,6 +28,7 @@ from .cache import (
     UncacheableProgram,
     fingerprint_program,
     get_compile_cache,
+    make_cache_key,
 )
 from .capture import CaptureResult, trace_to_graph
 from .cost_model import CostBreakdown, score_graph
@@ -34,6 +36,17 @@ from .executor import CompiledExecutor, ExecutorStats
 from .graph import Graph
 from .lowering import RGIRProgram, lower_to_rgir
 from .passes import PassRecord, PipelineConfig, run_forge_passes
+from .shapekey import (
+    AxisSpec,
+    BucketPolicy,
+    BucketStats,
+    PadPlan,
+    ShapeKey,
+    flatten_axes,
+    get_bucket_policy,
+    infer_extent,
+    pad_args,
+)
 
 
 @dataclass
@@ -62,6 +75,8 @@ class CompilationResult:
     cache_key: Optional[str] = None
     cache_hits: int = 0  # global counter snapshots at compile time
     cache_misses: int = 0
+    #: canonical bucket ShapeKey string for bucketed compiles (None = exact)
+    shape_key: Optional[str] = None
 
     @property
     def node_reduction(self) -> float:
@@ -108,10 +123,11 @@ class CompilationResult:
                 if s.n_compiled_segments
                 else ""
             )
+            bucket_note = f" bucket={self.shape_key}" if self.shape_key else ""
             lines.append(
                 f"backend={self.backend} "
                 f"cache={'hit' if self.cache_hit else 'miss'}"
-                f"{seg_note}"
+                f"{seg_note}{bucket_note}"
             )
         if self.cost:
             lines.append(f"cost score: {self.cost.score:.2f}")
@@ -138,6 +154,10 @@ class CompiledModule:
 
     def _flatten_inputs(self, args: Sequence[Any]) -> List[Any]:
         flat, tree = jax.tree_util.tree_flatten(tuple(args))
+        return self._filter_flat_inputs(flat, tree)
+
+    def _filter_flat_inputs(self, flat: List[Any], tree: Any) -> List[Any]:
+        """Validate a pre-flattened input list and drop tied duplicates."""
         if tree != self.capture.in_tree:
             raise TypeError(
                 f"input pytree mismatch: expected {self.capture.in_tree}, "
@@ -178,6 +198,138 @@ class CompiledModule:
         return self.executor.stats
 
 
+class BucketedModule:
+    """Shape-generalized multi-program front (DESIGN.md §Shape).
+
+    Holds a per-bucket program table: a call with concrete batch extent
+    ``n`` is dispatched by its :class:`ShapeKey` (``policy.bucket(n)``)
+    to the bucket's compiled program — compiling Phases 1-4 on the first
+    miss only — and executed pad-and-mask: inputs padded up to the bucket
+    extent along the polymorphic axes, outputs sliced back to the valid
+    rows.  The program table is bounded by the bucket policy (log-many
+    entries for ``pow2``), so a server front absorbs arbitrary batch
+    shapes with a small fixed set of compiled programs.
+    """
+
+    def __init__(
+        self,
+        compiler: "ForgeCompiler",
+        fn: Callable,
+        *,
+        in_axes: AxisSpec = 0,
+        out_axes: AxisSpec = 0,
+        policy: Union[str, BucketPolicy] = "pow2",
+        pad_mode: str = "edge",
+    ):
+        self.compiler = compiler
+        self.fn = fn
+        self.in_axes = in_axes
+        self.out_axes = out_axes
+        self.policy = get_bucket_policy(policy)
+        self.pad_mode = pad_mode
+        self.programs: Dict[ShapeKey, CompiledModule] = {}
+        self.stats = BucketStats()
+        self._out_axes_flat: Dict[ShapeKey, Tuple[Optional[int], ...]] = {}
+        self._lock = threading.Lock()
+        #: per-key build locks: concurrent first dispatches to one cold
+        #: bucket serialize instead of duplicating a seconds-scale compile
+        self._build_locks: Dict[ShapeKey, threading.Lock] = {}
+
+    # -- dispatch ---------------------------------------------------------
+
+    def shape_key_for(self, *args: Any) -> Tuple[ShapeKey, int]:
+        """(ShapeKey, concrete extent) of an argument tuple."""
+        flat, _ = jax.tree_util.tree_flatten(args)
+        return self._shape_key_flat(flat, args)
+
+    def _shape_key_flat(
+        self, flat: List[Any], args: Tuple[Any, ...]
+    ) -> Tuple[ShapeKey, int]:
+        axes = flatten_axes(self.in_axes, args)
+        n = infer_extent(flat, axes)
+        return ShapeKey(self.policy.name, self.policy.bucket(n)), n
+
+    def program_for(self, *args: Any) -> Tuple[CompiledModule, ShapeKey, int]:
+        """Resolve the bucket program; compile Phases 1-4 on first miss."""
+        key, n = self.shape_key_for(*args)
+        return self._program_for_key(key, args), key, n
+
+    def _program_for_key(
+        self, key: ShapeKey, args: Tuple[Any, ...]
+    ) -> CompiledModule:
+        with self._lock:
+            mod = self.programs.get(key)
+            if mod is None:
+                build_lock = self._build_locks.setdefault(
+                    key, threading.Lock()
+                )
+        if mod is not None:
+            self.stats.note_lookup(hit=True)
+            return mod
+        with build_lock:
+            with self._lock:
+                mod = self.programs.get(key)
+            if mod is not None:  # a concurrent dispatch built it first
+                self.stats.note_lookup(hit=True)
+                return mod
+            t0 = time.perf_counter()
+            padded = pad_args(args, self.in_axes, key.extent,
+                              mode=self.pad_mode)
+            mod = self.compiler.compile(
+                self.fn, *padded, shape_key=key, poly_axes=self.in_axes
+            )
+            with self._lock:
+                self.programs[key] = mod
+            self.stats.note_lookup(
+                hit=False, compile_s=time.perf_counter() - t0
+            )
+        return mod
+
+    def _plan_for(self, mod: CompiledModule, key: ShapeKey, n: int) -> PadPlan:
+        out_axes = self._out_axes_flat.get(key)
+        if out_axes is None:
+            # broadcast the out_axes spec over the (per-bucket constant)
+            # output tree: a dummy instance carries the structure
+            n_out = mod.capture.out_tree.num_leaves
+            dummy = jax.tree_util.tree_unflatten(
+                mod.capture.out_tree, list(range(n_out))
+            )
+            out_axes = tuple(flatten_axes(self.out_axes, dummy))
+            self._out_axes_flat[key] = out_axes
+        return PadPlan(
+            n_valid=n,
+            extent=key.extent,
+            in_axes=mod.capture.poly_axes_flat(),
+            out_axes=out_axes,
+            mode=self.pad_mode,
+        )
+
+    def __call__(self, *args: Any) -> Any:
+        # hot path: one pytree flatten feeds dispatch AND execution
+        flat, tree = jax.tree_util.tree_flatten(args)
+        key, n = self._shape_key_flat(flat, args)
+        mod = self._program_for_key(key, args)
+        flat = mod._filter_flat_inputs(flat, tree)
+        plan = self._plan_for(mod, key, n)
+        outs = mod.executor.execute_padded(flat, plan=plan)
+        self.stats.note_dispatch(key, n, key.extent)
+        return mod._unflatten_outputs(outs)
+
+    # -- transparency -----------------------------------------------------
+
+    @property
+    def last_result(self) -> Optional[CompilationResult]:
+        """The most recently compiled bucket's CompilationResult."""
+        with self._lock:
+            mods = list(self.programs.values())
+        return mods[-1].result if mods else None
+
+    def bucket_table(self) -> Dict[str, ExecutorStats]:
+        """ShapeKey string -> that bucket program's executor stats."""
+        with self._lock:
+            return {str(k): m.stats for k, m in self.programs.items()}
+
+
 class ForgeCompiler:
     """Four-phase compiler facade (paper Figure 1).
 
@@ -204,11 +356,24 @@ class ForgeCompiler:
             get_compile_cache() if self.config.compile_cache else None
         )
 
-    def compile(self, fn: Callable, *example_args: Any) -> CompiledModule:
+    def compile(
+        self,
+        fn: Callable,
+        *example_args: Any,
+        shape_key: Optional[ShapeKey] = None,
+        poly_axes: Optional[AxisSpec] = None,
+    ) -> CompiledModule:
+        """Compile ``fn`` specialized to ``example_args``'s shapes.
+
+        ``shape_key``/``poly_axes`` are set by the bucketing front
+        (:class:`BucketedModule`): the example args are then the canonical
+        *bucket* shapes, the ShapeKey joins the compile-cache key, and
+        the capture records which input dims are batch-polymorphic.
+        """
         t_total = time.perf_counter()
 
         # Phase 1 — capture
-        cap = trace_to_graph(fn, *example_args)
+        cap = trace_to_graph(fn, *example_args, poly_axes=poly_axes)
         g = cap.graph
         nodes_before = g.num_nodes()
 
@@ -229,9 +394,11 @@ class ForgeCompiler:
         executor = None
         if self.cache is not None:
             try:
-                cache_key = (
-                    f"{self.backend_name}|reorder={int(self.reorder)}|"
-                    f"{fingerprint_program(prog)}"
+                cache_key = make_cache_key(
+                    self.backend_name,
+                    self.reorder,
+                    fingerprint_program(prog),
+                    shape_key,
                 )
                 executor = self.cache.get(cache_key)
             except UncacheableProgram:
@@ -271,8 +438,34 @@ class ForgeCompiler:
             cache_key=cache_key,
             cache_hits=self.cache.stats.hits if self.cache else 0,
             cache_misses=self.cache.stats.misses if self.cache else 0,
+            shape_key=str(shape_key) if shape_key is not None else None,
         )
         return CompiledModule(executor, cap, result, g)
+
+    def compile_bucketed(
+        self,
+        fn: Callable,
+        *example_args: Any,
+        in_axes: AxisSpec = 0,
+        out_axes: AxisSpec = 0,
+        policy: Union[str, BucketPolicy] = "pow2",
+        pad_mode: str = "edge",
+    ) -> "BucketedModule":
+        """Build a shape-generalized multi-program front over ``fn``.
+
+        ``in_axes``/``out_axes`` mark the batch-polymorphic dims
+        (``vmap``-style tree prefixes); ``policy`` bounds the set of
+        compiled programs.  When ``example_args`` are given their bucket
+        is compiled eagerly (warmup); otherwise the first call per
+        bucket pays the compile.
+        """
+        mod = BucketedModule(
+            self, fn, in_axes=in_axes, out_axes=out_axes,
+            policy=policy, pad_mode=pad_mode,
+        )
+        if example_args:
+            mod.program_for(*example_args)
+        return mod
 
 
 def forge_compile(
@@ -286,3 +479,27 @@ def forge_compile(
     if config is None:
         config = PipelineConfig(**config_kwargs)
     return ForgeCompiler(config, backend=backend).compile(fn, *example_args)
+
+
+def forge_compile_bucketed(
+    fn: Callable,
+    *example_args: Any,
+    in_axes: AxisSpec = 0,
+    out_axes: AxisSpec = 0,
+    policy: Union[str, BucketPolicy] = "pow2",
+    pad_mode: str = "edge",
+    config: Optional[PipelineConfig] = None,
+    backend: Optional[str] = None,
+    **config_kwargs: Any,
+) -> BucketedModule:
+    """Shape-generalized convenience API: one program per ShapeKey bucket.
+
+    ``forge_compile_bucketed(f, x, in_axes=0, policy="pow2")`` compiles
+    ``x``'s bucket eagerly and lazily adds further buckets on demand.
+    """
+    if config is None:
+        config = PipelineConfig(**config_kwargs)
+    return ForgeCompiler(config, backend=backend).compile_bucketed(
+        fn, *example_args, in_axes=in_axes, out_axes=out_axes,
+        policy=policy, pad_mode=pad_mode,
+    )

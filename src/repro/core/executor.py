@@ -59,6 +59,16 @@ class ExecutorStats:
     peak_live_buffers: int = 0
     #: high-water mark of the most recent ``execute()`` call only
     last_peak_live_buffers: int = 0
+    #: total ``execute()`` calls on this executor (bucket accounting: the
+    #: per-bucket executors' totals sum to the BucketedModule's calls)
+    total_calls: int = 0
+    # -- pad-and-mask (bucketed execution) counters -----------------------
+    #: ``execute_padded`` calls routed through this executor
+    padded_calls: int = 0
+    #: real (valid) batch rows executed via ``execute_padded``
+    rows_valid_total: int = 0
+    #: padding rows executed via ``execute_padded`` (pad waste numerator)
+    rows_padded_total: int = 0
     # -- segment backend statistics (zero for per-op backends) ------------
     n_segments: int = 0
     n_compiled_segments: int = 0
@@ -78,10 +88,24 @@ class ExecutorStats:
     def note_call(self, peak: int, segments_executed: int = 0) -> None:
         """Record one ``execute()`` call's per-call counters (thread-safe)."""
         with self._lock:
+            self.total_calls += 1
             self.last_peak_live_buffers = peak
             self.peak_live_buffers = max(self.peak_live_buffers, peak)
             self.last_segments_executed = segments_executed
             self.total_segments_executed += segments_executed
+
+    def note_padding(self, rows_valid: int, rows_padded: int) -> None:
+        """Record one pad-and-mask call's row accounting (thread-safe)."""
+        with self._lock:
+            self.padded_calls += 1
+            self.rows_valid_total += rows_valid
+            self.rows_padded_total += rows_padded
+
+    @property
+    def pad_waste(self) -> float:
+        """Fraction of executed batch rows that were padding."""
+        total = self.rows_valid_total + self.rows_padded_total
+        return self.rows_padded_total / total if total else 0.0
 
     @property
     def transition_reduction(self) -> float:
@@ -102,7 +126,31 @@ class ExecutorStats:
             last_peak_live_buffers=0,
             last_segments_executed=0,
             total_segments_executed=0,
+            total_calls=0,
+            padded_calls=0,
+            rows_valid_total=0,
+            rows_padded_total=0,
         )
+
+
+class PaddedExecutionMixin:
+    """Pad-and-mask execution: run a bucket-shaped program on narrower
+    inputs (DESIGN.md §Shape generalization).
+
+    The program was compiled for a canonical bucket extent; a concrete
+    call with fewer batch rows is padded up along the polymorphic axes
+    (plan-supplied), executed full-width, and its outputs sliced back to
+    the valid rows — the "mask".  Pad waste is folded into the stats so
+    bucket-policy cost is observable.  Shared by every backend executor
+    (``interpret``'s CompiledExecutor, ``segment_jit``, ``reference``).
+    """
+
+    def execute_padded(
+        self, flat_inputs: Sequence[Any], *, plan: Any
+    ) -> List[Any]:
+        outs = self.execute(*plan.pad(flat_inputs))
+        self.stats.note_padding(plan.n_valid, plan.n_padded)
+        return plan.unpad(outs)
 
 
 @dataclass
@@ -141,7 +189,7 @@ def analyze_program(
     return AnalyzedProgram(prog=scheduled, sched=sched, live=live, alloc=alloc)
 
 
-class CompiledExecutor:
+class CompiledExecutor(PaddedExecutionMixin):
     """Flat instruction-stream executor over a physical buffer file."""
 
     def __init__(

@@ -131,6 +131,50 @@ def check_compilation_fidelity(
     return fidelity(pre, post)
 
 
+def check_bucketed_fidelity(
+    fn: Callable,
+    *concrete_args: Any,
+    in_axes: Any = 0,
+    out_axes: Any = 0,
+    policy: Any = "pow2",
+    config: Optional[PipelineConfig] = None,
+    backend: Optional[str] = None,
+) -> FidelityReport:
+    """Bucketed pad-and-mask execution vs exact-shape compilation.
+
+    Compiles ``fn`` twice — once specialized to the concrete shapes, once
+    through the ShapeKey bucketing front — and compares outputs.  Any
+    divergence means the padded rows were *not* inert (some op coupled
+    batch rows) or the output mask sliced the wrong axis.  Private caches
+    keep the two compiles from sharing executors.
+    """
+    from .cache import CompileCache
+
+    cfg = config or PipelineConfig()
+    exact = ForgeCompiler(cfg, backend=backend, cache=CompileCache()).compile(
+        fn, *concrete_args
+    )
+    bucketed = ForgeCompiler(
+        cfg, backend=backend, cache=CompileCache()
+    ).compile_bucketed(
+        fn, in_axes=in_axes, out_axes=out_axes, policy=policy
+    )
+    return fidelity(exact(*concrete_args), bucketed(*concrete_args))
+
+
+def bucket_report(stats: Any) -> str:
+    """One-line summary of a BucketedModule's BucketStats."""
+    per = ", ".join(
+        f"{k}:{v}" for k, v in sorted(stats.per_bucket_calls.items())
+    )
+    return (
+        f"buckets: compiles={stats.compiles} hits={stats.bucket_hits} "
+        f"(hit_rate={stats.hit_rate:.1%}) calls={stats.calls} "
+        f"pad_waste={stats.pad_waste:.1%} compile_s={stats.compile_s:.2f} "
+        f"[{per}]"
+    )
+
+
 def check_backend_fidelity(
     fn: Callable,
     *concrete_args: Any,

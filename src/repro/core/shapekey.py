@@ -1,0 +1,392 @@
+"""Shape generalization — ShapeKeys, bucket policies and pad-and-mask
+plans (DESIGN.md §Shape generalization).
+
+A production server sees a stream of request batches whose leading
+("batch-polymorphic") extents vary per tick, but the Forge pipeline
+compiles shape-specialized programs: without intervention every new
+batch size re-runs Phases 1-4.  This module makes shape specialization
+an explicit, *bounded* compilation axis:
+
+* an axis spec (``vmap``-``in_axes``-style tree prefix) marks which
+  input dims are batch-polymorphic — recorded by Phase 1
+  (:func:`repro.core.capture.trace_to_graph`);
+* a :class:`BucketPolicy` (``exact`` | ``pow2`` | fixed ``ladder``) maps
+  a concrete polymorphic extent to a canonical *bucket* extent;
+* a :class:`ShapeKey` names the bucket — the key of the compiler's
+  per-bucket program table and part of the compile-cache key, so one
+  bucket's program is shared by every concrete shape that pads into it;
+* a :class:`PadPlan` pads concrete inputs up to the bucket extent and
+  slices outputs back down ("pad and mask").  Default padding is
+  **edge replication**: padded rows are copies of the last real row, so
+  they are numerically as benign as real data (no 0/0 or log(0)
+  surprises inside norm/softmax chains).  Soundness relies on the
+  captured graph being batch-row-independent — no op reduces or shuffles
+  across the polymorphic axis — which holds for the decode/forward
+  graphs served here and is enforced empirically by the NaN-inertness
+  and bucketed-vs-exact fidelity tests (tests/test_shapekey.py).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+AxisSpec = Union[None, int, tuple, list, dict]
+
+
+# --------------------------------------------------------------------------
+# bucket policies
+# --------------------------------------------------------------------------
+
+
+class BucketPolicy:
+    """Maps a concrete polymorphic extent to its canonical bucket extent."""
+
+    name: str = "?"
+
+    def bucket(self, n: int) -> int:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<bucket policy {self.name!r}>"
+
+
+@dataclass(frozen=True, repr=False)
+class ExactPolicy(BucketPolicy):
+    """No generalization: one program per concrete extent (the baseline)."""
+
+    name: str = field(default="exact", init=False)
+
+    def bucket(self, n: int) -> int:
+        if n < 1:
+            raise ValueError(f"polymorphic extent must be >= 1, got {n}")
+        return n
+
+
+@dataclass(frozen=True, repr=False)
+class Pow2Policy(BucketPolicy):
+    """Next power of two, floored at ``min_bucket``.
+
+    The floor (default 2) trims the ladder's low end: a dedicated B=1
+    program would cost a full compile to save a single padded row, so
+    B=1 rides the B=2 bucket instead.  ``max_bucket`` (when set) is the
+    admission bound — extents beyond it raise, which is the bucketing
+    analogue of a server's max-batch rejection.
+    """
+
+    min_bucket: int = 2
+    max_bucket: Optional[int] = None
+    name: str = field(default="pow2", init=False)
+
+    def bucket(self, n: int) -> int:
+        if n < 1:
+            raise ValueError(f"polymorphic extent must be >= 1, got {n}")
+        b = max(self.min_bucket, 1 << (n - 1).bit_length())
+        if self.max_bucket is not None and b > self.max_bucket:
+            if n <= self.max_bucket:
+                return self.max_bucket
+            raise ValueError(
+                f"extent {n} exceeds max_bucket={self.max_bucket}"
+            )
+        return b
+
+
+@dataclass(frozen=True, repr=False)
+class LadderPolicy(BucketPolicy):
+    """Smallest rung of a fixed ladder that fits the extent."""
+
+    rungs: Tuple[int, ...] = ()
+    name: str = field(default="ladder", init=False)
+
+    def __post_init__(self):
+        if not self.rungs or list(self.rungs) != sorted(set(self.rungs)):
+            raise ValueError(
+                f"ladder rungs must be strictly increasing, got {self.rungs}"
+            )
+
+    def bucket(self, n: int) -> int:
+        if n < 1:
+            raise ValueError(f"polymorphic extent must be >= 1, got {n}")
+        for r in self.rungs:
+            if n <= r:
+                return r
+        raise ValueError(
+            f"extent {n} exceeds top ladder rung {self.rungs[-1]} "
+            f"(admission bound)"
+        )
+
+
+def get_bucket_policy(policy: Union[str, BucketPolicy]) -> BucketPolicy:
+    """Resolve ``"exact" | "pow2" | "ladder:4,8,16"`` or pass through."""
+    if isinstance(policy, BucketPolicy):
+        return policy
+    if policy == "exact":
+        return ExactPolicy()
+    if policy == "pow2":
+        return Pow2Policy()
+    if isinstance(policy, str) and policy.startswith("ladder:"):
+        try:
+            rungs = tuple(int(x) for x in policy[len("ladder:"):].split(","))
+        except ValueError:
+            raise ValueError(f"bad ladder spec {policy!r}") from None
+        return LadderPolicy(rungs=rungs)
+    raise ValueError(
+        f"unknown bucket policy {policy!r}; "
+        f"available: exact | pow2 | ladder:<r1,r2,...>"
+    )
+
+
+@dataclass(frozen=True)
+class ShapeKey:
+    """Canonical name of one bucket: (policy, bucket extent).
+
+    The program-table key of :class:`~repro.core.compiler.BucketedModule`
+    and the ``bucket=`` component of the compile-cache key — every
+    concrete shape that pads into the bucket shares one ShapeKey and
+    therefore one compiled program.
+    """
+
+    policy: str
+    extent: int
+
+    def __str__(self) -> str:
+        return f"{self.policy}:B{self.extent}"
+
+
+# --------------------------------------------------------------------------
+# axis specs (vmap in_axes-style tree prefixes)
+# --------------------------------------------------------------------------
+
+
+def flatten_axes(spec: AxisSpec, tree: Any) -> List[Optional[int]]:
+    """Broadcast a ``vmap``-style axis spec over ``tree``: one axis per leaf.
+
+    ``spec`` may be an int / ``None`` (applies to every leaf below), or a
+    tuple / list / dict mirroring the container structure of ``tree`` at
+    that level (dicts follow JAX's sorted-key flatten order).
+    """
+    if spec is None or isinstance(spec, int):
+        return [spec] * len(jax.tree_util.tree_leaves(tree))
+    if isinstance(spec, (tuple, list)):
+        if not isinstance(tree, (tuple, list)) or len(spec) != len(tree):
+            raise ValueError(
+                f"axis spec {type(spec).__name__}[{len(spec)}] does not "
+                f"match tree node {type(tree).__name__}"
+                f"[{len(tree) if isinstance(tree, (tuple, list)) else '?'}]"
+            )
+        out: List[Optional[int]] = []
+        for s, t in zip(spec, tree):
+            out.extend(flatten_axes(s, t))
+        return out
+    if isinstance(spec, dict):
+        if not isinstance(tree, dict) or set(spec) != set(tree):
+            raise ValueError(
+                f"axis spec keys {sorted(map(str, spec))} do not match "
+                f"tree keys {sorted(map(str, tree)) if isinstance(tree, dict) else '?'}"
+            )
+        out = []
+        for k in sorted(tree):  # JAX flattens dicts in sorted-key order
+            out.extend(flatten_axes(spec[k], tree[k]))
+        return out
+    raise ValueError(f"bad axis spec leaf {spec!r} (want int | None)")
+
+
+def infer_extent(
+    flat_leaves: Sequence[Any], flat_axes: Sequence[Optional[int]]
+) -> int:
+    """The (single) polymorphic extent of a flat input list."""
+    extent: Optional[int] = None
+    for leaf, ax in zip(flat_leaves, flat_axes):
+        if ax is None:
+            continue
+        shape = tuple(np.shape(leaf)) if not hasattr(leaf, "shape") else tuple(leaf.shape)
+        if ax >= len(shape):
+            raise ValueError(
+                f"polymorphic axis {ax} out of range for leaf shape {shape}"
+            )
+        n = int(shape[ax])
+        if extent is None:
+            extent = n
+        elif n != extent:
+            raise ValueError(
+                f"inconsistent polymorphic extents: {extent} vs {n} "
+                f"(axis {ax}, shape {shape})"
+            )
+    if extent is None:
+        raise ValueError(
+            "no batch-polymorphic inputs: the axis spec marks no leaf"
+        )
+    return extent
+
+
+def infer_poly_axes(builder: Callable[[int], Any], n1: int = 2, n2: int = 3) -> Any:
+    """Infer per-leaf batch axes of a pytree by differencing two builds.
+
+    ``builder(n)`` must return the pytree instantiated for batch ``n``
+    (e.g. ``lambda b: model.init_cache(cfg, b, max_len)``).  A leaf whose
+    shape differs between the two builds in exactly one dimension — with
+    extents ``n1`` / ``n2`` — is batch-polymorphic on that axis; a leaf
+    with identical shapes is batch-free.  Returns an axes pytree usable
+    as an ``in_axes`` / ``out_axes`` spec.
+    """
+    t1, t2 = builder(n1), builder(n2)
+    l1, td1 = jax.tree_util.tree_flatten(t1)
+    l2, td2 = jax.tree_util.tree_flatten(t2)
+    if td1 != td2:
+        raise ValueError("builder returns different tree structures")
+    axes: List[Optional[int]] = []
+    for a, b in zip(l1, l2):
+        s1, s2 = tuple(a.shape), tuple(b.shape)
+        if len(s1) != len(s2):
+            raise ValueError(f"leaf rank changed with batch: {s1} vs {s2}")
+        diff = [i for i, (x, y) in enumerate(zip(s1, s2)) if x != y]
+        if not diff:
+            axes.append(None)
+        elif len(diff) == 1 and s1[diff[0]] == n1 and s2[diff[0]] == n2:
+            axes.append(diff[0])
+        else:
+            raise ValueError(
+                f"cannot infer batch axis from shapes {s1} vs {s2}"
+            )
+    return jax.tree_util.tree_unflatten(td1, axes)
+
+
+# --------------------------------------------------------------------------
+# pad-and-mask execution plans
+# --------------------------------------------------------------------------
+
+
+def _pad_leaf(x: Any, axis: Optional[int], extent: int, mode: str) -> Any:
+    if axis is None:
+        return x
+    import jax.numpy as jnp
+
+    n = int(x.shape[axis])
+    if n == extent:
+        return x
+    if n > extent:
+        raise ValueError(f"extent {n} exceeds bucket extent {extent}")
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, extent - n)
+    if mode == "edge":
+        return jnp.pad(x, widths, mode="edge")
+    if mode == "zero":
+        return jnp.pad(x, widths, mode="constant")
+    raise ValueError(f"unknown pad mode {mode!r}")
+
+
+def _slice_leaf(x: Any, axis: Optional[int], n_valid: int) -> Any:
+    if axis is None:
+        return x
+    if int(x.shape[axis]) == n_valid:
+        return x
+    idx: List[Any] = [slice(None)] * x.ndim
+    idx[axis] = slice(0, n_valid)
+    return x[tuple(idx)]
+
+
+@dataclass(frozen=True)
+class PadPlan:
+    """Pad flat inputs to a bucket extent; mask (slice) flat outputs back.
+
+    The "mask" is output-side row slicing: padded rows execute but their
+    results never escape — see DESIGN.md for the inertness argument.
+    """
+
+    n_valid: int
+    extent: int
+    in_axes: Tuple[Optional[int], ...]
+    out_axes: Tuple[Optional[int], ...]
+    mode: str = "edge"
+
+    @property
+    def n_padded(self) -> int:
+        return self.extent - self.n_valid
+
+    def pad(self, flat_inputs: Sequence[Any]) -> List[Any]:
+        if len(flat_inputs) != len(self.in_axes):
+            raise ValueError(
+                f"pad plan expects {len(self.in_axes)} inputs, "
+                f"got {len(flat_inputs)}"
+            )
+        return [
+            _pad_leaf(x, ax, self.extent, self.mode)
+            for x, ax in zip(flat_inputs, self.in_axes)
+        ]
+
+    def unpad(self, flat_outputs: Sequence[Any]) -> List[Any]:
+        if len(flat_outputs) != len(self.out_axes):
+            raise ValueError(
+                f"pad plan expects {len(self.out_axes)} outputs, "
+                f"got {len(flat_outputs)}"
+            )
+        return [
+            _slice_leaf(x, ax, self.n_valid)
+            for x, ax in zip(flat_outputs, self.out_axes)
+        ]
+
+
+def pad_args(args: Tuple[Any, ...], in_axes: AxisSpec, extent: int,
+             *, mode: str = "edge") -> Tuple[Any, ...]:
+    """Pad a pytree argument tuple up to ``extent`` along its poly axes."""
+    flat, tree = jax.tree_util.tree_flatten(args)
+    axes = flatten_axes(in_axes, args)
+    padded = [_pad_leaf(x, ax, extent, mode) for x, ax in zip(flat, axes)]
+    return jax.tree_util.tree_unflatten(tree, padded)
+
+
+# --------------------------------------------------------------------------
+# bucket transparency counters
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class BucketStats:
+    """Bucket-hit / pad-waste counters of one :class:`BucketedModule`.
+
+    ``calls``/``rows_*``/``per_bucket_calls`` count *dispatches* (one per
+    executed program call); ``bucket_hits``/``compiles`` count program-
+    table lookups.  Updates are lock-folded because the batched server
+    dispatches from concurrent request threads.
+    """
+
+    calls: int = 0
+    bucket_hits: int = 0
+    compiles: int = 0
+    compile_s: float = 0.0
+    rows_real: int = 0
+    rows_padded: int = 0
+    per_bucket_calls: Dict[str, int] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
+
+    def note_lookup(self, *, hit: bool, compile_s: float = 0.0) -> None:
+        with self._lock:
+            if hit:
+                self.bucket_hits += 1
+            else:
+                self.compiles += 1
+                self.compile_s += compile_s
+
+    def note_dispatch(self, key: ShapeKey, n_valid: int, extent: int) -> None:
+        with self._lock:
+            self.calls += 1
+            self.rows_real += n_valid
+            self.rows_padded += extent - n_valid
+            k = str(key)
+            self.per_bucket_calls[k] = self.per_bucket_calls.get(k, 0) + 1
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.bucket_hits + self.compiles
+        return self.bucket_hits / total if total else 0.0
+
+    @property
+    def pad_waste(self) -> float:
+        """Fraction of executed batch rows that were padding."""
+        total = self.rows_real + self.rows_padded
+        return self.rows_padded / total if total else 0.0

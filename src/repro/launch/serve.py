@@ -1,22 +1,34 @@
 """Batched serving driver: prefill + decode loop over the compiled
-serve_step, with simple continuous batching (slot reuse on EOS).
+serve_step, with shape-generalized bucketing and group-level continuous
+batching (request groups of any batch size admitted without recompiling).
 
-The serve path is where the Forge pipeline earns its keep at runtime: the
-per-layer block body is compiled once (capture → fusion → RGIR →
-scheduled executor) and replayed either as one XLA program (``--mode
-jit``, the NNFactory compile-then-run analogue) or through the
-interpreted flat-dispatch executor (``--mode interpret``, the paper's
-per-dispatch world used by the latency benchmarks).
+The serve path is where the Forge pipeline earns its keep at runtime:
+the decode step is compiled once per ShapeKey *bucket* (capture →
+fusion → RGIR → scheduled executor) and replayed either as one XLA
+program (``--mode jit``, the NNFactory compile-then-run analogue) or
+through a Phase-4 backend executor (``--mode forge``).
+
+``--mode forge`` is rebuild-free: a request group of batch size B is
+admitted, padded up to ``policy.bucket(B)`` rows (edge-replicated —
+provably inert, see DESIGN.md §Shape generalization), decoded on the
+bucket's compiled program, and the padding rows sliced off the emitted
+tokens.  After :meth:`BatchedServer.warmup` no batch size within the
+bucket ladder ever re-runs Phases 1-4 — compile cost (``compile_s``) is
+reported separately from steady-state throughput so bucket reuse is
+visible from the CLI.
 
 Usage (CPU-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch forge-125m --smoke \
       --batch 4 --prompt-len 32 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --arch forge-125m --smoke \
+      --mode forge --sweep 1,2,3,5,8,13 --gen 8
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,12 +40,15 @@ from .steps import make_serve_step
 
 
 class BatchedServer:
-    """Fixed-slot batch server with greedy decoding.
+    """Bucketed batch server with greedy decoding.
 
     ``mode='forge'`` routes the decode step through the four-phase Forge
-    pipeline and executes it on the selected Phase-4 backend
-    (``segment_jit`` by default: one XLA program per device-affine
-    segment, compile-cached across server rebuilds).
+    pipeline behind a :class:`~repro.core.compiler.BucketedModule`: one
+    compiled program per ShapeKey bucket (``bucket_policy``, pow2 ladder
+    by default), dispatched by the concrete batch extent.  The KV cache
+    and token stream live at the bucket extent for the whole generation,
+    so each decode step is a plain program replay — no per-step padding,
+    no module rebuilds on batch-size transitions.
 
     Known limitation vs ``mode='jit'``: the backend path does not yet
     donate the KV-cache buffers (``donate_argnums``), so each decode step
@@ -42,7 +57,7 @@ class BatchedServer:
     """
 
     def __init__(self, cfg, params, max_len: int = 256, mode: str = "jit",
-                 backend: str = "segment_jit"):
+                 backend: str = "segment_jit", bucket_policy: str = "pow2"):
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)
@@ -52,63 +67,178 @@ class BatchedServer:
             self.serve_step = jax.jit(self.serve_step, donate_argnums=(1,))
         self.mode = mode
         self.backend = backend
-        self.forge_module = None  # built lazily at first prefill (mode=forge)
-        self._forge_shape = None  # (batch,) the module was compiled for
+        self.bucket_policy = bucket_policy
+        #: the multi-program front (mode=forge); built once, never rebuilt
+        self.bucketed = None
+        #: most recently dispatched bucket program (CLI transparency)
+        self.forge_module = None
+        self._front_lock = threading.Lock()
+
+    # -- bucketed front ---------------------------------------------------
+
+    def _ensure_bucketed(self):
+        """Build the BucketedModule front once (lazy, mode=forge only)."""
+        with self._front_lock:
+            if self.bucketed is not None:
+                return
+            from ..core import ForgeCompiler, PipelineConfig
+            from ..core.shapekey import infer_poly_axes
+
+            # per-leaf cache batch axes differ across model families
+            # (transformer: axis 1 under the layer dim; recurrent states:
+            # axis 0) — infer them by differencing two cache instantiations,
+            # abstractly (eval_shape): only shapes are read, so no buffers
+            # are allocated
+            cache_axes = infer_poly_axes(
+                lambda b: jax.eval_shape(
+                    lambda: self.model.init_cache(self.cfg, b, self.max_len)
+                )
+            )
+            step = make_serve_step(self.cfg)
+            compiler = ForgeCompiler(PipelineConfig(backend=self.backend))
+            # serve_step: (params, cache, token, pos) -> (next_tok, new_cache)
+            self.bucketed = compiler.compile_bucketed(
+                step,
+                in_axes=(None, cache_axes, 0, None),
+                out_axes=(0, cache_axes),
+                policy=self.bucket_policy,
+            )
+
+    def _bucket_extent(self, B: int) -> int:
+        self._ensure_bucketed()
+        return self.bucketed.policy.bucket(B)
+
+    def _bucket_args(self, prompts_b: np.ndarray):
+        """Bucket-shaped (cache, first-token) for a padded prompt array."""
+        from .steps import dealias_tree
+
+        Bb = prompts_b.shape[0]
+        # donation-safe: identical zero-state leaves must not share buffers
+        cache = dealias_tree(self.model.init_cache(self.cfg, Bb, self.max_len))
+        tok = jnp.asarray(prompts_b[:, :1], jnp.int32)
+        return cache, tok
+
+    def warmup(self, batch_sizes: Sequence[int]) -> float:
+        """Precompile the bucket ladder covering ``batch_sizes``.
+
+        Returns the seconds spent compiling; afterwards serving any of
+        these batch sizes never re-runs Phases 1-4.
+        """
+        if self.mode != "forge":
+            return 0.0
+        self._ensure_bucketed()
+        t0 = time.perf_counter()
+        done = set()
+        for B in batch_sizes:
+            extent = self._bucket_extent(int(B))
+            if extent in done:
+                continue
+            done.add(extent)
+            prompts_b = np.zeros((extent, 1), np.int32)
+            cache, tok = self._bucket_args(prompts_b)
+            mod, key, _ = self.bucketed.program_for(
+                self.params, cache, tok, jnp.asarray(0, jnp.int32)
+            )
+            # one throwaway step: warms the per-op eager-dispatch caches
+            # the host segments hit, so the first *served* request per
+            # bucket sees steady-state latency
+            mod(self.params, cache, tok, jnp.asarray(0, jnp.int32))
+            # keep the counter invariant (executor total_calls sums to
+            # BucketStats.calls) without skewing pad_waste: the throwaway
+            # step's rows are all padding, none are served requests
+            self.bucketed.stats.note_dispatch(key, 0, extent)
+            self.forge_module = mod
+        return time.perf_counter() - t0
+
+    # -- serving ----------------------------------------------------------
 
     def prefill(self, prompts: np.ndarray):
-        """Sequential prefill via decode steps (cache warm-up)."""
+        """Sequential prefill via decode steps (cache warm-up).
+
+        Returns bucket-shaped state in forge mode: ``(cache, next_tok,
+        pos, step_fn, key)`` where the first ``prompts.shape[0]`` rows
+        are the real requests.
+        """
         B, P = prompts.shape
         if self.cfg.family == "encdec":
             raise NotImplementedError("use examples/ for enc-dec serving")
-        from .steps import dealias_tree
 
-        # donation-safe: identical zero-state leaves must not share buffers
-        cache = dealias_tree(self.model.init_cache(self.cfg, B, self.max_len))
-        tok = jnp.asarray(prompts[:, :1], jnp.int32)
-        if self.mode == "forge" and self._forge_shape != (B,):
-            # (re)compile for this batch shape — the compiled program is
-            # shape-specialized, so replaying a B=4 module on B=8 inputs
-            # would be silently wrong; identical shapes hit the compile
-            # cache, so a rebuild is a dictionary read
-            from .steps import make_forge_serve_step
-
-            self.forge_module = make_forge_serve_step(
-                self.cfg,
-                (self.params, cache, tok, jnp.asarray(0, jnp.int32)),
-                backend=self.backend,
+        if self.mode == "forge":
+            self._ensure_bucketed()
+            extent = self._bucket_extent(B)
+            # admit the group: edge-pad the prompt rows up to the bucket
+            prompts_b = np.pad(prompts, ((0, extent - B), (0, 0)),
+                               mode="edge")
+            cache, tok = self._bucket_args(prompts_b)
+            mod, key, _ = self.bucketed.program_for(
+                self.params, cache, tok, jnp.asarray(0, jnp.int32)
             )
-            self._forge_shape = (B,)
-            self.serve_step = self.forge_module
+            self.forge_module = mod
+            step = mod
+        else:
+            from .steps import dealias_tree
+
+            cache = dealias_tree(
+                self.model.init_cache(self.cfg, B, self.max_len)
+            )
+            step, key = self.serve_step, None
+            prompts_b = prompts
+
         for i in range(P):
-            pos = jnp.asarray(i, jnp.int32)
-            tok_i = jnp.asarray(prompts[:, i:i + 1], jnp.int32)
-            next_tok, cache = self.serve_step(self.params, cache, tok_i, pos)
-        return cache, next_tok, P
+            tok_i = jnp.asarray(prompts_b[:, i:i + 1], jnp.int32)
+            next_tok, cache = step(
+                self.params, cache, tok_i, jnp.asarray(i, jnp.int32)
+            )
+            if key is not None:
+                self.bucketed.stats.note_dispatch(key, B, prompts_b.shape[0])
+        return cache, next_tok, P, step, key
 
     def generate(self, prompts: np.ndarray, n_new: int) -> Dict[str, Any]:
+        B = prompts.shape[0]
+        compile_s0 = self.bucketed.stats.compile_s if self.bucketed else 0.0
         t0 = time.perf_counter()
-        cache, tok, pos0 = self.prefill(prompts)
+        cache, tok, pos0, step, key = self.prefill(prompts)
         t_prefill = time.perf_counter() - t0
         out: List[np.ndarray] = [np.asarray(tok)]
         lat: List[float] = []
         for i in range(n_new - 1):
             t1 = time.perf_counter()
-            tok, cache = self.serve_step(
+            tok, cache = step(
                 self.params, cache, tok, jnp.asarray(pos0 + i, jnp.int32)
             )
             jax.block_until_ready(tok)
             lat.append(time.perf_counter() - t1)
             out.append(np.asarray(tok))
-        toks = np.concatenate(out, axis=1)
+            if key is not None:
+                self.bucketed.stats.note_dispatch(key, B, tok.shape[0])
+        # mask: slice the padded rows off the emitted token stream
+        toks = np.concatenate(out, axis=1)[:B]
         lat_ms = np.asarray(lat) * 1e3
+        compile_s = (
+            self.bucketed.stats.compile_s - compile_s0 if self.bucketed
+            else 0.0
+        )
         return {
             "tokens": toks,
             "prefill_s": t_prefill,
+            "compile_s": compile_s,  # Phase 1-4 time inside this call
             "decode_ms_mean": float(lat_ms.mean()) if len(lat_ms) else 0.0,
             "decode_ms_p50": float(np.percentile(lat_ms, 50)) if len(lat_ms) else 0.0,
             "decode_ms_p99": float(np.percentile(lat_ms, 99)) if len(lat_ms) else 0.0,
-            "tok_per_s": prompts.shape[0] * max(len(lat), 1) / max(sum(lat), 1e-9),
+            "tok_per_s": B * max(len(lat), 1) / max(sum(lat), 1e-9),
         }
+
+    def run_workload(self, groups: Sequence[np.ndarray], n_new: int
+                     ) -> List[Dict[str, Any]]:
+        """Serve a FIFO stream of request groups of varying batch size.
+
+        Group-level continuous batching: each group is admitted whole
+        and padded to its bucket.  (``decode_step``'s scalar write
+        position keeps the rows of one group in lockstep, so admission
+        is per group — slot-level admission needs per-row positions; see
+        ROADMAP open items.)
+        """
+        return [self.generate(g, n_new) for g in groups]
 
 
 def main(argv=None) -> int:
@@ -125,14 +255,27 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="segment_jit",
                     help="Phase-4 backend for --mode forge "
                          "(interpret | segment_jit | reference)")
+    ap.add_argument("--bucket-policy", default="pow2",
+                    help="shape bucket policy for --mode forge "
+                         "(exact | pow2 | ladder:<r1,r2,...>)")
+    ap.add_argument("--sweep", default=None,
+                    help="comma-separated batch sizes to serve as a "
+                         "workload sweep (mode=forge), e.g. 1,2,3,5,8,13")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    sweep = ([int(x) for x in args.sweep.split(",")] if args.sweep
+             else [args.batch])
+
     if args.mode == "forge":
         from repro.core import get_backend
+        from repro.core.shapekey import get_bucket_policy
 
         try:  # fail fast, before paying model init
             get_backend(args.backend)
+            policy = get_bucket_policy(args.bucket_policy)
+            for B in sweep:  # admission bounds (e.g. ladder overflow)
+                policy.bucket(B)
         except ValueError as e:
             ap.error(str(e))
 
@@ -143,28 +286,42 @@ def main(argv=None) -> int:
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key, cfg)
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
 
     server = BatchedServer(cfg, params, max_len=args.max_len, mode=args.mode,
-                           backend=args.backend)
-    res = server.generate(prompts.astype(np.int32), args.gen)
-    print(f"[serve] {cfg.name} batch={args.batch} "
-          f"prefill={res['prefill_s']:.2f}s "
-          f"decode mean={res['decode_ms_mean']:.1f}ms "
-          f"p50={res['decode_ms_p50']:.1f} p99={res['decode_ms_p99']:.1f} "
-          f"({res['tok_per_s']:.0f} tok/s)")
-    if server.forge_module is not None:
+                           backend=args.backend,
+                           bucket_policy=args.bucket_policy)
+
+    warmup_s = server.warmup(sweep)
+
+    for B in sweep:
+        prompts = rng.integers(0, cfg.vocab, (B, args.prompt_len))
+        res = server.generate(prompts.astype(np.int32), args.gen)
+        print(f"[serve] {cfg.name} batch={B} "
+              f"prefill={res['prefill_s']:.2f}s "
+              f"compile={res['compile_s']:.2f}s "
+              f"decode mean={res['decode_ms_mean']:.1f}ms "
+              f"p50={res['decode_ms_p50']:.1f} p99={res['decode_ms_p99']:.1f} "
+              f"({res['tok_per_s']:.0f} tok/s steady-state)")
+        assert res["tokens"].shape == (B, args.gen)
+
+    if server.bucketed is not None:
+        from repro.core import get_compile_cache
+        from repro.core.metrics import bucket_report
+
+        bs = server.bucketed.stats
+        cs = get_compile_cache().stats
+        # compile_s (warmup) reported separately from steady-state tok/s:
+        # after warmup every row above decoded with zero Phase 1-4 reruns
+        print(f"[serve] compile_s={bs.compile_s:.2f} "
+              f"(warmup wall={warmup_s:.2f}s) {bucket_report(bs)}")
         r = server.forge_module.result
         s = r.executor_stats
-        from repro.core import get_compile_cache
-
-        cs = get_compile_cache().stats
-        print(f"[serve] forge backend={r.backend} cache_hit={r.cache_hit} "
+        print(f"[serve] forge backend={r.backend} bucket={r.shape_key} "
+              f"cache_hit={r.cache_hit} "
               f"segments={s.n_segments} (compiled={s.n_compiled_segments}) "
               f"delta={s.delta_before}->{s.delta_after} "
               f"cache hit_rate={cs.hit_rate:.1%} "
               f"({cs.hits}h/{cs.misses}m)")
-    assert res["tokens"].shape == (args.batch, args.gen)
     return 0
 
 

@@ -7,7 +7,7 @@ decode against the KV/state cache.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -113,21 +113,8 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
     return serve_step
 
 
-def make_forge_serve_step(
-    cfg: ModelConfig,
-    example_args: Tuple[Any, ...],
-    *,
-    backend: str = "segment_jit",
-):
-    """Forge-compile the one-token decode step through all four phases.
-
-    Returns the :class:`~repro.core.compiler.CompiledModule` (callable on
-    the ``(params, cache, token, pos)`` signature).  Identical decode
-    graphs — same config/shapes across server restarts or batch slots —
-    hit the content-addressed compile cache, so rebuilding a server is a
-    dictionary lookup instead of a Phase-4 recompile.
-    """
-    from ..core import forge_compile
-
-    step = make_serve_step(cfg)
-    return forge_compile(step, *example_args, backend=backend)
+# NOTE: the exact-shape forge serve-step builder that used to live here
+# (make_forge_serve_step) was removed with the rebuild-per-shape server:
+# launch/serve.py now compiles the decode step behind a ShapeKey
+# bucketing front (ForgeCompiler.compile_bucketed), so batch-size
+# transitions dispatch instead of rebuilding.

@@ -42,8 +42,14 @@ class TestRegistry:
             assert expected in names
 
     def test_unknown_backend_raises(self):
-        with pytest.raises(ValueError, match="unknown backend"):
+        """Unknown names raise ValueError (not KeyError) and the message
+        lists every registered backend so the fix is self-evident."""
+        with pytest.raises(ValueError, match="unknown backend") as ei:
             get_backend("tpu_superfast")
+        assert not isinstance(ei.value, KeyError)
+        msg = str(ei.value)
+        for name in available_backends():
+            assert name in msg
         with pytest.raises(ValueError, match="unknown backend"):
             ForgeCompiler(backend="nope")
 

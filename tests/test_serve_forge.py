@@ -1,4 +1,5 @@
-"""Serve-path forge mode: backend integration + batch-shape safety."""
+"""Serve-path forge mode: bucketed shape generalization + backend parity
+(ISSUE 2 acceptance criteria)."""
 import jax
 import numpy as np
 import pytest
@@ -22,27 +23,85 @@ def _prompts(batch, n=6, seed=0):
 
 
 class TestServeForgeMode:
-    def test_forge_matches_jit_tokens(self, smoke_setup):
+    def test_backend_token_parity(self, smoke_setup):
+        """Smoke acceptance: generated tokens are identical across the
+        interpret and segment_jit backends — and match the exact-shape
+        jit server even though B=3 pads into the B=4 bucket."""
         cfg, params = smoke_setup
-        p = _prompts(2)
-        forge = BatchedServer(cfg, params, max_len=32, mode="forge",
-                              backend="segment_jit")
+        p = _prompts(3)
+        toks = {}
+        for backend in ("interpret", "segment_jit"):
+            srv = BatchedServer(cfg, params, max_len=32, mode="forge",
+                                backend=backend)
+            toks[backend] = srv.generate(p, 3)["tokens"]
+            assert srv.forge_module.result.backend == backend
+            assert srv.forge_module.result.shape_key == "pow2:B4"
+        np.testing.assert_array_equal(toks["interpret"], toks["segment_jit"])
         jit = BatchedServer(cfg, params, max_len=32, mode="jit")
-        tf = forge.generate(p, 3)["tokens"]
-        tj = jit.generate(p, 3)["tokens"]
-        np.testing.assert_array_equal(tf, tj)
-        assert forge.forge_module.result.backend == "segment_jit"
+        np.testing.assert_array_equal(toks["segment_jit"],
+                                      jit.generate(p, 3)["tokens"])
 
-    def test_batch_shape_change_recompiles(self, smoke_setup):
-        """Regression: a B=2-specialized module must not be replayed on B=4."""
+    def test_sweep_no_rebuilds_after_warmup(self, smoke_setup):
+        """Acceptance: the {1,2,3,5,8,13} sweep under pow2 triggers ≤ 4
+        compilations, and zero forge rebuilds/compiles after warmup."""
+        cfg, params = smoke_setup
+        sweep = (1, 2, 3, 5, 8, 13)
+        server = BatchedServer(cfg, params, max_len=32, mode="forge",
+                               backend="segment_jit", bucket_policy="pow2")
+        warmup_s = server.warmup(sweep)
+        assert warmup_s > 0
+        front = server.bucketed
+        compiles0 = front.stats.compiles
+        assert compiles0 <= 4  # vs 6 rebuild-per-shape compiles before
+        for res in server.run_workload([_prompts(B) for B in sweep], 2):
+            assert res["compile_s"] == 0.0  # steady state: no Phase 1-4
+        assert server.bucketed is front  # the front is never rebuilt
+        assert front.stats.compiles == compiles0
+        for B, prompts in zip(sweep, [_prompts(B) for B in sweep]):
+            assert server.generate(prompts, 2)["tokens"].shape == (B, 2)
+        assert front.stats.compiles == compiles0
+        assert front.stats.pad_waste > 0  # B=3,5,13 rode padded buckets
+
+    def test_batch_shape_change_reuses_bucket(self, smoke_setup):
+        """Regression (inverted from ISSUE 1): a batch-size transition
+        must dispatch by ShapeKey, not rebuild the forge module."""
         cfg, params = smoke_setup
         server = BatchedServer(cfg, params, max_len=32, mode="forge",
                                backend="segment_jit")
         t2 = server.generate(_prompts(2), 3)["tokens"]
-        mod2 = server.forge_module
-        t4 = server.generate(_prompts(4), 3)["tokens"]
-        assert server.forge_module is not mod2  # rebuilt for new shape
-        assert t4.shape == (4, 3)
-        # same shape again -> module reused
-        server.generate(_prompts(4, seed=1), 3)
         assert t2.shape == (2, 3)
+        front = server.bucketed
+        compiles = front.stats.compiles
+        t3 = server.generate(_prompts(3), 3)["tokens"]  # B=3 -> B4 bucket
+        assert t3.shape == (3, 3)
+        assert server.bucketed is front
+        assert front.stats.compiles == compiles + 1  # new bucket only
+        t4 = server.generate(_prompts(4, seed=1), 3)["tokens"]  # B4 again
+        assert t4.shape == (4, 3)
+        assert front.stats.compiles == compiles + 1  # bucket reused
+
+    def test_bucketed_matches_exact_shape_outputs(self, smoke_setup):
+        """Acceptance: bucketed outputs match exact-shape outputs within
+        1e-5 max-abs on the reference model's decode logits."""
+        from repro.core.metrics import check_bucketed_fidelity
+        from repro.core.shapekey import infer_poly_axes
+        from repro.launch.steps import make_serve_step
+
+        cfg, params = smoke_setup
+        model = get_model(cfg)
+        import jax.numpy as jnp
+
+        cache_axes = infer_poly_axes(
+            lambda b: model.init_cache(cfg, b, 16)
+        )
+        step = make_serve_step(cfg)
+        B = 3
+        cache = model.init_cache(cfg, B, 16)
+        tok = jnp.asarray(_prompts(B)[:, :1], jnp.int32)
+        rep = check_bucketed_fidelity(
+            step, params, cache, tok, jnp.asarray(0, jnp.int32),
+            in_axes=(None, cache_axes, 0, None),
+            out_axes=(0, cache_axes),
+            backend="segment_jit",
+        )
+        assert rep.max_abs_diff <= 1e-5

@@ -1,0 +1,346 @@
+"""Shape generalization: bucket policies, ShapeKey dispatch, pad-and-mask
+soundness, bucket counters (ISSUE 2 acceptance criteria)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompileCache,
+    ForgeCompiler,
+    PipelineConfig,
+    forge_compile,
+    forge_compile_bucketed,
+    get_bucket_policy,
+)
+from repro.core.shapekey import (
+    ExactPolicy,
+    LadderPolicy,
+    PadPlan,
+    Pow2Policy,
+    ShapeKey,
+    flatten_axes,
+    infer_extent,
+    infer_poly_axes,
+    pad_args,
+)
+
+from _hyp import given, settings, st  # optional dep: skips when absent
+from conftest import make_block_args, make_block_fn
+
+#: block_fn's batch-polymorphic signature: x is (B, S, E), weights fixed
+BLOCK_IN_AXES = (0,) + (None,) * 7
+
+
+def _block_args(B, seed=0):
+    return make_block_args(np.random.default_rng(seed), B=B)
+
+
+# --------------------------------------------------------------------------
+# bucket policies
+# --------------------------------------------------------------------------
+
+
+class TestPolicies:
+    def test_pow2_ladder(self):
+        p = Pow2Policy()
+        assert [p.bucket(n) for n in (1, 2, 3, 5, 8, 13)] == [2, 2, 4, 8, 8, 16]
+
+    def test_pow2_min_and_max(self):
+        assert Pow2Policy(min_bucket=4).bucket(1) == 4
+        assert Pow2Policy(max_bucket=8).bucket(7) == 8
+        with pytest.raises(ValueError, match="max_bucket"):
+            Pow2Policy(max_bucket=8).bucket(9)
+
+    def test_exact_is_identity(self):
+        assert ExactPolicy().bucket(7) == 7
+
+    def test_ladder(self):
+        p = get_bucket_policy("ladder:4,8,16")
+        assert isinstance(p, LadderPolicy)
+        assert [p.bucket(n) for n in (1, 4, 5, 16)] == [4, 4, 8, 16]
+        with pytest.raises(ValueError, match="admission"):
+            p.bucket(17)
+
+    def test_ladder_must_increase(self):
+        with pytest.raises(ValueError, match="increasing"):
+            LadderPolicy(rungs=(8, 4))
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError, match="unknown bucket policy"):
+            get_bucket_policy("fib")
+        with pytest.raises(ValueError, match="bad ladder"):
+            get_bucket_policy("ladder:x,y")
+
+    def test_extent_must_be_positive(self):
+        for p in (ExactPolicy(), Pow2Policy(), LadderPolicy(rungs=(4,))):
+            with pytest.raises(ValueError):
+                p.bucket(0)
+
+    def test_shape_key_str(self):
+        assert str(ShapeKey("pow2", 8)) == "pow2:B8"
+
+
+# --------------------------------------------------------------------------
+# axis specs + padding plans
+# --------------------------------------------------------------------------
+
+
+class TestAxisSpecs:
+    def test_scalar_spec_broadcasts(self):
+        tree = ({"a": np.zeros((2, 3)), "b": [np.zeros(2)] * 2},)
+        assert flatten_axes(0, tree) == [0, 0, 0]
+        assert flatten_axes(None, tree) == [None, None, None]
+
+    def test_per_arg_spec(self):
+        args = (np.zeros((4, 2)), {"k": np.zeros((3, 4)), "v": np.zeros((3, 4))})
+        assert flatten_axes((0, 1), args) == [0, 1, 1]
+        assert flatten_axes((0, {"k": 1, "v": None}), args) == [0, 1, None]
+
+    def test_spec_mismatch_raises(self):
+        with pytest.raises(ValueError, match="does not match"):
+            flatten_axes((0, 0), (np.zeros(2),))
+        with pytest.raises(ValueError, match="keys"):
+            flatten_axes({"a": 0}, {"b": np.zeros(2)})
+
+    def test_infer_extent(self):
+        flat = [np.zeros((5, 2)), np.zeros((3, 5)), np.zeros(7)]
+        assert infer_extent(flat, [0, 1, None]) == 5
+        with pytest.raises(ValueError, match="inconsistent"):
+            infer_extent(flat, [0, 0, None])
+        with pytest.raises(ValueError, match="no batch-polymorphic"):
+            infer_extent(flat, [None, None, None])
+
+    def test_infer_poly_axes_from_builder(self):
+        def build(b):
+            return {"k": np.zeros((3, b, 4)), "pos": np.zeros((4,)),
+                    "h": np.zeros((b, 8))}
+
+        axes = infer_poly_axes(build)
+        assert axes == {"k": 1, "pos": None, "h": 0}
+
+    def test_pad_plan_roundtrip(self):
+        plan = PadPlan(n_valid=3, extent=8, in_axes=(0, None),
+                       out_axes=(0,), mode="edge")
+        x = np.arange(6, dtype=np.float32).reshape(3, 2)
+        w = np.ones((2, 2), np.float32)
+        px, pw = plan.pad([x, w])
+        assert px.shape == (8, 2) and pw is w
+        # edge mode replicates the last real row into the padding
+        np.testing.assert_array_equal(
+            np.asarray(px)[3:], np.tile(np.asarray(px)[2], (5, 1))
+        )
+        (back,) = plan.unpad([px])
+        np.testing.assert_array_equal(np.asarray(back), x)
+
+    def test_pad_args_tree(self):
+        args = (np.ones((3, 2)), {"s": np.ones((3, 4))}, np.float32(2.0))
+        out = pad_args(args, (0, 0, None), 4)
+        assert out[0].shape == (4, 2) and out[1]["s"].shape == (4, 4)
+
+
+# --------------------------------------------------------------------------
+# bucketed compilation: dispatch, fidelity, counters
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["interpret", "segment_jit"])
+class TestBucketedCompile:
+    def test_sweep_matches_exact_within_tol(self, block_fn, backend):
+        """Acceptance: bucketed pad-and-mask ≡ exact-shape within 1e-5,
+        and the {1,2,3,5,8,13} sweep triggers ≤ 4 compiles under pow2."""
+        comp = ForgeCompiler(
+            PipelineConfig(backend=backend), cache=CompileCache()
+        )
+        bm = comp.compile_bucketed(
+            block_fn, in_axes=BLOCK_IN_AXES, out_axes=0, policy="pow2"
+        )
+        for B in (1, 2, 3, 5, 8, 13):
+            args = _block_args(B, seed=B)
+            exact = forge_compile(block_fn, *args, backend=backend)(*args)
+            got = bm(*args)
+            assert got.shape == exact.shape
+            diff = np.max(np.abs(np.asarray(got, np.float32)
+                                 - np.asarray(exact, np.float32)))
+            assert diff <= 1e-5, f"B={B}: {diff}"
+        assert bm.stats.compiles <= 4
+        assert bm.stats.calls == 6
+
+    def test_shape_key_dispatch(self, block_fn, backend):
+        comp = ForgeCompiler(
+            PipelineConfig(backend=backend), cache=CompileCache()
+        )
+        bm = comp.compile_bucketed(block_fn, in_axes=BLOCK_IN_AXES)
+        key5, n5 = bm.shape_key_for(*_block_args(5))
+        key7, n7 = bm.shape_key_for(*_block_args(7))
+        assert (n5, n7) == (5, 7)
+        assert key5 == key7 == ShapeKey("pow2", 8)
+        # both concrete shapes resolve to the SAME compiled program
+        m5, _, _ = bm.program_for(*_block_args(5))
+        m7, _, _ = bm.program_for(*_block_args(7))
+        assert m5 is m7
+        assert bm.stats.compiles == 1 and bm.stats.bucket_hits == 1
+
+    def test_bucket_program_shared_via_compile_cache(self, block_fn, backend):
+        """Two fronts (server restarts) share one cache entry per bucket:
+        the key embeds the canonical bucket ShapeKey, not the concrete
+        shape that first padded into it."""
+        cache = CompileCache()
+        comp = ForgeCompiler(PipelineConfig(backend=backend), cache=cache)
+        bm1 = comp.compile_bucketed(block_fn, in_axes=BLOCK_IN_AXES)
+        bm1(*_block_args(5))  # compiles bucket B8 (padded from B=5)
+        bm2 = comp.compile_bucketed(block_fn, in_axes=BLOCK_IN_AXES)
+        bm2(*_block_args(7))  # pads into the same B8 bucket
+        m1, _, _ = bm1.program_for(*_block_args(5))
+        m2, _, _ = bm2.program_for(*_block_args(7))
+        assert m2.result.cache_hit
+        assert m2.result.cache_key == m1.result.cache_key
+        assert "bucket=pow2:B8" in m2.result.cache_key
+        assert m2.executor is m1.executor
+
+    def test_counters_sum_to_calls(self, block_fn, backend):
+        """Acceptance: per-bucket ExecutorStats totals sum to the front's
+        dispatch count, and pad-waste rows are accounted exactly."""
+        comp = ForgeCompiler(
+            PipelineConfig(backend=backend), cache=CompileCache()
+        )
+        bm = comp.compile_bucketed(block_fn, in_axes=BLOCK_IN_AXES)
+        sizes = [1, 3, 3, 5, 2, 8, 6]
+        for i, B in enumerate(sizes):
+            bm(*_block_args(B, seed=i))
+        s = bm.stats
+        assert s.calls == len(sizes)
+        assert sum(m.stats.total_calls for m in bm.programs.values()) == s.calls
+        assert sum(m.stats.padded_calls for m in bm.programs.values()) == s.calls
+        assert s.rows_real == sum(sizes)
+        pad = sum(bm.policy.bucket(B) - B for B in sizes)
+        assert s.rows_padded == pad
+        assert abs(s.pad_waste - pad / (pad + sum(sizes))) < 1e-9
+        rows = sum(
+            m.stats.rows_valid_total + m.stats.rows_padded_total
+            for m in bm.programs.values()
+        )
+        assert rows == s.rows_real + s.rows_padded
+
+    def test_concurrent_cold_bucket_compiles_once(self, block_fn, backend):
+        """Regression: concurrent first dispatches to one cold bucket must
+        serialize on the per-key build lock — one compile, no dropped
+        compile_s, identical outputs."""
+        import threading
+
+        comp = ForgeCompiler(
+            PipelineConfig(backend=backend), cache=CompileCache()
+        )
+        bm = comp.compile_bucketed(block_fn, in_axes=BLOCK_IN_AXES)
+        args = _block_args(3)
+        outs, errs = [], []
+
+        def worker():
+            try:
+                outs.append(np.asarray(bm(*args), np.float32))
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        assert bm.stats.compiles == 1 and len(bm.programs) == 1
+        assert bm.stats.bucket_hits == 3 and bm.stats.calls == 4
+        assert bm.stats.compile_s > 0
+        for o in outs[1:]:
+            np.testing.assert_array_equal(o, outs[0])
+
+    def test_exact_policy_no_padding(self, block_fn, backend):
+        comp = ForgeCompiler(
+            PipelineConfig(backend=backend), cache=CompileCache()
+        )
+        bm = comp.compile_bucketed(
+            block_fn, in_axes=BLOCK_IN_AXES, policy="exact"
+        )
+        bm(*_block_args(3))
+        bm(*_block_args(5))
+        assert bm.stats.compiles == 2  # exact: one program per shape
+        assert bm.stats.rows_padded == 0
+
+
+class TestMaskedRowsInert:
+    def test_nan_rows_do_not_leak(self, block_fn):
+        """Inertness proof: garbage (NaN) padding rows must not perturb
+        the real rows — any op coupling batch rows would smear the NaNs
+        into them and fail this test."""
+        B, extent = 3, 4
+        args = _block_args(B)
+        exact = forge_compile(block_fn, *args, backend="segment_jit")(*args)
+        # bucket-shaped program via the front
+        comp = ForgeCompiler(
+            PipelineConfig(backend="segment_jit"), cache=CompileCache()
+        )
+        bm = comp.compile_bucketed(
+            block_fn, in_axes=BLOCK_IN_AXES,
+            policy=get_bucket_policy("ladder:4"),
+        )
+        mod, key, _ = bm.program_for(*args)
+        assert key.extent == extent
+        x = np.pad(args[0], ((0, extent - B), (0, 0), (0, 0)),
+                   constant_values=np.nan)
+        outs = mod(x, *args[1:])
+        real = np.asarray(outs, np.float32)[:B]
+        np.testing.assert_allclose(real, np.asarray(exact, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+        # the garbage stayed in its rows
+        assert np.isnan(np.asarray(outs)[B:]).any()
+
+    def test_capture_records_poly_axes(self, block_fn):
+        comp = ForgeCompiler(cache=CompileCache())
+        bm = comp.compile_bucketed(block_fn, in_axes=BLOCK_IN_AXES)
+        mod, key, _ = bm.program_for(*_block_args(3))
+        assert mod.capture.poly_axes == BLOCK_IN_AXES
+        assert mod.capture.poly_extent == key.extent == 4
+        assert mod.result.shape_key == "pow2:B4"
+
+
+# --------------------------------------------------------------------------
+# hypothesis property tests (skip cleanly when hypothesis is absent)
+# --------------------------------------------------------------------------
+
+
+class TestBucketedProperties:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=1, max_value=9),
+           st.integers(min_value=0, max_value=3))
+    def test_padded_matches_exact_random_batch(self, B, seed):
+        """Property (acceptance): pad-and-mask bucketed execution matches
+        exact-shape compilation within fp tolerance for random batches."""
+        fn = make_block_fn()
+        args = _block_args(B, seed=seed)
+        exact = forge_compile(fn, *args, backend="segment_jit")(*args)
+        bm = forge_compile_bucketed(
+            fn, *args, in_axes=BLOCK_IN_AXES, backend="segment_jit"
+        )
+        got = bm(*args)
+        diff = np.max(np.abs(np.asarray(got, np.float32)
+                             - np.asarray(exact, np.float32)))
+        assert diff <= 1e-5
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.lists(st.integers(min_value=1, max_value=12),
+                    min_size=1, max_size=6))
+    def test_bucket_counters_sum_to_total_calls(self, sizes):
+        """Property (acceptance): ExecutorStats bucket counters sum to
+        the front's total dispatches; pow2 bounds the program count."""
+        fn = make_block_fn()
+        comp = ForgeCompiler(
+            PipelineConfig(backend="interpret"), cache=CompileCache()
+        )
+        bm = comp.compile_bucketed(fn, in_axes=BLOCK_IN_AXES)
+        for i, B in enumerate(sizes):
+            bm(*_block_args(B, seed=i))
+        s = bm.stats
+        assert s.calls == len(sizes)
+        assert sum(m.stats.total_calls for m in bm.programs.values()) == s.calls
+        assert s.compiles == len(bm.programs)
+        assert s.compiles <= len({bm.policy.bucket(B) for B in sizes})
+        assert 0.0 <= s.pad_waste < 1.0
