@@ -1,25 +1,66 @@
-"""Dispatch overhead: ``interpret`` vs ``segment_jit`` backends (ISSUE 1).
+"""Dispatch overhead: ``interpret`` vs ``segment_jit`` backends (ISSUE 1),
+zero-copy replay + donation + per-bucket pooling (ISSUE 3).
 
 The paper's 18.2-35.7% latency-reduction claim reduces to a mechanism:
 per-call dispatch cost scales with the number of *dispatches*, which the
 segment backend cuts from N instructions to δ_after + 1 device-affine
 segments.  This benchmark measures both backends end-to-end on the
-GPT-2-layout ladder and reports the compile-cache hit rate on repeated
-compiles of the identical per-layer graph (the serve-path hot loop).
+GPT-2-layout ladder, reports the compile-cache hit rate on repeated
+compiles of the identical per-layer graph (the serve-path hot loop),
+and audits the ISSUE-3 steady-state replay economics:
+
+* **flat dispatch plans** — steady-state ``segment_jit`` replay performs
+  zero per-call Python-side buffer-file allocations (``file_pool``
+  misses stay flat after the first call; ``sys.getallocatedblocks``
+  delta reported per call);
+* **donation** — accel segments on the serve decode graph run with
+  non-empty ``donate_argnums`` (dying live-ins handed to XLA in place);
+* **per-bucket buffer pooling** — on the ``{1,2,3,5,8,13}`` serve sweep
+  every post-warmup admission reuses a pooled KV cache (100% pool hit
+  rate), with bucketed decode fidelity vs the ``reference`` backend
+  within 1e-5.
 """
 from __future__ import annotations
 
+import sys
 import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core import CompileCache, ForgeCompiler, PipelineConfig
 
+from . import common
 from .common import Csv, ladder_config, lm_forward_fn, time_callable
 
 LADDER = (2, 4, 8)
+FAST_LADDER = (2,)
+SWEEP = (1, 2, 3, 5, 8, 13)
 
 
-def run(csv: Csv) -> None:
-    for L in LADDER:
+def _alloc_blocks_per_call(mod, args, iters: int = 20) -> float:
+    """Mean ``sys.getallocatedblocks`` delta across steady-state calls.
+
+    Python-object noise (temporary lists, jax output Arrays) keeps this
+    above a literal zero; the point is the *buffer-file* term is gone —
+    the number no longer scales with n_buffers, and ``file_pool_misses``
+    stays flat, which is asserted separately.
+    """
+    for _ in range(3):  # steady the pools/caches before measuring
+        mod(*args)
+    deltas = []
+    for _ in range(iters):
+        before = sys.getallocatedblocks()
+        mod(*args)
+        deltas.append(sys.getallocatedblocks() - before)
+    return float(np.mean(deltas))
+
+
+def _ladder_section(csv: Csv, fast: bool) -> None:
+    ladder = FAST_LADDER if fast else LADDER
+    kw = {"warmup": 2, "iters": 5} if fast else {}
+    for L in ladder:
         fn, args = lm_forward_fn(ladder_config(L))
         cache = CompileCache()
         interp = ForgeCompiler(
@@ -29,8 +70,8 @@ def run(csv: Csv) -> None:
             PipelineConfig(backend="segment_jit"), cache=cache
         ).compile(fn, *args)
 
-        t_int = time_callable(interp, *args)
-        t_seg = time_callable(seg, *args)
+        t_int = time_callable(interp, *args, **kw)
+        t_seg = time_callable(seg, *args, **kw)
         s = seg.stats
         speedup = t_int["mean_ms"] / max(t_seg["mean_ms"], 1e-9)
         csv.row(
@@ -45,11 +86,30 @@ def run(csv: Csv) -> None:
             f"p50={t_seg['p50_ms']:.2f};p99={t_seg['p99_ms']:.2f};"
             f"dispatches={s.n_segments};compiled={s.n_compiled_segments};"
             f"internal_regs={s.n_internal_regs};"
+            f"donating_segments={s.n_donating_segments};"
+            f"donated_args={s.n_donated_args};"
             f"speedup_vs_interpret={speedup:.2f}x",
         )
 
+        # zero-copy replay: after warmup the buffer file comes from the
+        # executor pool — misses must stay flat across steady-state calls
+        misses_before = s.file_pool_misses
+        alloc_delta = _alloc_blocks_per_call(seg, args,
+                                             iters=5 if fast else 20)
+        assert s.file_pool_misses == misses_before, (
+            "steady-state replay materialized a fresh buffer file"
+        )
+        csv.row(
+            f"dispatch_overhead/ladder_{L}L_flat_plan",
+            alloc_delta,
+            f"alloc_blocks_per_call={alloc_delta:.1f};"
+            f"file_pool_hits={s.file_pool_hits};"
+            f"file_pool_misses={s.file_pool_misses};"
+            f"n_buffers={s.n_buffers}",
+        )
+
         # compile-cache hit rate on repeated compiles of an identical graph
-        n_repeat = 5
+        n_repeat = 2 if fast else 5
         t0 = time.perf_counter()
         for _ in range(n_repeat):
             mod = ForgeCompiler(
@@ -65,3 +125,96 @@ def run(csv: Csv) -> None:
             f"first_backend_ms={seg.result.backend_ms:.1f};"
             f"hit_backend_ms={mod.result.backend_ms:.2f}",
         )
+
+
+def _serve_decode_section(csv: Csv, fast: bool) -> None:
+    """ISSUE-3 acceptance on the serve decode graph: donation through the
+    backend path, 100% post-warmup per-bucket pool hit rate on the
+    ``{1,2,3,5,8,13}`` sweep, bucketed fidelity vs ``reference``."""
+    from repro.configs import get_config
+    from repro.launch.serve import BatchedServer
+    from repro.launch.steps import make_serve_step
+    from repro.models import get_model
+
+    # scan_layers=False unrolls the layer stack into per-layer accel
+    # segments with host glue between them — the shape whose dying
+    # intermediates the donation analysis targets
+    cfg = get_config("forge-125m", smoke=True).with_(scan_layers=False)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    max_len = 32 if fast else 64
+    n_new = 4 if fast else 8
+    server = BatchedServer(cfg, params, max_len=max_len, mode="forge",
+                           backend="segment_jit")
+
+    t0 = time.perf_counter()
+    server.warmup(SWEEP)
+    warmup_s = time.perf_counter() - t0
+    bs = server.bucketed.stats
+    hits0, misses0 = bs.pool_hits, bs.pool_misses
+
+    rng = np.random.default_rng(0)
+    tok_s = 0.0
+    for B in SWEEP:
+        prompts = rng.integers(0, cfg.vocab, (B, 4)).astype(np.int32)
+        res = server.generate(prompts, n_new)
+        tok_s += res["tok_per_s"]
+
+    # per-bucket pooling: every post-warmup admission must reuse buffers
+    hits = bs.pool_hits - hits0
+    misses = bs.pool_misses - misses0
+    assert misses == 0 and hits == len(SWEEP), (
+        f"post-warmup pool hit rate != 100%: {hits}h/{misses}m"
+    )
+    # donation: the decode graph must run donated accel segments
+    s = server.forge_module.stats
+    assert s.n_donating_segments >= 1 and s.n_donated_args >= 1, (
+        "serve decode graph compiled without donation"
+    )
+    csv.row(
+        "dispatch_overhead/serve_decode_pool",
+        warmup_s * 1e6,
+        f"sweep={'-'.join(map(str, SWEEP))};"
+        f"pool_hits_post_warmup={hits};pool_misses_post_warmup={misses};"
+        f"pool_bytes_reused={bs.pool_bytes_reused};"
+        f"donating_segments={s.n_donating_segments};"
+        f"donated_args={s.n_donated_args};"
+        f"file_pool_misses={s.file_pool_misses};"
+        f"mean_tok_per_s={tok_s / len(SWEEP):.0f}",
+    )
+
+    # bucketed decode fidelity vs the reference oracle: both sides see
+    # the same exact-shape (B=3) args; the cache is built directly —
+    # _bucket_args expects bucket-padded prompts and would pollute the
+    # admission pool with a never-again-used extent-3 key
+    step = make_serve_step(cfg)
+    B = 3
+    cache = server._build_cache(B)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    args = (params, cache, tok, jnp.asarray(0, jnp.int32))
+    oracle = ForgeCompiler(
+        PipelineConfig(backend="reference"), cache=CompileCache()
+    ).compile(step, *args)
+    ref_out = oracle(*args)
+    mod, key, n = server.bucketed.program_for(*args)
+    got = server.bucketed(*args)
+    diff = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(ref_out),
+            jax.tree_util.tree_leaves(got),
+        )
+    )
+    assert diff <= 1e-5, f"bucketed decode diverged from reference: {diff}"
+    csv.row(
+        "dispatch_overhead/serve_decode_fidelity",
+        diff * 1e6,
+        f"max_abs_vs_reference={diff:.2e};bucket={key};n={n};"
+        f"backend=segment_jit",
+    )
+
+
+def run(csv: Csv) -> None:
+    fast = common.FAST
+    _ladder_section(csv, fast)
+    _serve_decode_section(csv, fast)

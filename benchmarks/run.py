@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV rows (paper-table mapping):
     ablation          Tables 14/15/17/18
     bufalloc_sched    Tables 16/21
     dispatch_overhead interpret vs segment_jit backend + compile-cache hits
+                      + zero-copy replay / donation / bucket-pool audit
     shape_buckets     recompile-per-shape vs bucketed ShapeKey reuse
     variance          Table 19
     roofline_report   §Roofline (reads the dry-run results JSON)

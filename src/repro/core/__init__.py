@@ -17,6 +17,7 @@ from .cache import (
 from .capture import CaptureResult, graph_to_fn, trace_to_graph
 from .compiler import (
     BucketedModule,
+    BufferPool,
     CompilationResult,
     CompiledModule,
     ForgeCompiler,
@@ -46,6 +47,7 @@ __all__ = [
     "CompilationResult",
     "CompiledModule",
     "BucketedModule",
+    "BufferPool",
     "ForgeCompiler",
     "forge_compile",
     "forge_compile_bucketed",

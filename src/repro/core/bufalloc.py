@@ -8,11 +8,18 @@ constants, outputs) always get dedicated slots.
 
 ρ_buf = 1 − M/N is the buffer-reduction ratio reported in the paper's
 Table 16 (30–48 % for transformer graphs).
+
+This module also hosts the **donation analysis** consumed by the
+``segment_jit`` backend (DESIGN.md §segment_jit donation semantics): for
+each device-affine segment, which live-in registers can be handed to
+XLA as donated arguments so their device buffers are reused in place
+for the segment's outputs instead of re-materializing every live-out.
 """
 from __future__ import annotations
 
+from collections import Counter
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Set, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .liveness import LivenessInfo
 
@@ -67,6 +74,54 @@ def allocate(
     return AllocationResult(
         reg_to_buf=reg_to_buf, n_buffers=next_buf, n_vregs=len(lifetimes)
     )
+
+
+def segment_donations(
+    live: LivenessInfo,
+    reg_avals: Dict[int, Any],
+    *,
+    live_in: Sequence[int],
+    live_out: Sequence[int],
+    free_after: Sequence[int],
+) -> Tuple[int, ...]:
+    """Positions in ``live_in`` that a segment may donate to XLA.
+
+    A live-in register is safely donatable exactly when its buffer is
+    dead on segment exit and owned by the executor's scratch arena:
+
+    * it dies **inside** the segment (member of ``free_after``) — its
+      last reader is one of the segment's own instructions, so nothing
+      after the segment, and no other segment, ever reads it again;
+    * it is an intermediate (interval start ≥ 0): program inputs and
+      constants are born at −1 and owned by the caller / constant pool,
+      and donating them would invalidate buffers the executor does not
+      own (e.g. the weights passed to every serve call);
+    * it is not pinned (program outputs outlive every segment).
+
+    Safety alone makes donation a no-op unless XLA can actually alias
+    the buffer onto an output, which requires an output of identical
+    shape/dtype.  Donated positions are therefore matched greedily
+    against the multiset of live-out avals — one donated arg per
+    compatible live-out — which is the slot-reuse condition of the
+    linear scan lifted to the XLA level, and keeps every donated buffer
+    usable (no "donated buffers were not usable" churn).
+    """
+    dying = set(free_after)
+    budget = Counter(
+        (tuple(reg_avals[r].shape), str(reg_avals[r].dtype))
+        for r in live_out
+    )
+    donate: List[int] = []
+    for pos, r in enumerate(live_in):
+        if r not in dying or r in live.pinned:
+            continue
+        if live.intervals[r][0] < 0:  # caller-owned input / constant
+            continue
+        key = (tuple(reg_avals[r].shape), str(reg_avals[r].dtype))
+        if budget[key] > 0:
+            budget[key] -= 1
+            donate.append(pos)
+    return tuple(donate)
 
 
 def allocate_from_liveness(live: LivenessInfo) -> AllocationResult:

@@ -18,9 +18,10 @@ from __future__ import annotations
 
 import hashlib
 import threading
+import weakref
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -40,19 +41,73 @@ class UncacheableProgram(Exception):
     """
 
 
+#: per-constant digest memo keyed by array identity (DESIGN.md §Cache):
+#: fingerprinting runs on *every* compile, hit or miss, and re-hashing a
+#: large baked constant (plus the host transfer ``np.asarray`` implies
+#: for jax arrays) dominated the hit path.  The value digest is content-
+#: stable, so it is memoized per object; the weakref callback drops the
+#: entry when the array is collected, *before* its ``id`` can be reused.
+#: Caveat: in-place mutation of an already-fingerprinted numpy constant
+#: would go unnoticed — lowered programs freeze constants at capture
+#: time, so nothing in the pipeline mutates them.
+_FP_MEMO: Dict[int, Tuple[Any, bytes]] = {}
+#: arrays below this many bytes are cheaper to re-hash than to memoize
+_FP_MEMO_MIN_BYTES = 1024
+
+
+@dataclass
+class FingerprintMemoStats:
+    hits: int = 0
+    misses: int = 0
+
+
+fp_memo_stats = FingerprintMemoStats()
+
+
+def _fp_remember(v: Any, digest: bytes) -> None:
+    key = id(v)
+    try:
+        ref = weakref.ref(v, lambda _r, _k=key: _FP_MEMO.pop(_k, None))
+    except TypeError:  # not weakref-able: never memoized
+        return
+    _FP_MEMO[key] = (ref, digest)
+
+
 def _hash_value(h: "hashlib._Hash", v: Any) -> None:
     """Feed one frozen literal / constant into the hasher."""
     if isinstance(v, jax.core.Tracer):
         raise UncacheableProgram("live tracer in program constants")
+    entry = _FP_MEMO.get(id(v))
+    if entry is not None and entry[0]() is v:
+        fp_memo_stats.hits += 1
+        h.update(b"fpd:")
+        h.update(entry[1])
+        return
     try:
         a = np.asarray(v)
         if a.dtype == object:  # pointer-array tobytes is nondeterministic
             raise TypeError("object array")
-        h.update(str(a.dtype).encode())
-        h.update(str(a.shape).encode())
-        h.update(a.tobytes())
+        if a.nbytes < _FP_MEMO_MIN_BYTES:
+            # below the memo threshold the digest would be thrown away:
+            # feed the hasher directly, exactly as cheap as pre-memo
+            h.update(str(a.dtype).encode())
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+            return
+        sub = hashlib.sha256()
+        sub.update(str(a.dtype).encode())
+        sub.update(str(a.shape).encode())
+        sub.update(a.tobytes())
+        digest = sub.digest()
     except Exception:  # non-array frozen arg: fall back to repr
         h.update(repr(v).encode())
+        return
+    # "fpd:" disambiguates the 32-byte digest from a small array's raw
+    # bytes in the parent hash stream
+    h.update(b"fpd:")
+    h.update(digest)
+    fp_memo_stats.misses += 1
+    _fp_remember(v, digest)
 
 
 def _hash_obj(h: "hashlib._Hash", obj: Any) -> None:

@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 
 from .backends import ExecutorLike, get_backend
 from .cache import (
@@ -198,6 +199,90 @@ class CompiledModule:
         return self.executor.stats
 
 
+def _tree_nbytes(tree: Any) -> int:
+    """Total device bytes of a pytree of arrays (best-effort)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        nbytes = getattr(leaf, "nbytes", None)
+        if nbytes is None:
+            shape = getattr(leaf, "shape", ())
+            dtype = getattr(leaf, "dtype", None)
+            itemsize = getattr(dtype, "itemsize", 0) if dtype is not None else 0
+            nbytes = int(np.prod(shape or (1,))) * itemsize
+        total += int(nbytes)
+    return total
+
+
+class BufferPool:
+    """Per-bucket device-buffer pool (DESIGN.md §Buffer pooling).
+
+    Repeat admissions to a bucket re-materialize bucket-sized pytrees
+    (the serve path's KV cache, program I/O staging buffers) on every
+    acquisition; this pool keeps released sets on a per-key free list so
+    the next admission to the same bucket reuses the device buffers.
+    Keys are arbitrary hashables — the serve path keys by bucket extent.
+
+    ``acquire(key, build, reset=...)`` pops a pooled set and passes it
+    through ``reset`` (typically a donating jitted zero-fill, so the
+    device buffers are recycled *in place*); a miss — cold bucket, or
+    more concurrent generations than pooled sets — calls ``build()``.
+    A failing ``reset`` (e.g. XLA aliased two released leaves onto one
+    buffer, which a donating reset cannot accept) falls back to
+    ``build()`` rather than poisoning the admission.  Hit/miss/bytes
+    counters fold into the owning :class:`BucketStats`.
+    """
+
+    def __init__(
+        self,
+        stats: Optional[BucketStats] = None,
+        *,
+        max_per_key: int = 4,
+    ):
+        self.stats = stats if stats is not None else BucketStats()
+        self.max_per_key = max_per_key
+        self._free: Dict[Any, List[Any]] = {}
+        self._nbytes: Dict[Any, int] = {}
+        self._lock = threading.Lock()
+
+    def acquire(
+        self,
+        key: Any,
+        build: Callable[[], Any],
+        reset: Optional[Callable[[Any], Any]] = None,
+    ) -> Any:
+        with self._lock:
+            entries = self._free.get(key)
+            tree = entries.pop() if entries else None
+        if tree is not None and reset is not None:
+            try:
+                tree = reset(tree)
+            except Exception:  # unresettable buffers: rebuild below
+                tree = None
+        if tree is None:
+            tree = build()
+            with self._lock:
+                self._nbytes.setdefault(key, _tree_nbytes(tree))
+            self.stats.note_pool(hit=False)
+            return tree
+        self.stats.note_pool(hit=True, nbytes=self._nbytes.get(key, 0))
+        return tree
+
+    def release(self, key: Any, tree: Any) -> None:
+        """Return a buffer set to ``key``'s free list (drop when full)."""
+        if tree is None:
+            return
+        with self._lock:
+            entries = self._free.setdefault(key, [])
+            if len(entries) < self.max_per_key:
+                entries.append(tree)
+
+    def pooled(self, key: Any) -> int:
+        """Free-list depth for ``key`` (transparency / tests)."""
+        with self._lock:
+            entries = self._free.get(key)
+            return len(entries) if entries else 0
+
+
 class BucketedModule:
     """Shape-generalized multi-program front (DESIGN.md §Shape).
 
@@ -229,6 +314,10 @@ class BucketedModule:
         self.pad_mode = pad_mode
         self.programs: Dict[ShapeKey, CompiledModule] = {}
         self.stats = BucketStats()
+        #: per-bucket device-buffer pool (counters fold into ``stats``);
+        #: the serve path parks each generation's KV cache here so the
+        #: next admission to the bucket reuses the buffers in place
+        self.pool = BufferPool(self.stats)
         self._out_axes_flat: Dict[ShapeKey, Tuple[Optional[int], ...]] = {}
         self._lock = threading.Lock()
         #: per-key build locks: concurrent first dispatches to one cold

@@ -167,11 +167,18 @@ def bucket_report(stats: Any) -> str:
     per = ", ".join(
         f"{k}:{v}" for k, v in sorted(stats.per_bucket_calls.items())
     )
+    pool = ""
+    if stats.pool_hits or stats.pool_misses:
+        pool = (
+            f" pool={stats.pool_hits}h/{stats.pool_misses}m "
+            f"(hit_rate={stats.pool_hit_rate:.1%}, "
+            f"reused={stats.pool_bytes_reused / 1e6:.1f}MB)"
+        )
     return (
         f"buckets: compiles={stats.compiles} hits={stats.bucket_hits} "
         f"(hit_rate={stats.hit_rate:.1%}) calls={stats.calls} "
-        f"pad_waste={stats.pad_waste:.1%} compile_s={stats.compile_s:.2f} "
-        f"[{per}]"
+        f"pad_waste={stats.pad_waste:.1%} compile_s={stats.compile_s:.2f}"
+        f"{pool} [{per}]"
     )
 
 

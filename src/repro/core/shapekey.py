@@ -360,6 +360,13 @@ class BucketStats:
     rows_real: int = 0
     rows_padded: int = 0
     per_bucket_calls: Dict[str, int] = field(default_factory=dict)
+    # -- per-bucket buffer pool counters (BufferPool) ----------------------
+    #: acquisitions satisfied by a pooled device-buffer set
+    pool_hits: int = 0
+    #: acquisitions that had to build fresh buffers (cold bucket / overlap)
+    pool_misses: int = 0
+    #: device bytes served from the pool instead of freshly allocated
+    pool_bytes_reused: int = 0
 
     def __post_init__(self) -> None:
         self._lock = threading.Lock()
@@ -371,6 +378,14 @@ class BucketStats:
             else:
                 self.compiles += 1
                 self.compile_s += compile_s
+
+    def note_pool(self, *, hit: bool, nbytes: int = 0) -> None:
+        with self._lock:
+            if hit:
+                self.pool_hits += 1
+                self.pool_bytes_reused += nbytes
+            else:
+                self.pool_misses += 1
 
     def note_dispatch(self, key: ShapeKey, n_valid: int, extent: int) -> None:
         with self._lock:
@@ -390,3 +405,8 @@ class BucketStats:
         """Fraction of executed batch rows that were padding."""
         total = self.rows_real + self.rows_padded
         return self.rows_padded / total if total else 0.0
+
+    @property
+    def pool_hit_rate(self) -> float:
+        total = self.pool_hits + self.pool_misses
+        return self.pool_hits / total if total else 0.0

@@ -50,10 +50,20 @@ class BatchedServer:
     so each decode step is a plain program replay — no per-step padding,
     no module rebuilds on batch-size transitions.
 
-    Known limitation vs ``mode='jit'``: the backend path does not yet
-    donate the KV-cache buffers (``donate_argnums``), so each decode step
-    materializes a fresh cache pytree — ~2x cache memory and extra
-    allocation churn at large ``max_len`` (see DESIGN.md §Backends).
+    Steady-state replay avoids re-allocation on two levels (DESIGN.md
+    §Donation, §Buffer pooling): accel segments donate dying live-in
+    buffers to XLA (``donate_argnums`` through the backend path), and
+    each generation's KV-cache pytree is parked in the BucketedModule's
+    per-bucket :class:`~repro.core.compiler.BufferPool` on completion —
+    the next admission to that bucket reuses the device buffers through
+    a donating zero-fill instead of allocating a fresh cache.
+
+    Remaining gap vs ``mode='jit'``: cache leaves are program *inputs*,
+    which the donation analysis deliberately never donates (the executor
+    does not own caller buffers), so each decode step still materializes
+    a fresh cache pytree on device (~2x cache memory at large
+    ``max_len``).  Pooling recycles at admission granularity; per-step
+    in-place cache update needs caller-opt-in input donation.
     """
 
     def __init__(self, cfg, params, max_len: int = 256, mode: str = "jit",
@@ -73,6 +83,12 @@ class BatchedServer:
         #: most recently dispatched bucket program (CLI transparency)
         self.forge_module = None
         self._front_lock = threading.Lock()
+        #: donating zero-fill: recycles a pooled KV cache's device buffers
+        #: in place instead of allocating a fresh bucket-sized pytree
+        self._cache_reset = jax.jit(
+            lambda c: jax.tree_util.tree_map(jnp.zeros_like, c),
+            donate_argnums=(0,),
+        )
 
     # -- bucketed front ---------------------------------------------------
 
@@ -108,13 +124,32 @@ class BatchedServer:
         self._ensure_bucketed()
         return self.bucketed.policy.bucket(B)
 
-    def _bucket_args(self, prompts_b: np.ndarray):
-        """Bucket-shaped (cache, first-token) for a padded prompt array."""
+    def _build_cache(self, extent: int):
         from .steps import dealias_tree
 
-        Bb = prompts_b.shape[0]
         # donation-safe: identical zero-state leaves must not share buffers
-        cache = dealias_tree(self.model.init_cache(self.cfg, Bb, self.max_len))
+        return dealias_tree(
+            self.model.init_cache(self.cfg, extent, self.max_len)
+        )
+
+    def _acquire_cache(self, extent: int):
+        """Bucket-extent KV cache: pooled in forge mode, fresh otherwise."""
+        if self.bucketed is None:
+            return self._build_cache(extent)
+        return self.bucketed.pool.acquire(
+            extent,
+            lambda: self._build_cache(extent),
+            reset=self._cache_reset,
+        )
+
+    def _release_cache(self, extent: int, cache) -> None:
+        """Park a finished generation's cache for the next admission."""
+        if self.bucketed is not None:
+            self.bucketed.pool.release(extent, cache)
+
+    def _bucket_args(self, prompts_b: np.ndarray):
+        """Bucket-shaped (cache, first-token) for a padded prompt array."""
+        cache = self._acquire_cache(prompts_b.shape[0])
         tok = jnp.asarray(prompts_b[:, :1], jnp.int32)
         return cache, tok
 
@@ -142,11 +177,16 @@ class BatchedServer:
             # one throwaway step: warms the per-op eager-dispatch caches
             # the host segments hit, so the first *served* request per
             # bucket sees steady-state latency
-            mod(self.params, cache, tok, jnp.asarray(0, jnp.int32))
+            _, warm_cache = mod(
+                self.params, cache, tok, jnp.asarray(0, jnp.int32)
+            )
             # keep the counter invariant (executor total_calls sums to
             # BucketStats.calls) without skewing pad_waste: the throwaway
             # step's rows are all padding, none are served requests
             self.bucketed.stats.note_dispatch(key, 0, extent)
+            # park the stepped cache: the first *served* admission per
+            # bucket is then a pool hit (buffers recycled via zero-fill)
+            self._release_cache(extent, warm_cache)
             self.forge_module = mod
         return time.perf_counter() - t0
 
@@ -176,11 +216,7 @@ class BatchedServer:
             self.forge_module = mod
             step = mod
         else:
-            from .steps import dealias_tree
-
-            cache = dealias_tree(
-                self.model.init_cache(self.cfg, B, self.max_len)
-            )
+            cache = self._build_cache(B)
             step, key = self.serve_step, None
             prompts_b = prompts
 
@@ -201,16 +237,23 @@ class BatchedServer:
         t_prefill = time.perf_counter() - t0
         out: List[np.ndarray] = [np.asarray(tok)]
         lat: List[float] = []
-        for i in range(n_new - 1):
-            t1 = time.perf_counter()
-            tok, cache = step(
-                self.params, cache, tok, jnp.asarray(pos0 + i, jnp.int32)
-            )
-            jax.block_until_ready(tok)
-            lat.append(time.perf_counter() - t1)
-            out.append(np.asarray(tok))
+        try:
+            for i in range(n_new - 1):
+                t1 = time.perf_counter()
+                tok, cache = step(
+                    self.params, cache, tok, jnp.asarray(pos0 + i, jnp.int32)
+                )
+                jax.block_until_ready(tok)
+                lat.append(time.perf_counter() - t1)
+                out.append(np.asarray(tok))
+                if key is not None:
+                    self.bucketed.stats.note_dispatch(key, B, tok.shape[0])
+        finally:
+            # park the bucket-sized cache even on an interrupted decode
+            # (the donating zero-fill makes any parked state reusable),
+            # so the post-warmup pool hit rate survives transient errors
             if key is not None:
-                self.bucketed.stats.note_dispatch(key, B, tok.shape[0])
+                self._release_cache(key.extent, cache)
         # mask: slice the padded rows off the emitted token stream
         toks = np.concatenate(out, axis=1)[:B]
         lat_ms = np.asarray(lat) * 1e3
@@ -316,10 +359,14 @@ def main(argv=None) -> int:
               f"(warmup wall={warmup_s:.2f}s) {bucket_report(bs)}")
         r = server.forge_module.result
         s = r.executor_stats
+        rs = server.forge_module.stats  # live run counters (donation/pool)
         print(f"[serve] forge backend={r.backend} bucket={r.shape_key} "
               f"cache_hit={r.cache_hit} "
               f"segments={s.n_segments} (compiled={s.n_compiled_segments}) "
               f"delta={s.delta_before}->{s.delta_after} "
+              f"donating={rs.n_donating_segments}seg/"
+              f"{rs.n_donated_args}args "
+              f"file_pool={rs.file_pool_hits}h/{rs.file_pool_misses}m "
               f"cache hit_rate={cs.hit_rate:.1%} "
               f"({cs.hits}h/{cs.misses}m)")
     return 0

@@ -80,6 +80,25 @@ class TestServeForgeMode:
         assert t4.shape == (4, 3)
         assert front.stats.compiles == compiles + 1  # bucket reused
 
+    def test_cache_pool_reuse_after_warmup(self, smoke_setup):
+        """ISSUE 3: repeat admissions to a warmed bucket reuse the pooled
+        KV cache (zero new cache allocations) without perturbing tokens."""
+        cfg, params = smoke_setup
+        srv = BatchedServer(cfg, params, max_len=32, mode="forge",
+                            backend="segment_jit")
+        srv.warmup([2])
+        bs = srv.bucketed.stats
+        assert bs.pool_misses >= 1  # warmup built the bucket's cache
+        h0, m0 = bs.pool_hits, bs.pool_misses
+        out1 = srv.generate(_prompts(2), 3)
+        out2 = srv.generate(_prompts(2), 3)
+        assert bs.pool_misses == m0  # steady state: no cache allocations
+        assert bs.pool_hits == h0 + 2
+        assert bs.pool_bytes_reused > 0
+        # the donating zero-fill reset must leave no residue: identical
+        # prompts on a recycled cache decode identical tokens
+        np.testing.assert_array_equal(out1["tokens"], out2["tokens"])
+
     def test_bucketed_matches_exact_shape_outputs(self, smoke_setup):
         """Acceptance: bucketed outputs match exact-shape outputs within
         1e-5 max-abs on the reference model's decode logits."""
