@@ -1,0 +1,109 @@
+"""Bench-regression gate: compare a ``run.py --json`` results file
+against a committed baseline (ISSUE 4 CI satellite).
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --results bench-results/fast.json \
+        --baseline benchmarks/baselines/BENCH_fast.json
+
+The baseline names a small set of *mechanism* metrics — compile counts,
+pool hit/miss counters, alloc-blocks-per-call — whose regressions mean
+a structural break (a bucket ladder stopped bounding compiles, the
+buffer pool stopped hitting, replay started allocating), not noise.
+Each gate addresses ``<row>:<metric>`` from the JSON export (``:value``
+for the row's primary value) and declares a direction:
+
+* ``max`` — current must stay ≤ ``value * ratio_slack + abs_slack``
+* ``min`` — current must stay ≥ ``value / ratio_slack - abs_slack``
+
+``ratio_slack``/``abs_slack`` default to 1.0/0 (exact); noisy metrics
+(alloc blocks vary across Python versions) declare explicit slack.  A
+gate whose row or metric is missing from the results FAILS — renaming a
+benchmark row must be a conscious baseline update, not a silent skip.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+
+def _lookup(rows: Dict[str, Any], address: str) -> Tuple[bool, Any]:
+    """Resolve ``<row>:<metric>`` (``:value`` = the row's us_per_call)."""
+    row_name, _, metric = address.rpartition(":")
+    if not row_name:
+        return False, None
+    row = rows.get(row_name)
+    if row is None:
+        return False, None
+    if metric == "value":
+        return True, row.get("value")
+    if metric in row.get("metrics", {}):
+        return True, row["metrics"][metric]
+    return False, None
+
+
+def check(results: Dict[str, Any], baseline: Dict[str, Any]) -> List[str]:
+    """Return a list of human-readable gate failures (empty = green)."""
+    failures: List[str] = []
+    rows = results.get("rows", {})
+    for address, gate in sorted(baseline.get("gates", {}).items()):
+        found, current = _lookup(rows, address)
+        if not found:
+            failures.append(f"{address}: metric missing from results "
+                            f"(renamed row needs a baseline update)")
+            continue
+        if not isinstance(current, (int, float)):
+            failures.append(f"{address}: non-numeric value {current!r}")
+            continue
+        base = float(gate["value"])
+        direction = gate.get("direction", "max")
+        ratio = float(gate.get("ratio_slack", 1.0))
+        slack = float(gate.get("abs_slack", 0.0))
+        if direction == "max":
+            limit = base * ratio + slack
+            if current > limit:
+                failures.append(
+                    f"{address}: {current} > limit {limit:g} "
+                    f"(baseline {base:g}, direction=max)"
+                )
+        elif direction == "min":
+            limit = base / ratio - slack
+            if current < limit:
+                failures.append(
+                    f"{address}: {current} < limit {limit:g} "
+                    f"(baseline {base:g}, direction=min)"
+                )
+        else:
+            failures.append(f"{address}: unknown direction {direction!r}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", required=True,
+                    help="JSON written by benchmarks.run --json")
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json baseline")
+    args = ap.parse_args(argv)
+
+    with open(args.results) as f:
+        results = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = check(results, baseline)
+    n_gates = len(baseline.get("gates", {}))
+    if failures:
+        print(f"[bench-gate] {len(failures)}/{n_gates} gates FAILED:",
+              file=sys.stderr)
+        for msg in failures:
+            print(f"[bench-gate]   {msg}", file=sys.stderr)
+        return 1
+    print(f"[bench-gate] all {n_gates} gates green "
+          f"(baseline {args.baseline})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -118,7 +118,40 @@ def time_callable(fn: Callable, *args, warmup: int = WARMUP,
 # --------------------------------------------------------------------------
 
 
+def _parse_derived_value(raw: str) -> Any:
+    """Best-effort numeric parse of one ``k=v`` derived value.
+
+    Percentages become fractions (``12.5%`` -> 0.125) and trailing
+    multipliers drop their suffix (``6.90x`` -> 6.9) so the JSON export
+    is directly comparable by the bench-regression gate; anything
+    non-numeric stays a string.
+    """
+    s = raw.strip()
+    for suffix, scale in (("%", 0.01), ("x", 1.0)):
+        if s.endswith(suffix):
+            try:
+                return float(s[: -len(suffix)]) * scale
+            except ValueError:
+                return raw
+    try:
+        return int(s)
+    except ValueError:
+        pass
+    try:
+        return float(s)
+    except ValueError:
+        return raw
+
+
 class Csv:
+    """Collects ``name,us_per_call,derived`` rows; prints as it goes.
+
+    ``to_json()`` re-exports the rows as structured records — the
+    ``derived`` field's ``k=v;k=v`` pairs parsed into a metrics dict —
+    for the CI workflow artifact and the bench-regression gate
+    (benchmarks/check_regression.py).
+    """
+
     def __init__(self):
         self.rows: List[str] = []
 
@@ -126,3 +159,15 @@ class Csv:
         line = f"{name},{us_per_call:.3f},{derived}"
         self.rows.append(line)
         print(line)
+
+    def to_json(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for line in self.rows:
+            name, value, derived = line.split(",", 2)
+            metrics: Dict[str, Any] = {}
+            for pair in derived.split(";"):
+                if "=" in pair:
+                    k, v = pair.split("=", 1)
+                    metrics[k.strip()] = _parse_derived_value(v)
+            out[name] = {"value": float(value), "metrics": metrics}
+        return out

@@ -148,7 +148,7 @@ def _serve_decode_section(csv: Csv, fast: bool) -> None:
                            backend="segment_jit")
 
     t0 = time.perf_counter()
-    server.warmup(SWEEP)
+    server.warmup(SWEEP, prompt_lens=(4,))  # decode ladder + prefill grid
     warmup_s = time.perf_counter() - t0
     bs = server.bucketed.stats
     hits0, misses0 = bs.pool_hits, bs.pool_misses

@@ -15,14 +15,22 @@ Prints ``name,us_per_call,derived`` CSV rows (paper-table mapping):
     dispatch_overhead interpret vs segment_jit backend + compile-cache hits
                       + zero-copy replay / donation / bucket-pool audit
     shape_buckets     recompile-per-shape vs bucketed ShapeKey reuse
+    prefill_buckets   sequential vs whole-prompt batched prefill TTFT,
+                      2-D (batch × sequence) grid compiles, pad waste
     variance          Table 19
     roofline_report   §Roofline (reads the dry-run results JSON)
 
-``--fast`` runs CI-smoke-sized sweeps (see common.FAST).
+``--fast`` runs CI-smoke-sized sweeps (see common.FAST); ``--json PATH``
+additionally writes the rows as structured JSON (derived ``k=v`` pairs
+parsed into a metrics dict) — the CI workflow uploads that file as an
+artifact and gates it against benchmarks/baselines/ via
+``benchmarks.check_regression``.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -40,6 +48,7 @@ MODULES = (
     "bufalloc_sched",
     "dispatch_overhead",
     "shape_buckets",
+    "prefill_buckets",
     "variance",
     "roofline_report",
 )
@@ -51,6 +60,9 @@ def main(argv=None) -> int:
                     help="comma-separated module subset")
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke mode: seconds-scale sweeps")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as structured JSON "
+                         "(workflow artifact / regression-gate input)")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(MODULES)
     if args.fast:
@@ -70,6 +82,19 @@ def main(argv=None) -> int:
             csv.row(f"{name}/FAILED", 0.0, "exception — see stderr")
             failures += 1
         print(f"# {name}: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+    if args.json:
+        payload = {
+            "fast": bool(args.fast),
+            "modules": names,
+            "failures": failures,
+            "rows": csv.to_json(),
+        }
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
     return 1 if failures else 0
 
 

@@ -29,11 +29,13 @@ from .executor import CompiledExecutor, build_executor
 from .graph import Graph, GLit, GNode, GVar
 from .passes import PipelineConfig, run_forge_passes
 from .shapekey import (
+    AxisKey,
     BucketPolicy,
     BucketStats,
     ExactPolicy,
     LadderPolicy,
     PadPlan,
+    PolyAxis,
     Pow2Policy,
     ShapeKey,
     get_bucket_policy,
@@ -51,11 +53,13 @@ __all__ = [
     "ForgeCompiler",
     "forge_compile",
     "forge_compile_bucketed",
+    "AxisKey",
     "BucketPolicy",
     "BucketStats",
     "ExactPolicy",
     "LadderPolicy",
     "PadPlan",
+    "PolyAxis",
     "Pow2Policy",
     "ShapeKey",
     "get_bucket_policy",

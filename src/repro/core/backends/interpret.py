@@ -8,8 +8,9 @@ benchmarked against (benchmarks/dispatch_overhead.py).
 
 Bucketed (pad-and-mask) execution is supported through the executor's
 ``execute_padded`` (PaddedExecutionMixin): per-instruction dispatch is
-shape-oblivious, so the padded rows simply ride along each op and are
-sliced off the outputs.
+shape-oblivious, so the padded rows — and padded prompt columns, for
+2-D prefill programs — simply ride along each op and are sliced off
+the outputs.
 """
 from __future__ import annotations
 

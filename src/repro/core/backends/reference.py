@@ -4,7 +4,9 @@ Executes the RGIR stream in *original program order* with one value slot
 per virtual register: no scheduling, no buffer sharing, no eager GC.
 Nothing Phase 4b/4c could get wrong can corrupt its results, so the
 fidelity protocol (metrics.check_backend_fidelity) compares every real
-backend against this one.
+backend against this one.  Bucketed pad-and-mask calls (including 2-D
+batch × sequence prefill programs) route through the shared
+``execute_padded`` mixin like every other backend.
 """
 from __future__ import annotations
 

@@ -103,9 +103,11 @@ class SegmentExecutor(BufferFilePoolMixin, PaddedExecutionMixin):
 
     Bucketed (pad-and-mask) calls arrive via ``execute_padded``: the
     segment programs were traced/XLA-compiled at the bucket shapes, so a
-    narrower concrete batch is padded up to the bucket extent — keeping
-    every per-segment jit cache at exactly one entry per bucket — and
-    the masked rows are sliced off the outputs.
+    narrower concrete call is padded up to the bucket extents along
+    every polymorphic axis (batch, and sequence for 2-D prefill
+    programs) — keeping every per-segment jit cache at exactly one
+    entry per bucket cell — and the masked rows/columns are sliced off
+    the outputs.
     """
 
     def __init__(

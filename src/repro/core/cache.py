@@ -187,8 +187,11 @@ def make_cache_key(
     ``shape_key`` is the canonical bucket ShapeKey of a bucketed compile:
     the program was captured at the *bucket* shapes, so every concrete
     shape that pads into the bucket produces this same key — one cache
-    entry (and one backend build) serves them all.  Exact-shape compiles
-    omit the component, keeping pre-bucketing keys stable.
+    entry (and one backend build) serves them all.  Multi-axis keys
+    embed every axis (``bucket=pow2:B4xladder:S64`` for a 2-D prefill
+    cell), so two concrete (batch, prompt-length) pairs sharing a grid
+    cell share one entry.  Exact-shape compiles omit the component,
+    keeping pre-bucketing keys stable.
     """
     sk = f"|bucket={shape_key}" if shape_key is not None else ""
     return f"{backend}|reorder={int(reorder)}{sk}|{fingerprint}"

@@ -60,17 +60,24 @@ class CaptureResult:
     n_inputs_raw: int
     tied_map: Dict[int, int] = field(default_factory=dict)  # dup leaf idx -> canonical idx
     capture_ms: float = 0.0
-    #: per-raw-flat-leaf batch-polymorphic axis (None = shape-fixed leaf);
-    #: recorded at capture so later phases can pad/mask along these axes
-    poly_axes: Tuple[Optional[int], ...] = ()
-    #: the concrete extent of the polymorphic axes at capture time
-    poly_extent: Optional[int] = None
+    #: per-raw-flat-leaf polymorphic axis vector: one tuple per leaf,
+    #: one entry per polymorphic dimension (batch, sequence, …; None =
+    #: that dimension is absent from the leaf).  Recorded at capture so
+    #: later phases can pad/mask along every polymorphic axis.
+    poly_axes: Tuple[Tuple[Optional[int], ...], ...] = ()
+    #: the concrete extent of each polymorphic axis at capture time
+    poly_extents: Tuple[int, ...] = ()
 
-    def poly_axes_flat(self) -> Tuple[Optional[int], ...]:
-        """Polymorphic axes of the *executor-level* flat inputs.
+    @property
+    def poly_extent(self) -> Optional[int]:
+        """First (batch) polymorphic extent — the 1-D legacy view."""
+        return self.poly_extents[0] if self.poly_extents else None
+
+    def poly_axes_flat(self) -> Tuple[Tuple[Optional[int], ...], ...]:
+        """Polymorphic axis vectors of the *executor-level* flat inputs.
 
         The executor signature drops tied duplicate leaves; this view
-        drops their axes identically so it zips with
+        drops their axis vectors identically so it zips with
         ``CompiledModule._flatten_inputs`` output.
         """
         if not self.poly_axes:
@@ -187,27 +194,32 @@ def trace_to_graph(
     tie_weights: bool = True,
     inline: bool = True,
     poly_axes: Any = None,
+    poly_axes_nd: Optional[Sequence[Any]] = None,
 ) -> CaptureResult:
     """Capture ``fn`` as a Graph (Phase 1).
 
     ``example_args`` may be pytrees of concrete arrays or
     ``jax.ShapeDtypeStruct`` stand-ins (the dry-run path).
 
-    ``poly_axes`` (``vmap``-``in_axes``-style tree prefix) marks which
-    input dims are batch-polymorphic; the axes and their concrete extent
-    are recorded on the result for the bucketing front
+    ``poly_axes_nd`` holds one ``vmap``-``in_axes``-style tree prefix
+    per polymorphic dimension (batch, sequence, …); ``poly_axes`` is the
+    1-D shorthand for a single batch-polymorphic dimension.  The
+    per-leaf axes and their concrete extents are recorded on the result
+    for the bucketing front
     (:class:`~repro.core.compiler.BucketedModule`) — the captured graph
     itself is still specialized to the example (bucket) shapes.
     """
     t0 = time.perf_counter()
     flat, in_tree = jax.tree_util.tree_flatten(example_args)
-    axes_flat: Tuple[Optional[int], ...] = ()
-    poly_extent: Optional[int] = None
-    if poly_axes is not None:
-        from .shapekey import flatten_axes, infer_extent
+    if poly_axes_nd is None and poly_axes is not None:
+        poly_axes_nd = (poly_axes,)
+    axes_flat: Tuple[Tuple[Optional[int], ...], ...] = ()
+    poly_extents: Tuple[int, ...] = ()
+    if poly_axes_nd is not None:
+        from .shapekey import flatten_axes_nd, infer_extents
 
-        axes_flat = tuple(flatten_axes(poly_axes, example_args))
-        poly_extent = infer_extent(flat, axes_flat)
+        axes_flat = tuple(flatten_axes_nd(poly_axes_nd, example_args))
+        poly_extents = infer_extents(flat, axes_flat, len(poly_axes_nd))
     closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*example_args)
     _, out_tree = jax.tree_util.tree_flatten(out_shape)
     out_tree = jax.tree_util.tree_structure(out_shape)
@@ -235,7 +247,7 @@ def trace_to_graph(
         tied_map=tied,
         capture_ms=(time.perf_counter() - t0) * 1e3,
         poly_axes=axes_flat,
-        poly_extent=poly_extent,
+        poly_extents=poly_extents,
     )
     return res
 

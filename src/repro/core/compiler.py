@@ -38,13 +38,14 @@ from .graph import Graph
 from .lowering import RGIRProgram, lower_to_rgir
 from .passes import PassRecord, PipelineConfig, run_forge_passes
 from .shapekey import (
+    AxisKey,
     AxisSpec,
     BucketPolicy,
     BucketStats,
     PadPlan,
+    PolyAxis,
     ShapeKey,
     flatten_axes,
-    get_bucket_policy,
     infer_extent,
     pad_args,
 )
@@ -286,14 +287,21 @@ class BufferPool:
 class BucketedModule:
     """Shape-generalized multi-program front (DESIGN.md §Shape).
 
-    Holds a per-bucket program table: a call with concrete batch extent
-    ``n`` is dispatched by its :class:`ShapeKey` (``policy.bucket(n)``)
-    to the bucket's compiled program — compiling Phases 1-4 on the first
-    miss only — and executed pad-and-mask: inputs padded up to the bucket
-    extent along the polymorphic axes, outputs sliced back to the valid
-    rows.  The program table is bounded by the bucket policy (log-many
-    entries for ``pow2``), so a server front absorbs arbitrary batch
-    shapes with a small fixed set of compiled programs.
+    Holds a per-bucket program table over N polymorphic axes: a call
+    with concrete extents ``(n_1, …, n_N)`` is dispatched by its
+    :class:`ShapeKey` (per-axis ``policy.bucket(n_i)``) to the cell's
+    compiled program — compiling Phases 1-4 on the first miss only —
+    and executed pad-and-mask: inputs padded up to the bucket extents
+    along every polymorphic axis, outputs sliced back to the valid
+    rows/columns.  The program table is bounded by the product of the
+    per-axis policies (log-many entries for ``pow2``, #rungs for
+    ``ladder``), so a server front absorbs arbitrary batch shapes —
+    and, for 2-D prefill fronts, arbitrary prompt lengths — with a
+    small fixed grid of compiled programs.
+
+    Construct either from ``axes=(PolyAxis(...), ...)`` (one entry per
+    polymorphic dimension) or from the 1-D legacy kwargs
+    ``in_axes``/``out_axes``/``policy``.
     """
 
     def __init__(
@@ -301,6 +309,7 @@ class BucketedModule:
         compiler: "ForgeCompiler",
         fn: Callable,
         *,
+        axes: Optional[Sequence[PolyAxis]] = None,
         in_axes: AxisSpec = 0,
         out_axes: AxisSpec = 0,
         policy: Union[str, BucketPolicy] = "pow2",
@@ -308,9 +317,16 @@ class BucketedModule:
     ):
         self.compiler = compiler
         self.fn = fn
-        self.in_axes = in_axes
-        self.out_axes = out_axes
-        self.policy = get_bucket_policy(policy)
+        if axes is None:
+            axes = (PolyAxis(in_axes=in_axes, out_axes=out_axes,
+                             policy=policy),)
+        self.axes: Tuple[PolyAxis, ...] = tuple(axes)
+        if not self.axes:
+            raise ValueError("BucketedModule needs at least one PolyAxis")
+        # 1-D legacy views (first axis)
+        self.in_axes = self.axes[0].in_axes
+        self.out_axes = self.axes[0].out_axes
+        self.policy = self.axes[0].policy
         self.pad_mode = pad_mode
         self.programs: Dict[ShapeKey, CompiledModule] = {}
         self.stats = BucketStats()
@@ -318,7 +334,9 @@ class BucketedModule:
         #: the serve path parks each generation's KV cache here so the
         #: next admission to the bucket reuses the buffers in place
         self.pool = BufferPool(self.stats)
-        self._out_axes_flat: Dict[ShapeKey, Tuple[Optional[int], ...]] = {}
+        self._out_axes_flat: Dict[
+            ShapeKey, Tuple[Tuple[Optional[int], ...], ...]
+        ] = {}
         self._lock = threading.Lock()
         #: per-key build locks: concurrent first dispatches to one cold
         #: bucket serialize instead of duplicating a seconds-scale compile
@@ -326,19 +344,31 @@ class BucketedModule:
 
     # -- dispatch ---------------------------------------------------------
 
-    def shape_key_for(self, *args: Any) -> Tuple[ShapeKey, int]:
-        """(ShapeKey, concrete extent) of an argument tuple."""
+    def shape_key_for(self, *args: Any) -> Tuple[ShapeKey, Any]:
+        """(ShapeKey, concrete extent(s)) of an argument tuple.
+
+        The extent is an int for 1-D fronts (legacy) and a per-axis
+        tuple for N-D fronts.
+        """
         flat, _ = jax.tree_util.tree_flatten(args)
-        return self._shape_key_flat(flat, args)
+        key, ns = self._shape_key_flat(flat, args)
+        return key, (ns[0] if len(ns) == 1 else ns)
 
     def _shape_key_flat(
         self, flat: List[Any], args: Tuple[Any, ...]
-    ) -> Tuple[ShapeKey, int]:
-        axes = flatten_axes(self.in_axes, args)
-        n = infer_extent(flat, axes)
-        return ShapeKey(self.policy.name, self.policy.bucket(n)), n
+    ) -> Tuple[ShapeKey, Tuple[int, ...]]:
+        ns: List[int] = []
+        axis_keys: List[AxisKey] = []
+        for pa in self.axes:
+            a_flat = flatten_axes(pa.in_axes, args)
+            n = infer_extent(flat, a_flat)
+            ns.append(n)
+            axis_keys.append(
+                AxisKey(pa.policy.name, pa.policy.bucket(n), pa.label)
+            )
+        return ShapeKey(tuple(axis_keys)), tuple(ns)
 
-    def program_for(self, *args: Any) -> Tuple[CompiledModule, ShapeKey, int]:
+    def program_for(self, *args: Any) -> Tuple[CompiledModule, ShapeKey, Any]:
         """Resolve the bucket program; compile Phases 1-4 on first miss."""
         key, n = self.shape_key_for(*args)
         return self._program_for_key(key, args), key, n
@@ -362,10 +392,15 @@ class BucketedModule:
                 self.stats.note_lookup(hit=True)
                 return mod
             t0 = time.perf_counter()
-            padded = pad_args(args, self.in_axes, key.extent,
-                              mode=self.pad_mode)
+            padded = pad_args(
+                args,
+                tuple(pa.in_axes for pa in self.axes),
+                key.extents,
+                mode=self.pad_mode,
+            )
             mod = self.compiler.compile(
-                self.fn, *padded, shape_key=key, poly_axes=self.in_axes
+                self.fn, *padded, shape_key=key,
+                poly_axes_nd=tuple(pa.in_axes for pa in self.axes),
             )
             with self._lock:
                 self.programs[key] = mod
@@ -374,20 +409,24 @@ class BucketedModule:
             )
         return mod
 
-    def _plan_for(self, mod: CompiledModule, key: ShapeKey, n: int) -> PadPlan:
+    def _plan_for(
+        self, mod: CompiledModule, key: ShapeKey, ns: Tuple[int, ...]
+    ) -> PadPlan:
         out_axes = self._out_axes_flat.get(key)
         if out_axes is None:
-            # broadcast the out_axes spec over the (per-bucket constant)
-            # output tree: a dummy instance carries the structure
+            # broadcast each axis's out spec over the (per-bucket
+            # constant) output tree: a dummy instance carries the
+            # structure; zip the per-axis views into per-leaf vectors
             n_out = mod.capture.out_tree.num_leaves
             dummy = jax.tree_util.tree_unflatten(
                 mod.capture.out_tree, list(range(n_out))
             )
-            out_axes = tuple(flatten_axes(self.out_axes, dummy))
+            per_axis = [flatten_axes(pa.out_axes, dummy) for pa in self.axes]
+            out_axes = tuple(tuple(v) for v in zip(*per_axis))
             self._out_axes_flat[key] = out_axes
         return PadPlan(
-            n_valid=n,
-            extent=key.extent,
+            n_valid=ns,
+            extent=key.extents,
             in_axes=mod.capture.poly_axes_flat(),
             out_axes=out_axes,
             mode=self.pad_mode,
@@ -396,12 +435,12 @@ class BucketedModule:
     def __call__(self, *args: Any) -> Any:
         # hot path: one pytree flatten feeds dispatch AND execution
         flat, tree = jax.tree_util.tree_flatten(args)
-        key, n = self._shape_key_flat(flat, args)
+        key, ns = self._shape_key_flat(flat, args)
         mod = self._program_for_key(key, args)
         flat = mod._filter_flat_inputs(flat, tree)
-        plan = self._plan_for(mod, key, n)
+        plan = self._plan_for(mod, key, ns)
         outs = mod.executor.execute_padded(flat, plan=plan)
-        self.stats.note_dispatch(key, n, key.extent)
+        self.stats.note_dispatch(key, ns, key.extents)
         return mod._unflatten_outputs(outs)
 
     # -- transparency -----------------------------------------------------
@@ -451,18 +490,23 @@ class ForgeCompiler:
         *example_args: Any,
         shape_key: Optional[ShapeKey] = None,
         poly_axes: Optional[AxisSpec] = None,
+        poly_axes_nd: Optional[Sequence[AxisSpec]] = None,
     ) -> CompiledModule:
         """Compile ``fn`` specialized to ``example_args``'s shapes.
 
-        ``shape_key``/``poly_axes`` are set by the bucketing front
+        ``shape_key``/``poly_axes_nd`` are set by the bucketing front
         (:class:`BucketedModule`): the example args are then the canonical
-        *bucket* shapes, the ShapeKey joins the compile-cache key, and
-        the capture records which input dims are batch-polymorphic.
+        *bucket* shapes, the (possibly multi-axis) ShapeKey joins the
+        compile-cache key, and the capture records which input dims
+        carry each polymorphic axis.  ``poly_axes`` is the 1-D
+        shorthand.
         """
         t_total = time.perf_counter()
 
         # Phase 1 — capture
-        cap = trace_to_graph(fn, *example_args, poly_axes=poly_axes)
+        cap = trace_to_graph(
+            fn, *example_args, poly_axes=poly_axes, poly_axes_nd=poly_axes_nd
+        )
         g = cap.graph
         nodes_before = g.num_nodes()
 
@@ -535,6 +579,7 @@ class ForgeCompiler:
         self,
         fn: Callable,
         *example_args: Any,
+        axes: Optional[Sequence[PolyAxis]] = None,
         in_axes: AxisSpec = 0,
         out_axes: AxisSpec = 0,
         policy: Union[str, BucketPolicy] = "pow2",
@@ -542,14 +587,16 @@ class ForgeCompiler:
     ) -> "BucketedModule":
         """Build a shape-generalized multi-program front over ``fn``.
 
-        ``in_axes``/``out_axes`` mark the batch-polymorphic dims
-        (``vmap``-style tree prefixes); ``policy`` bounds the set of
-        compiled programs.  When ``example_args`` are given their bucket
-        is compiled eagerly (warmup); otherwise the first call per
-        bucket pays the compile.
+        ``axes`` holds one :class:`PolyAxis` per polymorphic dimension
+        (e.g. batch × sequence for whole-prompt prefill); the 1-D
+        shorthand ``in_axes``/``out_axes``/``policy`` marks a single
+        batch-polymorphic dimension.  Each axis's policy independently
+        bounds the program grid.  When ``example_args`` are given their
+        cell is compiled eagerly (warmup); otherwise the first call per
+        cell pays the compile.
         """
         mod = BucketedModule(
-            self, fn, in_axes=in_axes, out_axes=out_axes,
+            self, fn, axes=axes, in_axes=in_axes, out_axes=out_axes,
             policy=policy, pad_mode=pad_mode,
         )
         if example_args:
@@ -573,6 +620,7 @@ def forge_compile(
 def forge_compile_bucketed(
     fn: Callable,
     *example_args: Any,
+    axes: Optional[Sequence[PolyAxis]] = None,
     in_axes: AxisSpec = 0,
     out_axes: AxisSpec = 0,
     policy: Union[str, BucketPolicy] = "pow2",
@@ -581,14 +629,16 @@ def forge_compile_bucketed(
     backend: Optional[str] = None,
     **config_kwargs: Any,
 ) -> BucketedModule:
-    """Shape-generalized convenience API: one program per ShapeKey bucket.
+    """Shape-generalized convenience API: one program per ShapeKey cell.
 
     ``forge_compile_bucketed(f, x, in_axes=0, policy="pow2")`` compiles
-    ``x``'s bucket eagerly and lazily adds further buckets on demand.
+    ``x``'s bucket eagerly and lazily adds further buckets on demand;
+    pass ``axes=(PolyAxis(...), ...)`` for multi-axis (e.g. batch ×
+    sequence) bucketing.
     """
     if config is None:
         config = PipelineConfig(**config_kwargs)
     return ForgeCompiler(config, backend=backend).compile_bucketed(
-        fn, *example_args, in_axes=in_axes, out_axes=out_axes,
+        fn, *example_args, axes=axes, in_axes=in_axes, out_axes=out_axes,
         policy=policy, pad_mode=pad_mode,
     )

@@ -212,19 +212,22 @@ class PaddedExecutionMixin:
     """Pad-and-mask execution: run a bucket-shaped program on narrower
     inputs (DESIGN.md §Shape generalization).
 
-    The program was compiled for a canonical bucket extent; a concrete
-    call with fewer batch rows is padded up along the polymorphic axes
-    (plan-supplied), executed full-width, and its outputs sliced back to
-    the valid rows — the "mask".  Pad waste is folded into the stats so
-    bucket-policy cost is observable.  Shared by every backend executor
-    (``interpret``'s CompiledExecutor, ``segment_jit``, ``reference``).
+    The program was compiled for canonical bucket extents — one per
+    polymorphic axis (batch, and for prefill programs also sequence); a
+    concrete call with fewer rows/columns is padded up along every
+    polymorphic axis (plan-supplied), executed full-width, and its
+    outputs sliced back to the valid region — the "mask".  Pad waste is
+    folded into the stats as *cells* (the product over axes, plain rows
+    for 1-D fronts) so bucket-policy cost is observable.  Shared by
+    every backend executor (``interpret``'s CompiledExecutor,
+    ``segment_jit``, ``reference``).
     """
 
     def execute_padded(
         self, flat_inputs: Sequence[Any], *, plan: Any
     ) -> List[Any]:
         outs = self.execute(*plan.pad(flat_inputs))
-        self.stats.note_padding(plan.n_valid, plan.n_padded)
+        self.stats.note_padding(plan.n_valid_cells, plan.n_padded)
         return plan.unpad(outs)
 
 

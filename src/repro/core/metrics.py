@@ -137,16 +137,19 @@ def check_bucketed_fidelity(
     in_axes: Any = 0,
     out_axes: Any = 0,
     policy: Any = "pow2",
+    axes: Optional[Sequence[Any]] = None,
     config: Optional[PipelineConfig] = None,
     backend: Optional[str] = None,
 ) -> FidelityReport:
     """Bucketed pad-and-mask execution vs exact-shape compilation.
 
     Compiles ``fn`` twice — once specialized to the concrete shapes, once
-    through the ShapeKey bucketing front — and compares outputs.  Any
-    divergence means the padded rows were *not* inert (some op coupled
-    batch rows) or the output mask sliced the wrong axis.  Private caches
-    keep the two compiles from sharing executors.
+    through the ShapeKey bucketing front (``axes=(PolyAxis, ...)`` for
+    multi-axis fronts, the 1-D kwargs otherwise) — and compares outputs.
+    Any divergence means the padded rows/columns were *not* inert (some
+    op coupled rows along a polymorphic axis) or the output mask sliced
+    the wrong axis.  Private caches keep the two compiles from sharing
+    executors.
     """
     from .cache import CompileCache
 
@@ -157,9 +160,55 @@ def check_bucketed_fidelity(
     bucketed = ForgeCompiler(
         cfg, backend=backend, cache=CompileCache()
     ).compile_bucketed(
-        fn, in_axes=in_axes, out_axes=out_axes, policy=policy
+        fn, axes=axes, in_axes=in_axes, out_axes=out_axes, policy=policy
     )
     return fidelity(exact(*concrete_args), bucketed(*concrete_args))
+
+
+def check_prefill_fidelity(
+    cfg: Any,
+    params: Any,
+    prompts: Any,
+    *,
+    max_len: int = 64,
+) -> FidelityReport:
+    """Whole-prompt batched prefill vs sequential decode-step replay.
+
+    Runs the model's ``prefill_step`` once on the (B, P) prompt block
+    and ``decode_step`` P times on the same prompts, then compares the
+    per-position logits AND the resulting KV caches — the acceptance
+    bound for the 2-D serve front is 1e-5 max-abs (any divergence means
+    the chunk-causal length mask let a future token leak into a past
+    position, or the cache write strided wrong).
+    """
+    import numpy as np
+
+    from ..models import get_model
+
+    model = get_model(cfg)
+    if model.prefill_step is None:
+        raise ValueError(f"family {cfg.family!r} has no batched prefill")
+    prompts = np.asarray(prompts)
+    B, P = prompts.shape
+
+    cache_seq = model.init_cache(cfg, B, max_len)
+    logits_seq = []
+    for i in range(P):
+        lg, cache_seq = model.decode_step(
+            params, cache_seq, jnp.asarray(prompts[:, i:i + 1], jnp.int32),
+            jnp.asarray(i, jnp.int32), cfg,
+        )
+        logits_seq.append(lg[:, -1, :])
+
+    cache_b = model.init_cache(cfg, B, max_len)
+    logits_b, cache_b = model.prefill_step(
+        params, cache_b, jnp.asarray(prompts, jnp.int32),
+        jnp.asarray(0, jnp.int32), cfg,
+    )
+    return fidelity(
+        (jnp.stack(logits_seq, axis=1), cache_seq),
+        (logits_b, cache_b),
+    )
 
 
 def bucket_report(stats: Any) -> str:

@@ -1,27 +1,34 @@
-"""Batched serving driver: prefill + decode loop over the compiled
-serve_step, with shape-generalized bucketing and group-level continuous
-batching (request groups of any batch size admitted without recompiling).
+"""Batched serving driver: whole-prompt prefill + decode loop over the
+compiled steps, with 2-D shape-generalized bucketing and group-level
+continuous batching (request groups of any batch size × prompt length
+admitted without recompiling).
 
 The serve path is where the Forge pipeline earns its keep at runtime:
-the decode step is compiled once per ShapeKey *bucket* (capture →
+the decode step is compiled once per batch ShapeKey *bucket* (capture →
 fusion → RGIR → scheduled executor) and replayed either as one XLA
 program (``--mode jit``, the NNFactory compile-then-run analogue) or
 through a Phase-4 backend executor (``--mode forge``).
 
-``--mode forge`` is rebuild-free: a request group of batch size B is
-admitted, padded up to ``policy.bucket(B)`` rows (edge-replicated —
-provably inert, see DESIGN.md §Shape generalization), decoded on the
-bucket's compiled program, and the padding rows sliced off the emitted
-tokens.  After :meth:`BatchedServer.warmup` no batch size within the
-bucket ladder ever re-runs Phases 1-4 — compile cost (``compile_s``) is
-reported separately from steady-state throughput so bucket reuse is
-visible from the CLI.
+``--mode forge`` is rebuild-free on both axes: a request group of batch
+size B with prompt length P is admitted, padded up to
+``(batch_policy.bucket(B), seq_policy.bucket(P))`` (edge-replicated —
+provably inert, see DESIGN.md §Shape generalization), prefilled in ONE
+whole-prompt forward pass on the grid cell's compiled ``prefill_step``
+program (the KV cache written in one shot, causal within the chunk),
+then decoded on the batch bucket's program with the padding rows sliced
+off the emitted tokens.  Before 2-D bucketing, prefill replayed the
+prompt token-at-a-time through ``decode_step`` — time-to-first-token
+(TTFT) scaled linearly with prompt length and every distinct length
+risked a recompile.  After :meth:`BatchedServer.warmup` no (batch,
+prompt-length) pair within the ladder grid ever re-runs Phases 1-4 —
+compile cost (``compile_s``) and TTFT are reported separately from
+steady-state decode throughput so bucket reuse is visible from the CLI.
 
 Usage (CPU-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch forge-125m --smoke \
       --batch 4 --prompt-len 32 --gen 32
   PYTHONPATH=src python -m repro.launch.serve --arch forge-125m --smoke \
-      --mode forge --sweep 1,2,3,5,8,13 --gen 8
+      --mode forge --sweep 1,4 --prompt-sweep 17,32,48,100 --gen 8
 """
 from __future__ import annotations
 
@@ -50,6 +57,16 @@ class BatchedServer:
     so each decode step is a plain program replay — no per-step padding,
     no module rebuilds on batch-size transitions.
 
+    Prefill runs through a second, 2-D front: one compiled
+    ``prefill_step`` program per (batch-bucket × sequence-bucket) grid
+    cell (``seq_bucket_policy``, a fixed ladder by default), consuming
+    the whole edge-padded prompt block in one forward pass with a causal
+    length mask — the KV cache is written in one shot and TTFT stops
+    scaling with per-token dispatches.  Families without a chunked
+    cache-write path (recurrent state caches) fall back to the
+    sequential decode-step loop automatically, as do prompts whose
+    sequence bucket would not fit ``max_len``.
+
     Steady-state replay avoids re-allocation on two levels (DESIGN.md
     §Donation, §Buffer pooling): accel segments donate dying live-in
     buffers to XLA (``donate_argnums`` through the backend path), and
@@ -67,7 +84,9 @@ class BatchedServer:
     """
 
     def __init__(self, cfg, params, max_len: int = 256, mode: str = "jit",
-                 backend: str = "segment_jit", bucket_policy: str = "pow2"):
+                 backend: str = "segment_jit", bucket_policy: str = "pow2",
+                 seq_bucket_policy: str = "ladder:16,32,64,128,256",
+                 prefill: str = "auto"):
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)
@@ -78,8 +97,19 @@ class BatchedServer:
         self.mode = mode
         self.backend = backend
         self.bucket_policy = bucket_policy
-        #: the multi-program front (mode=forge); built once, never rebuilt
+        #: sequence-axis bucket policy for the 2-D prefill program grid
+        self.seq_bucket_policy = seq_bucket_policy
+        #: "auto" (batched when the family supports it and the prompt
+        #: fits the ladder) | "batched" | "sequential" (force the legacy
+        #: token-at-a-time loop — the TTFT baseline)
+        self.prefill_policy = prefill
+        #: the decode multi-program front (mode=forge); built once
         self.bucketed = None
+        #: the 2-D (batch × sequence) whole-prompt prefill front; None
+        #: for families without a chunked cache-write path
+        self.prefill_bucketed = None
+        #: how the most recent prefill ran ("batched" | "sequential")
+        self.last_prefill_mode = None
         #: most recently dispatched bucket program (CLI transparency)
         self.forge_module = None
         self._front_lock = threading.Lock()
@@ -93,12 +123,13 @@ class BatchedServer:
     # -- bucketed front ---------------------------------------------------
 
     def _ensure_bucketed(self):
-        """Build the BucketedModule front once (lazy, mode=forge only)."""
+        """Build the BucketedModule fronts once (lazy, mode=forge only)."""
         with self._front_lock:
             if self.bucketed is not None:
                 return
-            from ..core import ForgeCompiler, PipelineConfig
+            from ..core import ForgeCompiler, PipelineConfig, PolyAxis
             from ..core.shapekey import infer_poly_axes
+            from .steps import make_batched_prefill_step
 
             # per-leaf cache batch axes differ across model families
             # (transformer: axis 1 under the layer dim; recurrent states:
@@ -112,6 +143,27 @@ class BatchedServer:
             )
             step = make_serve_step(self.cfg)
             compiler = ForgeCompiler(PipelineConfig(backend=self.backend))
+            # the 2-D prefill front: batch × sequence, one program per
+            # grid cell.  Only tokens/logits carry the sequence axis —
+            # the KV cache is max_len-resident on both sides.
+            # prefill_step: (params, cache, tokens, pos) -> (logits, cache)
+            prefill_step = (
+                make_batched_prefill_step(self.cfg)
+                if self.prefill_policy != "sequential" else None
+            )
+            prefill_front = None
+            if prefill_step is not None:
+                prefill_front = compiler.compile_bucketed(
+                    prefill_step,
+                    axes=(
+                        PolyAxis(in_axes=(None, cache_axes, 0, None),
+                                 out_axes=(0, cache_axes),
+                                 policy=self.bucket_policy, label="B"),
+                        PolyAxis(in_axes=(None, None, 1, None),
+                                 out_axes=(1, None),
+                                 policy=self.seq_bucket_policy, label="S"),
+                    ),
+                )
             # serve_step: (params, cache, token, pos) -> (next_tok, new_cache)
             self.bucketed = compiler.compile_bucketed(
                 step,
@@ -119,6 +171,7 @@ class BatchedServer:
                 out_axes=(0, cache_axes),
                 policy=self.bucket_policy,
             )
+            self.prefill_bucketed = prefill_front
 
     def _bucket_extent(self, B: int) -> int:
         self._ensure_bucketed()
@@ -153,11 +206,29 @@ class BatchedServer:
         tok = jnp.asarray(prompts_b[:, :1], jnp.int32)
         return cache, tok
 
-    def warmup(self, batch_sizes: Sequence[int]) -> float:
-        """Precompile the bucket ladder covering ``batch_sizes``.
+    def _seq_bucket_extent(self, P: int):
+        """Sequence bucket for a prompt length, or None → sequential path.
+
+        None when the family has no batched prefill, the policy rejects
+        the length (ladder admission bound), or the bucket would not fit
+        the cache (``max_len``).
+        """
+        if self.prefill_bucketed is None:
+            return None
+        try:
+            s = self.prefill_bucketed.axes[1].policy.bucket(P)
+        except ValueError:
+            return None
+        return s if s <= self.max_len else None
+
+    def warmup(self, batch_sizes: Sequence[int],
+               prompt_lens: Optional[Sequence[int]] = None) -> float:
+        """Precompile the ladder grid covering ``batch_sizes`` (decode
+        buckets) × ``prompt_lens`` (prefill grid cells).
 
         Returns the seconds spent compiling; afterwards serving any of
-        these batch sizes never re-runs Phases 1-4.
+        these batch sizes — at any of these prompt lengths — never
+        re-runs Phases 1-4.
         """
         if self.mode != "forge":
             return 0.0
@@ -188,13 +259,39 @@ class BatchedServer:
             # bucket is then a pool hit (buffers recycled via zero-fill)
             self._release_cache(extent, warm_cache)
             self.forge_module = mod
+        # prefill grid: one compile per (batch-bucket × seq-bucket) cell
+        # actually reachable from the announced workload
+        if prompt_lens and self.prefill_bucketed is not None:
+            cells = set()
+            for B in batch_sizes:
+                extent = self._bucket_extent(int(B))
+                for P in prompt_lens:
+                    s_ext = self._seq_bucket_extent(int(P))
+                    if s_ext is None or (extent, s_ext) in cells:
+                        continue
+                    cells.add((extent, s_ext))
+                    tokens = jnp.zeros((extent, s_ext), jnp.int32)
+                    cache = self._acquire_cache(extent)
+                    pmod, pkey, _ = self.prefill_bucketed.program_for(
+                        self.params, cache, tokens, jnp.asarray(0, jnp.int32)
+                    )
+                    _, warm_cache = pmod(
+                        self.params, cache, tokens, jnp.asarray(0, jnp.int32)
+                    )
+                    # all-padding throwaway, same invariant as decode
+                    self.prefill_bucketed.stats.note_dispatch(
+                        pkey, (0, 0), pkey.extents
+                    )
+                    self._release_cache(extent, warm_cache)
         return time.perf_counter() - t0
 
     # -- serving ----------------------------------------------------------
 
     def prefill(self, prompts: np.ndarray):
-        """Sequential prefill via decode steps (cache warm-up).
+        """Prefill the KV cache for a prompt group.
 
+        Batched (whole-prompt, one forward pass) when the 2-D front
+        covers the group; sequential decode-step replay otherwise.
         Returns bucket-shaped state in forge mode: ``(cache, next_tok,
         pos, step_fn, key)`` where the first ``prompts.shape[0]`` rows
         are the real requests.
@@ -205,35 +302,87 @@ class BatchedServer:
 
         if self.mode == "forge":
             self._ensure_bucketed()
-            extent = self._bucket_extent(B)
-            # admit the group: edge-pad the prompt rows up to the bucket
-            prompts_b = np.pad(prompts, ((0, extent - B), (0, 0)),
-                               mode="edge")
-            cache, tok = self._bucket_args(prompts_b)
-            mod, key, _ = self.bucketed.program_for(
-                self.params, cache, tok, jnp.asarray(0, jnp.int32)
-            )
-            self.forge_module = mod
-            step = mod
-        else:
-            cache = self._build_cache(B)
-            step, key = self.serve_step, None
-            prompts_b = prompts
-
+            s_ext = self._seq_bucket_extent(P)
+            if s_ext is not None:
+                return self._prefill_batched(prompts, s_ext)
+            return self._prefill_sequential(prompts)
+        self.last_prefill_mode = "sequential"
+        cache = self._build_cache(B)
+        next_tok = None
         for i in range(P):
-            tok_i = jnp.asarray(prompts_b[:, i:i + 1], jnp.int32)
-            next_tok, cache = step(
+            tok_i = jnp.asarray(prompts[:, i:i + 1], jnp.int32)
+            next_tok, cache = self.serve_step(
                 self.params, cache, tok_i, jnp.asarray(i, jnp.int32)
             )
-            if key is not None:
-                self.bucketed.stats.note_dispatch(key, B, prompts_b.shape[0])
-        return cache, next_tok, P, step, key
+        return cache, next_tok, P, self.serve_step, None
+
+    def _prefill_batched(self, prompts: np.ndarray, s_ext: int):
+        """Whole-prompt prefill on the (batch × sequence) grid cell.
+
+        The prompt block is edge-padded on both axes, the cell's
+        compiled ``prefill_step`` writes the KV cache in one shot (the
+        causal length mask keeps padded tail columns out of every real
+        column's receptive field), and the first generated token is read
+        from the last *real* prompt column's logits.
+        """
+        B, P = prompts.shape
+        extent = self._bucket_extent(B)
+        prompts_b = np.pad(prompts, ((0, extent - B), (0, s_ext - P)),
+                           mode="edge")
+        cache = self._acquire_cache(extent)
+        tokens = jnp.asarray(prompts_b, jnp.int32)
+        pos0 = jnp.asarray(0, jnp.int32)
+        pmod, pkey, _ = self.prefill_bucketed.program_for(
+            self.params, cache, tokens, pos0
+        )
+        logits, cache = pmod(self.params, cache, tokens, pos0)
+        self.prefill_bucketed.stats.note_dispatch(pkey, (B, P), pkey.extents)
+        # mask: the padded tail columns' logits never escape — the next
+        # token comes from the last real column (the padded rows decode
+        # edge-replica tokens and are sliced off at the end)
+        tok = jnp.argmax(logits[:, P - 1, :], axis=-1).astype(jnp.int32)[:, None]
+        mod, key, _ = self.bucketed.program_for(
+            self.params, cache, tok, jnp.asarray(P, jnp.int32)
+        )
+        self.forge_module = mod
+        self.last_prefill_mode = "batched"
+        return cache, tok, P, mod, key
+
+    def _prefill_sequential(self, prompts: np.ndarray):
+        """Token-at-a-time prefill through the decode bucket program
+        (recurrent families, or prompts outside the sequence ladder)."""
+        B, P = prompts.shape
+        extent = self._bucket_extent(B)
+        # admit the group: edge-pad the prompt rows up to the bucket
+        prompts_b = np.pad(prompts, ((0, extent - B), (0, 0)), mode="edge")
+        cache, tok = self._bucket_args(prompts_b)
+        mod, key, _ = self.bucketed.program_for(
+            self.params, cache, tok, jnp.asarray(0, jnp.int32)
+        )
+        self.forge_module = mod
+        next_tok = None
+        for i in range(P):
+            tok_i = jnp.asarray(prompts_b[:, i:i + 1], jnp.int32)
+            next_tok, cache = mod(
+                self.params, cache, tok_i, jnp.asarray(i, jnp.int32)
+            )
+            self.bucketed.stats.note_dispatch(key, B, prompts_b.shape[0])
+        self.last_prefill_mode = "sequential"
+        return cache, next_tok, P, mod, key
+
+    def _compile_s_total(self) -> float:
+        """Phase 1-4 seconds accumulated across BOTH serve fronts."""
+        total = self.bucketed.stats.compile_s if self.bucketed else 0.0
+        if self.prefill_bucketed is not None:
+            total += self.prefill_bucketed.stats.compile_s
+        return total
 
     def generate(self, prompts: np.ndarray, n_new: int) -> Dict[str, Any]:
         B = prompts.shape[0]
-        compile_s0 = self.bucketed.stats.compile_s if self.bucketed else 0.0
+        compile_s0 = self._compile_s_total()
         t0 = time.perf_counter()
         cache, tok, pos0, step, key = self.prefill(prompts)
+        jax.block_until_ready(tok)  # TTFT: the first token is real here
         t_prefill = time.perf_counter() - t0
         out: List[np.ndarray] = [np.asarray(tok)]
         lat: List[float] = []
@@ -257,13 +406,12 @@ class BatchedServer:
         # mask: slice the padded rows off the emitted token stream
         toks = np.concatenate(out, axis=1)[:B]
         lat_ms = np.asarray(lat) * 1e3
-        compile_s = (
-            self.bucketed.stats.compile_s - compile_s0 if self.bucketed
-            else 0.0
-        )
+        compile_s = self._compile_s_total() - compile_s0
         return {
             "tokens": toks,
             "prefill_s": t_prefill,
+            "ttft_s": t_prefill,  # time to first token (prefill wall)
+            "prefill_mode": self.last_prefill_mode,
             "compile_s": compile_s,  # Phase 1-4 time inside this call
             "decode_ms_mean": float(lat_ms.mean()) if len(lat_ms) else 0.0,
             "decode_ms_p50": float(np.percentile(lat_ms, 50)) if len(lat_ms) else 0.0,
@@ -299,16 +447,29 @@ def main(argv=None) -> int:
                     help="Phase-4 backend for --mode forge "
                          "(interpret | segment_jit | reference)")
     ap.add_argument("--bucket-policy", default="pow2",
-                    help="shape bucket policy for --mode forge "
+                    help="batch-axis bucket policy for --mode forge "
                          "(exact | pow2 | ladder:<r1,r2,...>)")
+    ap.add_argument("--seq-bucket-policy", default="ladder:16,32,64,128,256",
+                    help="sequence-axis bucket policy for the 2-D "
+                         "whole-prompt prefill grid (--mode forge)")
+    ap.add_argument("--prefill", default="auto",
+                    choices=["auto", "batched", "sequential"],
+                    help="prefill strategy: auto = whole-prompt batched "
+                         "when the family supports it, sequential = "
+                         "token-at-a-time baseline")
     ap.add_argument("--sweep", default=None,
                     help="comma-separated batch sizes to serve as a "
                          "workload sweep (mode=forge), e.g. 1,2,3,5,8,13")
+    ap.add_argument("--prompt-sweep", default=None,
+                    help="comma-separated prompt lengths to cross with "
+                         "--sweep (mode=forge), e.g. 17,32,48,100")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     sweep = ([int(x) for x in args.sweep.split(",")] if args.sweep
              else [args.batch])
+    prompt_sweep = ([int(x) for x in args.prompt_sweep.split(",")]
+                    if args.prompt_sweep else [args.prompt_len])
 
     if args.mode == "forge":
         from repro.core import get_backend
@@ -317,6 +478,7 @@ def main(argv=None) -> int:
         try:  # fail fast, before paying model init
             get_backend(args.backend)
             policy = get_bucket_policy(args.bucket_policy)
+            get_bucket_policy(args.seq_bucket_policy)
             for B in sweep:  # admission bounds (e.g. ladder overflow)
                 policy.bucket(B)
         except ValueError as e:
@@ -332,20 +494,27 @@ def main(argv=None) -> int:
 
     server = BatchedServer(cfg, params, max_len=args.max_len, mode=args.mode,
                            backend=args.backend,
-                           bucket_policy=args.bucket_policy)
+                           bucket_policy=args.bucket_policy,
+                           seq_bucket_policy=args.seq_bucket_policy,
+                           prefill=args.prefill)
 
-    warmup_s = server.warmup(sweep)
+    warmup_s = server.warmup(sweep, prompt_lens=prompt_sweep)
 
     for B in sweep:
-        prompts = rng.integers(0, cfg.vocab, (B, args.prompt_len))
-        res = server.generate(prompts.astype(np.int32), args.gen)
-        print(f"[serve] {cfg.name} batch={B} "
-              f"prefill={res['prefill_s']:.2f}s "
-              f"compile={res['compile_s']:.2f}s "
-              f"decode mean={res['decode_ms_mean']:.1f}ms "
-              f"p50={res['decode_ms_p50']:.1f} p99={res['decode_ms_p99']:.1f} "
-              f"({res['tok_per_s']:.0f} tok/s steady-state)")
-        assert res["tokens"].shape == (B, args.gen)
+        for P in prompt_sweep:
+            prompts = rng.integers(0, cfg.vocab, (B, P))
+            res = server.generate(prompts.astype(np.int32), args.gen)
+            # TTFT (prefill wall) reported separately from steady-state
+            # decode throughput — the 2-D grid's win is in the former
+            print(f"[serve] {cfg.name} batch={B} prompt={P} "
+                  f"ttft={res['ttft_s'] * 1e3:.1f}ms "
+                  f"(prefill={res['prefill_mode'] or args.mode}) "
+                  f"compile={res['compile_s']:.2f}s "
+                  f"decode mean={res['decode_ms_mean']:.1f}ms "
+                  f"p50={res['decode_ms_p50']:.1f} "
+                  f"p99={res['decode_ms_p99']:.1f} "
+                  f"({res['tok_per_s']:.0f} tok/s steady-state)")
+            assert res["tokens"].shape == (B, args.gen)
 
     if server.bucketed is not None:
         from repro.core import get_compile_cache
@@ -355,8 +524,11 @@ def main(argv=None) -> int:
         cs = get_compile_cache().stats
         # compile_s (warmup) reported separately from steady-state tok/s:
         # after warmup every row above decoded with zero Phase 1-4 reruns
-        print(f"[serve] compile_s={bs.compile_s:.2f} "
-              f"(warmup wall={warmup_s:.2f}s) {bucket_report(bs)}")
+        print(f"[serve] compile_s={server._compile_s_total():.2f} "
+              f"(warmup wall={warmup_s:.2f}s) decode {bucket_report(bs)}")
+        if server.prefill_bucketed is not None:
+            print(f"[serve] prefill grid "
+                  f"{bucket_report(server.prefill_bucketed.stats)}")
         r = server.forge_module.result
         s = r.executor_stats
         rs = server.forge_module.stats  # live run counters (donation/pool)

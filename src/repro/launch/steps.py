@@ -113,6 +113,27 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
     return serve_step
 
 
+def make_batched_prefill_step(cfg: ModelConfig):
+    """Whole-prompt prefill step for the 2-D bucketed serve front.
+
+    ``(params, cache, tokens(B, S), pos) -> ((B, S, vocab) logits,
+    cache)``: one forward pass writes the whole prompt block into the
+    KV cache (causal within the chunk).  Returns None for families
+    where a whole-block pass cannot reproduce sequential decode —
+    recurrent state caches (no chunked cache write) and MoE (capacity
+    routing couples tokens across the block) — the server then
+    prefills sequentially through ``decode_step``.
+    """
+    model = get_model(cfg)
+    if model.prefill_step is None:
+        return None
+
+    def prefill_step(params, cache, tokens, pos):
+        return model.prefill_step(params, cache, tokens, pos, cfg)
+
+    return prefill_step
+
+
 # NOTE: the exact-shape forge serve-step builder that used to live here
 # (make_forge_serve_step) was removed with the rebuild-per-shape server:
 # launch/serve.py now compiles the decode step behind a ShapeKey

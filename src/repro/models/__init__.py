@@ -32,6 +32,11 @@ class ModelAPI:
     init: Callable
     apply: Callable
     decode_step: Optional[Callable]
+    #: whole-prompt batched prefill — (params, cache, tokens(B,S), pos)
+    #: -> ((B,S,V) logits, cache); None when a whole-block pass cannot
+    #: reproduce sequential decode (recurrent state caches, MoE
+    #: capacity routing) — those families prefill sequentially
+    prefill_step: Optional[Callable]
     init_cache: Optional[Callable]
     module: Any
 
@@ -49,11 +54,19 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
         m = vlm
     else:
         raise ValueError(f"unknown family {cfg.family!r}")
+    # a family module owns the knowledge of when a whole-block prefill
+    # pass reproduces sequential decode (e.g. transformer says no for
+    # MoE capacity routing); the registry stays family-agnostic
+    prefill = getattr(m, "prefill_step", None)
+    supports = getattr(m, "supports_batched_prefill", None)
+    if prefill is not None and supports is not None and not supports(cfg):
+        prefill = None
     return ModelAPI(
         family=cfg.family,
         init=m.init,
         apply=m.apply,
         decode_step=getattr(m, "decode_step", None),
+        prefill_step=prefill,
         init_cache=getattr(m, "init_cache", None),
         module=m,
     )

@@ -144,11 +144,16 @@ def attention(
 
     new_cache = None
     if cache is not None:
-        # single-token (or chunk) decode: write at cache_pos, attend to all
+        # single-token or whole-chunk decode: write at cache_pos, attend
+        # to all.  A chunk (Sq > 1, the batched-prefill path) gets a
+        # causal length mask — query i at cache position cache_pos + i
+        # sees keys <= cache_pos + i — so one forward pass writes the
+        # whole prompt block with exact sequential-decode semantics.
         k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=2)
         v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=2)
         new_cache = {"k": k_cache, "v": v_cache}
         max_len = k_cache.shape[2]
+        sq = q.shape[2]
         if cache_valid_len is not None:
             # rotating buffer: slots < valid_len hold live entries; softmax
             # attention is permutation-invariant over keys (RoPE applied
@@ -156,6 +161,9 @@ def attention(
             idx = lax.broadcasted_iota(jnp.int32, (1, 1, 1, max_len), 3)
             mask = jnp.where(idx < cache_valid_len, 0.0,
                              float(np.finfo(np.float32).min))
+        elif sq > 1:
+            mask = L.prefill_length_mask(cache_pos, sq, max_len,
+                                         window=window)
         elif window is not None:
             idx = lax.broadcasted_iota(jnp.int32, (1, 1, 1, max_len), 3)
             keep = (idx <= cache_pos) & (idx > cache_pos - window)

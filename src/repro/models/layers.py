@@ -187,6 +187,25 @@ def decode_length_mask(pos: jax.Array, max_len: int, dtype=jnp.float32) -> jax.A
     return jnp.where(idx <= pos, jnp.asarray(0.0, dtype), neg)
 
 
+def prefill_length_mask(pos: jax.Array, sq: int, max_len: int,
+                        window=None, dtype=jnp.float32) -> jax.Array:
+    """Causal length mask (1, 1, sq, max_len) for chunked prefill.
+
+    Query row i sits at cache position ``pos + i`` and sees keys
+    ``idx <= pos + i`` (with ``window``, also ``idx > pos + i -
+    window``) — causal *within* the chunk, so a whole prompt block can
+    be written through the decode cache path in one forward pass.
+    Reduces to :func:`decode_length_mask` at ``sq == 1``.
+    """
+    idx = lax.broadcasted_iota(jnp.int32, (1, 1, sq, max_len), 3)
+    qpos = pos + lax.broadcasted_iota(jnp.int32, (1, 1, sq, max_len), 2)
+    keep = idx <= qpos
+    if window is not None:
+        keep &= idx > qpos - window
+    neg = jnp.asarray(jnp.finfo(dtype).min, dtype)
+    return jnp.where(keep, jnp.asarray(0.0, dtype), neg)
+
+
 # --------------------------------------------------------------------------
 # FFN variants (unfused: the operator-fusion pass matches these)
 # --------------------------------------------------------------------------

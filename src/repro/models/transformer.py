@@ -226,32 +226,33 @@ def init_cache(
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
-def decode_step(
+def supports_batched_prefill(cfg: ModelConfig) -> bool:
+    """Whole-block prefill reproduces sequential decode only when no op
+    couples tokens across the (B, S) block — false for MoE, whose
+    capacity routing is first-come-first-served over the flattened
+    token stream (see :func:`prefill_step`)."""
+    return cfg.family != "moe"
+
+
+def _cached_forward(
     params: Params,
     cache: Dict[str, jax.Array],
-    token: jax.Array,  # (B, 1) int32
-    pos: jax.Array,  # scalar int32 — write position
+    x: jax.Array,  # (B, S, D) embedded inputs
+    pos: jax.Array,  # scalar int32 — first cache write position
+    cos: jax.Array,
+    sin: jax.Array,
     cfg: ModelConfig,
-    *,
-    embeds: Optional[jax.Array] = None,
-    mrope_positions: Optional[jax.Array] = None,
+    mode: str,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One serve step: logits for the next token + updated cache."""
-    if embeds is None:
-        x = L.embed(token, params["embed"])
-    else:
-        x = embeds
-    B = x.shape[0]
-    positions = pos[None] if pos.ndim == 0 else pos
-    cos, sin = _rope_for(cfg, positions, mrope_positions)
-
+    """Shared decode/prefill scaffold: layer loop over the block-decode
+    body against the KV cache, final norm, LM head.  ``mode`` keys the
+    forge_body compile cache ("decode" vs "prefill")."""
     one_block = (
         jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
         if cfg.scan_layers else params["blocks"][0]
     )
-    k0 = cache["k"][0] if cfg.scan_layers else cache["k"][0]
-    v0 = cache["v"][0] if cfg.scan_layers else cache["v"][0]
-    body = _body_fn(cfg, "decode", (one_block, x, k0, v0, pos, cos, sin))
+    k0, v0 = cache["k"][0], cache["v"][0]
+    body = _body_fn(cfg, mode, (one_block, x, k0, v0, pos, cos, sin))
 
     if cfg.scan_layers:
         def step(carry, xs):
@@ -274,3 +275,56 @@ def decode_step(
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
     return logits, {"k": new_k, "v": new_v}
+
+
+def decode_step(
+    params: Params,
+    cache: Dict[str, jax.Array],
+    token: jax.Array,  # (B, 1) int32
+    pos: jax.Array,  # scalar int32 — write position
+    cfg: ModelConfig,
+    *,
+    embeds: Optional[jax.Array] = None,
+    mrope_positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One serve step: logits for the next token + updated cache."""
+    if embeds is None:
+        x = L.embed(token, params["embed"])
+    else:
+        x = embeds
+    positions = pos[None] if pos.ndim == 0 else pos
+    cos, sin = _rope_for(cfg, positions, mrope_positions)
+    return _cached_forward(params, cache, x, pos, cos, sin, cfg, "decode")
+
+
+def prefill_step(
+    params: Params,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,  # (B, S) int32 — a whole (padded) prompt block
+    pos: jax.Array,  # scalar int32 — first write position
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Whole-prompt batched prefill: one forward pass writes the S-token
+    block into the KV cache at ``[pos, pos + S)``.
+
+    Equivalent to S sequential :func:`decode_step` calls (the causal
+    length mask inside :func:`~repro.models.attention.attention` keeps
+    query i from seeing keys beyond ``pos + i``) but dispatches one
+    program instead of S — time-to-first-token stops scaling with
+    per-token dispatch count.  Returns the full (B, S, vocab) logits
+    (the serve path reads the last *valid* column) plus the updated
+    cache.
+    """
+    if cfg.family == "moe":
+        # capacity routing is first-come-first-served over the flattened
+        # token stream: a (B, S) block routes/evicts differently than S
+        # single steps, diverging far beyond the 1e-5 fidelity bound
+        raise NotImplementedError(
+            "MoE capacity routing couples tokens across the block; "
+            "prefill sequentially through decode_step"
+        )
+    x = L.embed(tokens, params["embed"])
+    S = x.shape[1]
+    positions = pos + jnp.arange(S, dtype=jnp.int32)
+    cos, sin = _rope_for(cfg, positions, None)
+    return _cached_forward(params, cache, x, pos, cos, sin, cfg, "prefill")

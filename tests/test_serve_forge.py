@@ -43,24 +43,34 @@ class TestServeForgeMode:
 
     def test_sweep_no_rebuilds_after_warmup(self, smoke_setup):
         """Acceptance: the {1,2,3,5,8,13} sweep under pow2 triggers ≤ 4
-        compilations, and zero forge rebuilds/compiles after warmup."""
+        decode compilations, and zero forge rebuilds/compiles after
+        warmup — including the 2-D prefill grid cells."""
         cfg, params = smoke_setup
         sweep = (1, 2, 3, 5, 8, 13)
         server = BatchedServer(cfg, params, max_len=32, mode="forge",
                                backend="segment_jit", bucket_policy="pow2")
-        warmup_s = server.warmup(sweep)
+        warmup_s = server.warmup(sweep, prompt_lens=[6])
         assert warmup_s > 0
         front = server.bucketed
         compiles0 = front.stats.compiles
         assert compiles0 <= 4  # vs 6 rebuild-per-shape compiles before
+        pfront = server.prefill_bucketed
+        pcompiles0 = pfront.stats.compiles
+        assert pcompiles0 <= 4  # one prefill program per batch bucket
         for res in server.run_workload([_prompts(B) for B in sweep], 2):
             assert res["compile_s"] == 0.0  # steady state: no Phase 1-4
+            assert res["prefill_mode"] == "batched"
+            assert res["ttft_s"] > 0
         assert server.bucketed is front  # the front is never rebuilt
         assert front.stats.compiles == compiles0
+        assert pfront.stats.compiles == pcompiles0
         for B, prompts in zip(sweep, [_prompts(B) for B in sweep]):
             assert server.generate(prompts, 2)["tokens"].shape == (B, 2)
         assert front.stats.compiles == compiles0
+        assert pfront.stats.compiles == pcompiles0
         assert front.stats.pad_waste > 0  # B=3,5,13 rode padded buckets
+        # prompt-length padding is accounted on the prefill front
+        assert pfront.stats.pad_waste > 0  # P=6 rode the S16 rung
 
     def test_batch_shape_change_reuses_bucket(self, smoke_setup):
         """Regression (inverted from ISSUE 1): a batch-size transition

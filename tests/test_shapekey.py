@@ -14,13 +14,17 @@ from repro.core import (
     get_bucket_policy,
 )
 from repro.core.shapekey import (
+    AxisKey,
     ExactPolicy,
     LadderPolicy,
     PadPlan,
+    PolyAxis,
     Pow2Policy,
     ShapeKey,
     flatten_axes,
+    flatten_axes_nd,
     infer_extent,
+    infer_extents,
     infer_poly_axes,
     pad_args,
 )
@@ -80,6 +84,36 @@ class TestPolicies:
     def test_shape_key_str(self):
         assert str(ShapeKey("pow2", 8)) == "pow2:B8"
 
+    def test_shape_key_2d(self):
+        key = ShapeKey((AxisKey("pow2", 4, "B"), AxisKey("ladder", 64, "S")))
+        assert str(key) == "pow2:B4xladder:S64"
+        assert key.extents == (4, 64)
+        assert key.n_axes == 2
+        # 1-D compatibility views read the first axis
+        assert key.policy == "pow2" and key.extent == 4
+        assert key == ShapeKey(
+            (AxisKey("pow2", 4, "B"), AxisKey("ladder", 64, "S"))
+        )
+        assert key != ShapeKey(
+            (AxisKey("pow2", 4, "B"), AxisKey("ladder", 32, "S"))
+        )
+        assert hash(key) == hash(
+            ShapeKey((AxisKey("pow2", 4, "B"), AxisKey("ladder", 64, "S")))
+        )
+        # a 1-D key and the 2-D key sharing a first axis stay distinct
+        assert key != ShapeKey("pow2", 4)
+
+    def test_shape_key_needs_axes(self):
+        with pytest.raises(ValueError, match="AxisKey"):
+            ShapeKey(())
+
+    def test_shape_key_immutable(self):
+        key = ShapeKey("pow2", 8)
+        with pytest.raises(AttributeError, match="immutable"):
+            key.axes = ()
+        with pytest.raises(AttributeError, match="immutable"):
+            del key.axes
+
 
 # --------------------------------------------------------------------------
 # axis specs + padding plans
@@ -137,6 +171,49 @@ class TestAxisSpecs:
         args = (np.ones((3, 2)), {"s": np.ones((3, 4))}, np.float32(2.0))
         out = pad_args(args, (0, 0, None), 4)
         assert out[0].shape == (4, 2) and out[1]["s"].shape == (4, 4)
+
+    def test_flatten_axes_nd(self):
+        args = (np.zeros((3, 10)), np.zeros((4, 4)))
+        # axis 0 = batch (leaf 0 dim 0), axis 1 = sequence (leaf 0 dim 1)
+        nd = flatten_axes_nd(((0, None), (1, None)), args)
+        assert nd == [(0, 1), (None, None)]
+        flat = list(args)
+        assert infer_extents(flat, nd, 2) == (3, 10)
+        with pytest.raises(ValueError, match="same leaf dim"):
+            flatten_axes_nd(((0, None), (0, None)), args)
+        # negative and non-negative specs naming the same dim collide too
+        with pytest.raises(ValueError, match="same leaf dim"):
+            flatten_axes_nd(((0, None), (-2, None)), args)
+
+    def test_pad_plan_2d_roundtrip(self):
+        plan = PadPlan(n_valid=(3, 5), extent=(4, 8),
+                       in_axes=((0, 1), (None, None)),
+                       out_axes=((0, 1),), mode="edge")
+        assert plan.n_valid_cells == 15
+        assert plan.n_padded == 4 * 8 - 15
+        x = np.arange(15, dtype=np.float32).reshape(3, 5)
+        w = np.ones((2, 2), np.float32)
+        px, pw = plan.pad([x, w])
+        assert px.shape == (4, 8) and pw is w
+        # edge mode replicates the last real row AND column
+        np.testing.assert_array_equal(np.asarray(px)[3], np.asarray(px)[2])
+        np.testing.assert_array_equal(
+            np.asarray(px)[:, 5], np.asarray(px)[:, 4]
+        )
+        (back,) = plan.unpad([px])
+        np.testing.assert_array_equal(np.asarray(back), x)
+
+    def test_pad_plan_axis_count_mismatch(self):
+        with pytest.raises(ValueError, match="axis count"):
+            PadPlan(n_valid=(3, 5), extent=(4,), in_axes=(), out_axes=())
+        with pytest.raises(ValueError, match="does not carry"):
+            PadPlan(n_valid=(3, 5), extent=(4, 8),
+                    in_axes=((0,),), out_axes=())
+
+    def test_pad_args_2d(self):
+        args = (np.ones((3, 10, 2)), np.float32(1.0))
+        out = pad_args(args, ((0, None), (1, None)), (4, 16))
+        assert out[0].shape == (4, 16, 2)
 
 
 # --------------------------------------------------------------------------
@@ -297,9 +374,158 @@ class TestMaskedRowsInert:
         comp = ForgeCompiler(cache=CompileCache())
         bm = comp.compile_bucketed(block_fn, in_axes=BLOCK_IN_AXES)
         mod, key, _ = bm.program_for(*_block_args(3))
-        assert mod.capture.poly_axes == BLOCK_IN_AXES
+        # per-leaf axis vectors: one entry per polymorphic dimension
+        assert mod.capture.poly_axes == tuple((a,) for a in BLOCK_IN_AXES)
+        assert mod.capture.poly_extents == (4,)
         assert mod.capture.poly_extent == key.extent == 4
         assert mod.result.shape_key == "pow2:B4"
+
+
+# --------------------------------------------------------------------------
+# 2-D bucketing: batch × sequence ShapeKeys (ISSUE 4)
+# --------------------------------------------------------------------------
+
+#: block_fn 2-D signature: x is (B, S, E) — batch on dim 0, sequence on
+#: dim 1; all weights shape-fixed
+BLOCK_AXES_2D = (
+    PolyAxis(in_axes=(0,) + (None,) * 7, out_axes=0, policy="pow2",
+             label="B"),
+    PolyAxis(in_axes=(1,) + (None,) * 7, out_axes=1, policy="pow2",
+             label="S"),
+)
+
+
+def _block_args_2d(B, S, seed=0):
+    return make_block_args(np.random.default_rng(seed), B=B, S=S)
+
+
+class TestBucketed2D:
+    def test_2d_dispatch_and_cell_sharing(self, block_fn):
+        """Two concrete (batch, prompt-length) pairs padding into one
+        grid cell share ONE program and ONE compile-cache entry whose
+        key embeds the full 2-D ShapeKey."""
+        cache = CompileCache()
+        comp = ForgeCompiler(
+            PipelineConfig(backend="segment_jit"), cache=cache
+        )
+        bm = comp.compile_bucketed(block_fn, axes=BLOCK_AXES_2D)
+        key1, ns1 = bm.shape_key_for(*_block_args_2d(3, 10))
+        key2, ns2 = bm.shape_key_for(*_block_args_2d(4, 14, seed=1))
+        assert ns1 == (3, 10) and ns2 == (4, 14)
+        assert key1 == key2
+        assert str(key1) == "pow2:B4xpow2:S16"
+        m1, _, _ = bm.program_for(*_block_args_2d(3, 10))
+        m2, _, _ = bm.program_for(*_block_args_2d(4, 14, seed=1))
+        assert m1 is m2
+        assert bm.stats.compiles == 1 and bm.stats.bucket_hits == 1
+        assert "bucket=pow2:B4xpow2:S16" in m1.result.cache_key
+        # capture recorded BOTH polymorphic axes (x carries (0, 1))
+        assert m1.capture.poly_axes[0] == (0, 1)
+        assert m1.capture.poly_axes[1:] == ((None, None),) * 7
+        assert m1.capture.poly_extents == (4, 16)
+
+    def test_2d_matches_exact_within_tol(self, block_fn):
+        """Edge-padded 2-D execution ≡ exact-shape compilation within
+        1e-5: the causal block couples sequence positions only causally,
+        so padded tail columns never reach a real column."""
+        comp = ForgeCompiler(
+            PipelineConfig(backend="segment_jit"), cache=CompileCache()
+        )
+        bm = comp.compile_bucketed(block_fn, axes=BLOCK_AXES_2D)
+        for B, S in ((1, 9), (3, 10), (4, 16), (2, 13)):
+            args = _block_args_2d(B, S, seed=B + S)
+            exact = forge_compile(
+                block_fn, *args, backend="segment_jit"
+            )(*args)
+            got = bm(*args)
+            assert got.shape == exact.shape == (B, S, args[0].shape[2])
+            diff = np.max(np.abs(np.asarray(got, np.float32)
+                                 - np.asarray(exact, np.float32)))
+            assert diff <= 1e-5, f"(B={B}, S={S}): {diff}"
+
+    @pytest.mark.parametrize("policies,sizes,expect_compiles", [
+        # exact batch × pow2 seq: every batch size is its own row of cells
+        (("exact", "pow2"), [(2, 10), (3, 12), (2, 14)], 2),
+        # ladder × ladder: both axes snap to rungs
+        (("ladder:4,8", "ladder:12,24"), [(3, 10), (6, 20), (4, 12)], 2),
+    ])
+    def test_per_axis_policy_combinations(self, block_fn, policies,
+                                          sizes, expect_compiles):
+        bpol, spol = policies
+        axes = (
+            PolyAxis(in_axes=(0,) + (None,) * 7, out_axes=0, policy=bpol,
+                     label="B"),
+            PolyAxis(in_axes=(1,) + (None,) * 7, out_axes=1, policy=spol,
+                     label="S"),
+        )
+        comp = ForgeCompiler(
+            PipelineConfig(backend="interpret"), cache=CompileCache()
+        )
+        bm = comp.compile_bucketed(block_fn, axes=axes)
+        for i, (B, S) in enumerate(sizes):
+            out = bm(*_block_args_2d(B, S, seed=i))
+            assert out.shape[:2] == (B, S)
+        assert bm.stats.compiles == expect_compiles
+        assert len(bm.programs) == expect_compiles
+
+    def test_2d_cell_counters(self, block_fn):
+        """rows_* count CELLS (batch-rows × seq-columns) for 2-D fronts,
+        and the per-program executor totals still sum to the front's."""
+        comp = ForgeCompiler(
+            PipelineConfig(backend="interpret"), cache=CompileCache()
+        )
+        bm = comp.compile_bucketed(block_fn, axes=BLOCK_AXES_2D)
+        sizes = [(1, 9), (3, 10), (4, 16)]
+        for i, (B, S) in enumerate(sizes):
+            bm(*_block_args_2d(B, S, seed=i))
+        s = bm.stats
+        assert s.calls == len(sizes)
+        assert s.rows_real == sum(B * S for B, S in sizes)
+        pad = sum(
+            bm.axes[0].policy.bucket(B) * bm.axes[1].policy.bucket(S) - B * S
+            for B, S in sizes
+        )
+        assert s.rows_padded == pad
+        rows = sum(
+            m.stats.rows_valid_total + m.stats.rows_padded_total
+            for m in bm.programs.values()
+        )
+        assert rows == s.rows_real + s.rows_padded
+
+    def test_nan_seq_padding_inert(self):
+        """NaN-inertness along the sequence axis: on a per-position graph
+        (no cross-position coupling) garbage columns must stay in their
+        columns.  (Causal-attention graphs get *finite*-pad inertness
+        via masking instead — IEEE 0·NaN would still propagate there —
+        covered by test_2d_matches_exact_within_tol.)"""
+
+        def pos_fn(x, w):  # (B, S, E) @ (E, E), positionwise
+            return jax.nn.silu(x @ w) + x
+
+        rng = np.random.default_rng(0)
+        B, S, E = 3, 10, 8
+        x = rng.standard_normal((B, S, E)).astype(np.float32)
+        w = rng.standard_normal((E, E)).astype(np.float32)
+        axes = (
+            PolyAxis(in_axes=(0, None), out_axes=0, policy="pow2",
+                     label="B"),
+            PolyAxis(in_axes=(1, None), out_axes=1, policy="pow2",
+                     label="S"),
+        )
+        comp = ForgeCompiler(
+            PipelineConfig(backend="segment_jit"), cache=CompileCache()
+        )
+        bm = comp.compile_bucketed(pos_fn, axes=axes)
+        mod, key, _ = bm.program_for(x, w)
+        assert key.extents == (4, 16)
+        exact = forge_compile(pos_fn, x, w, backend="segment_jit")(x, w)
+        # garbage-fill BOTH pad regions
+        xb = np.full((4, 16, E), np.nan, np.float32)
+        xb[:B, :S] = x
+        outs = np.asarray(mod(xb, w))
+        np.testing.assert_allclose(outs[:B, :S], np.asarray(exact),
+                                   rtol=1e-5, atol=1e-6)
+        assert np.isnan(outs[B:]).all() and np.isnan(outs[:B, S:]).all()
 
 
 # --------------------------------------------------------------------------
