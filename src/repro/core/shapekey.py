@@ -1,29 +1,38 @@
 """Shape generalization — ShapeKeys, bucket policies and pad-and-mask
 plans (DESIGN.md §Shape generalization).
 
-A production server sees a stream of request batches whose leading
-("batch-polymorphic") extents vary per tick, but the Forge pipeline
-compiles shape-specialized programs: without intervention every new
-batch size re-runs Phases 1-4.  This module makes shape specialization
-an explicit, *bounded* compilation axis:
+A production server sees a stream of request batches whose polymorphic
+extents vary per tick — the batch size AND, for prefill, the prompt
+length — but the Forge pipeline compiles shape-specialized programs:
+without intervention every new shape re-runs Phases 1-4.  This module
+makes shape specialization an explicit, *bounded*, **N-dimensional**
+compilation axis:
 
-* an axis spec (``vmap``-``in_axes``-style tree prefix) marks which
-  input dims are batch-polymorphic — recorded by Phase 1
+* a :class:`PolyAxis` names one polymorphic dimension of a program — an
+  axis spec (``vmap``-``in_axes``-style tree prefix) marking which input
+  dims carry it, an output spec, and its own :class:`BucketPolicy`
+  (``exact`` | ``pow2`` | fixed ``ladder``) mapping a concrete extent
+  to a canonical *bucket* extent.  Phase 1 records the per-leaf axes of
+  every polymorphic dimension
   (:func:`repro.core.capture.trace_to_graph`);
-* a :class:`BucketPolicy` (``exact`` | ``pow2`` | fixed ``ladder``) maps
-  a concrete polymorphic extent to a canonical *bucket* extent;
-* a :class:`ShapeKey` names the bucket — the key of the compiler's
-  per-bucket program table and part of the compile-cache key, so one
-  bucket's program is shared by every concrete shape that pads into it;
-* a :class:`PadPlan` pads concrete inputs up to the bucket extent and
-  slices outputs back down ("pad and mask").  Default padding is
-  **edge replication**: padded rows are copies of the last real row, so
-  they are numerically as benign as real data (no 0/0 or log(0)
-  surprises inside norm/softmax chains).  Soundness relies on the
-  captured graph being batch-row-independent — no op reduces or shuffles
-  across the polymorphic axis — which holds for the decode/forward
+* a :class:`ShapeKey` is a per-axis tuple of :class:`AxisKey` (policy,
+  bucket extent, label) — the key of the compiler's per-bucket program
+  table and part of the compile-cache key, so one cell's program is
+  shared by every concrete shape that pads into it.  The serve path
+  uses a 1-D key (batch) for decode and a 2-D key (batch × sequence)
+  for whole-prompt prefill;
+* a :class:`PadPlan` pads concrete inputs up to the bucket extents
+  along every polymorphic axis and slices outputs back down ("pad and
+  mask").  Default padding is **edge replication**: padded rows/columns
+  are copies of the last real row, so they are numerically as benign as
+  real data (no 0/0 or log(0) surprises inside norm/softmax chains).
+  Soundness relies on the captured graph being row-independent along
+  each polymorphic axis — batch rows never couple, and sequence
+  positions only couple *causally* (a padded tail column can never
+  influence a real prefix column) — which holds for the decode/prefill
   graphs served here and is enforced empirically by the NaN-inertness
-  and bucketed-vs-exact fidelity tests (tests/test_shapekey.py).
+  and bucketed-vs-exact fidelity tests (tests/test_shapekey.py,
+  tests/test_prefill.py).
 """
 from __future__ import annotations
 
@@ -140,20 +149,115 @@ def get_bucket_policy(policy: Union[str, BucketPolicy]) -> BucketPolicy:
 
 
 @dataclass(frozen=True)
-class ShapeKey:
-    """Canonical name of one bucket: (policy, bucket extent).
+class AxisKey:
+    """One axis of a :class:`ShapeKey`: (policy name, bucket extent).
 
-    The program-table key of :class:`~repro.core.compiler.BucketedModule`
-    and the ``bucket=`` component of the compile-cache key — every
-    concrete shape that pads into the bucket shares one ShapeKey and
-    therefore one compiled program.
+    ``label`` is a short dimension tag for display and cache keys —
+    ``"B"`` for batch, ``"S"`` for sequence — so a 2-D key renders as
+    e.g. ``pow2:B4x ladder:S64`` and stays self-describing in cache
+    dumps.
     """
 
     policy: str
     extent: int
+    label: str = "B"
 
     def __str__(self) -> str:
-        return f"{self.policy}:B{self.extent}"
+        return f"{self.policy}:{self.label}{self.extent}"
+
+
+class ShapeKey:
+    """Canonical name of one bucket cell: a per-axis tuple of
+    :class:`AxisKey` (policy, bucket extent) — one entry per polymorphic
+    dimension.
+
+    The program-table key of :class:`~repro.core.compiler.BucketedModule`
+    and the ``bucket=`` component of the compile-cache key — every
+    concrete shape that pads into the cell shares one ShapeKey and
+    therefore one compiled program.  The historical 1-D form
+    ``ShapeKey("pow2", 8)`` remains constructible and exposes
+    ``.policy`` / ``.extent`` views of its first (and only) axis.
+    """
+
+    __slots__ = ("axes",)
+
+    def __init__(
+        self,
+        policy_or_axes: Union[str, Sequence[AxisKey]],
+        extent: Optional[int] = None,
+        label: str = "B",
+    ):
+        if extent is not None:
+            axes: Tuple[AxisKey, ...] = (
+                AxisKey(str(policy_or_axes), int(extent), label),
+            )
+        else:
+            axes = tuple(policy_or_axes)
+            if not axes or not all(isinstance(a, AxisKey) for a in axes):
+                raise ValueError(
+                    f"ShapeKey needs one AxisKey per polymorphic axis, "
+                    f"got {axes!r}"
+                )
+        object.__setattr__(self, "axes", axes)
+
+    # immutable: ShapeKeys are dict keys of the program table and the
+    # compile cache — mutating one after insertion would corrupt lookups
+    def __setattr__(self, name: str, value: Any) -> None:
+        raise AttributeError(f"ShapeKey is immutable (tried to set {name!r})")
+
+    def __delattr__(self, name: str) -> None:
+        raise AttributeError(f"ShapeKey is immutable (tried to del {name!r})")
+
+    # -- 1-D compatibility views (first axis) -----------------------------
+
+    @property
+    def policy(self) -> str:
+        return self.axes[0].policy
+
+    @property
+    def extent(self) -> int:
+        return self.axes[0].extent
+
+    @property
+    def extents(self) -> Tuple[int, ...]:
+        return tuple(a.extent for a in self.axes)
+
+    @property
+    def n_axes(self) -> int:
+        return len(self.axes)
+
+    def __eq__(self, other: Any) -> bool:
+        return isinstance(other, ShapeKey) and self.axes == other.axes
+
+    def __hash__(self) -> int:
+        return hash(self.axes)
+
+    def __str__(self) -> str:
+        return "x".join(str(a) for a in self.axes)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"ShapeKey({self.axes!r})"
+
+
+@dataclass(frozen=True)
+class PolyAxis:
+    """One polymorphic dimension of a bucketed program.
+
+    ``in_axes`` / ``out_axes`` are vmap-style tree prefixes marking
+    where this dimension appears in the inputs / outputs; ``policy``
+    bounds its bucket set independently of every other axis.  A
+    :class:`~repro.core.compiler.BucketedModule` built from N PolyAxes
+    keys its program table by N-axis ShapeKeys — e.g. the serve
+    prefill front is (batch: pow2) × (sequence: ladder).
+    """
+
+    in_axes: AxisSpec = 0
+    out_axes: AxisSpec = 0
+    policy: Union[str, BucketPolicy] = "pow2"
+    label: str = "B"
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "policy", get_bucket_policy(self.policy))
 
 
 # --------------------------------------------------------------------------
@@ -222,6 +326,47 @@ def infer_extent(
     return extent
 
 
+def flatten_axes_nd(
+    specs: Sequence[AxisSpec], tree: Any
+) -> List[Tuple[Optional[int], ...]]:
+    """Per-leaf axis vectors for N polymorphic dimensions.
+
+    ``specs`` holds one vmap-style axis spec per polymorphic dimension;
+    the result has one tuple per leaf of ``tree``, whose i-th entry is
+    the leaf dim carrying polymorphic axis i (or None).  Two polymorphic
+    dimensions may not claim the same dim of one leaf.
+    """
+    if not specs:
+        raise ValueError("flatten_axes_nd needs at least one axis spec")
+    per_axis = [flatten_axes(s, tree) for s in specs]
+    leaves = [tuple(v) for v in zip(*per_axis)]
+    for lv, leaf in zip(leaves, jax.tree_util.tree_leaves(tree)):
+        marked = [a for a in lv if a is not None]
+        # normalize negatives against the leaf's rank so e.g. 0 and -2
+        # on a 2-D leaf are caught as the same dim
+        ndim = getattr(leaf, "ndim", None)
+        if ndim is None:
+            ndim = len(np.shape(leaf))
+        norm = [a % ndim if ndim else a for a in marked]
+        if len(norm) != len(set(norm)):
+            raise ValueError(
+                f"two polymorphic axes claim the same leaf dim: {lv}"
+            )
+    return leaves
+
+
+def infer_extents(
+    flat_leaves: Sequence[Any],
+    flat_axes_nd: Sequence[Tuple[Optional[int], ...]],
+    n_axes: int,
+) -> Tuple[int, ...]:
+    """Concrete extent of each of the N polymorphic axes."""
+    return tuple(
+        infer_extent(flat_leaves, [lv[i] for lv in flat_axes_nd])
+        for i in range(n_axes)
+    )
+
+
 def infer_poly_axes(builder: Callable[[int], Any], n1: int = 2, n2: int = 3) -> Any:
     """Infer per-leaf batch axes of a pytree by differencing two builds.
 
@@ -288,23 +433,70 @@ def _slice_leaf(x: Any, axis: Optional[int], n_valid: int) -> Any:
     return x[tuple(idx)]
 
 
+def _as_axis_tuple(v: Any) -> Tuple[Any, ...]:
+    """Normalize a scalar (1-D legacy) field to a 1-tuple."""
+    return v if isinstance(v, tuple) else (v,)
+
+
 @dataclass(frozen=True)
 class PadPlan:
-    """Pad flat inputs to a bucket extent; mask (slice) flat outputs back.
+    """Pad flat inputs to the bucket extents; mask (slice) outputs back.
 
-    The "mask" is output-side row slicing: padded rows execute but their
-    results never escape — see DESIGN.md for the inertness argument.
+    Generalized over N polymorphic axes: ``n_valid`` / ``extent`` carry
+    one entry per axis, and each per-leaf axis entry is the tuple of
+    leaf dims carrying those axes (None = axis absent from that leaf).
+    The 1-D legacy form (``n_valid=3, extent=8, in_axes=(0, None)``)
+    normalizes itself.  The "mask" is output-side slicing: padded
+    rows/columns execute but their results never escape — see DESIGN.md
+    for the inertness argument.
     """
 
-    n_valid: int
-    extent: int
-    in_axes: Tuple[Optional[int], ...]
-    out_axes: Tuple[Optional[int], ...]
+    n_valid: Tuple[int, ...]
+    extent: Tuple[int, ...]
+    in_axes: Tuple[Tuple[Optional[int], ...], ...]
+    out_axes: Tuple[Tuple[Optional[int], ...], ...]
     mode: str = "edge"
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "n_valid", _as_axis_tuple(self.n_valid))
+        object.__setattr__(self, "extent", _as_axis_tuple(self.extent))
+        if len(self.n_valid) != len(self.extent):
+            raise ValueError(
+                f"n_valid {self.n_valid} / extent {self.extent} axis "
+                f"count mismatch"
+            )
+        n = len(self.extent)
+        for name in ("in_axes", "out_axes"):
+            leaves = tuple(
+                _as_axis_tuple(lv) for lv in getattr(self, name)
+            )
+            for lv in leaves:
+                if len(lv) != n:
+                    raise ValueError(
+                        f"{name} leaf entry {lv} does not carry "
+                        f"{n} axes"
+                    )
+            object.__setattr__(self, name, leaves)
+
+    @property
+    def n_valid_cells(self) -> int:
+        """Real cells per call: product of the valid extents."""
+        return int(np.prod(self.n_valid))
 
     @property
     def n_padded(self) -> int:
-        return self.extent - self.n_valid
+        """Padding cells per call (bucket cells minus real cells)."""
+        return int(np.prod(self.extent)) - self.n_valid_cells
+
+    def _pad_one(self, x: Any, leaf_axes: Tuple[Optional[int], ...]) -> Any:
+        for ext, ax in zip(self.extent, leaf_axes):
+            x = _pad_leaf(x, ax, ext, self.mode)
+        return x
+
+    def _slice_one(self, x: Any, leaf_axes: Tuple[Optional[int], ...]) -> Any:
+        for nv, ax in zip(self.n_valid, leaf_axes):
+            x = _slice_leaf(x, ax, nv)
+        return x
 
     def pad(self, flat_inputs: Sequence[Any]) -> List[Any]:
         if len(flat_inputs) != len(self.in_axes):
@@ -313,8 +505,8 @@ class PadPlan:
                 f"got {len(flat_inputs)}"
             )
         return [
-            _pad_leaf(x, ax, self.extent, self.mode)
-            for x, ax in zip(flat_inputs, self.in_axes)
+            self._pad_one(x, lv)
+            for x, lv in zip(flat_inputs, self.in_axes)
         ]
 
     def unpad(self, flat_outputs: Sequence[Any]) -> List[Any]:
@@ -324,17 +516,30 @@ class PadPlan:
                 f"got {len(flat_outputs)}"
             )
         return [
-            _slice_leaf(x, ax, self.n_valid)
-            for x, ax in zip(flat_outputs, self.out_axes)
+            self._slice_one(x, lv)
+            for x, lv in zip(flat_outputs, self.out_axes)
         ]
 
 
-def pad_args(args: Tuple[Any, ...], in_axes: AxisSpec, extent: int,
+def pad_args(args: Tuple[Any, ...], in_axes: Any, extent: Union[int, Tuple[int, ...]],
              *, mode: str = "edge") -> Tuple[Any, ...]:
-    """Pad a pytree argument tuple up to ``extent`` along its poly axes."""
+    """Pad a pytree argument tuple up to the bucket extents.
+
+    ``extent`` an int → ``in_axes`` is one vmap-style spec (1-D legacy);
+    ``extent`` a tuple → ``in_axes`` is a same-length sequence of specs,
+    one per polymorphic axis.
+    """
+    if isinstance(extent, tuple):
+        specs, extents = tuple(in_axes), extent
+    else:
+        specs, extents = (in_axes,), (extent,)
     flat, tree = jax.tree_util.tree_flatten(args)
-    axes = flatten_axes(in_axes, args)
-    padded = [_pad_leaf(x, ax, extent, mode) for x, ax in zip(flat, axes)]
+    axes_nd = flatten_axes_nd(specs, args)
+    padded = []
+    for x, lv in zip(flat, axes_nd):
+        for ext, ax in zip(extents, lv):
+            x = _pad_leaf(x, ax, ext, mode)
+        padded.append(x)
     return jax.tree_util.tree_unflatten(tree, padded)
 
 
@@ -387,11 +592,22 @@ class BucketStats:
             else:
                 self.pool_misses += 1
 
-    def note_dispatch(self, key: ShapeKey, n_valid: int, extent: int) -> None:
+    def note_dispatch(
+        self,
+        key: ShapeKey,
+        n_valid: Union[int, Tuple[int, ...]],
+        extent: Union[int, Tuple[int, ...]],
+    ) -> None:
+        """Record one dispatch.  ``n_valid``/``extent`` may be per-axis
+        tuples (N-D fronts); ``rows_*`` then count *cells* (the product
+        over axes — e.g. batch-rows × prompt-columns for 2-D prefill),
+        which reduces to plain row counting for 1-D fronts."""
+        valid = int(np.prod(_as_axis_tuple(n_valid)))
+        total = int(np.prod(_as_axis_tuple(extent)))
         with self._lock:
             self.calls += 1
-            self.rows_real += n_valid
-            self.rows_padded += extent - n_valid
+            self.rows_real += valid
+            self.rows_padded += total - valid
             k = str(key)
             self.per_bucket_calls[k] = self.per_bucket_calls.get(k, 0) + 1
 
@@ -402,7 +618,8 @@ class BucketStats:
 
     @property
     def pad_waste(self) -> float:
-        """Fraction of executed batch rows that were padding."""
+        """Fraction of executed cells (rows × … per poly axis) that were
+        padding."""
         total = self.rows_real + self.rows_padded
         return self.rows_padded / total if total else 0.0
 
