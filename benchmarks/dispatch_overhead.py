@@ -133,7 +133,6 @@ def _serve_decode_section(csv: Csv, fast: bool) -> None:
     ``{1,2,3,5,8,13}`` sweep, bucketed fidelity vs ``reference``."""
     from repro.configs import get_config
     from repro.launch.serve import BatchedServer
-    from repro.launch.steps import make_serve_step
     from repro.models import get_model
 
     # scan_layers=False unrolls the layer stack into per-layer accel
@@ -186,12 +185,17 @@ def _serve_decode_section(csv: Csv, fast: bool) -> None:
     # bucketed decode fidelity vs the reference oracle: both sides see
     # the same exact-shape (B=3) args; the cache is built directly —
     # _bucket_args expects bucket-padded prompts and would pollute the
-    # admission pool with a never-again-used extent-3 key
-    step = make_serve_step(cfg)
+    # admission pool with a never-again-used extent-3 key.  The front
+    # carries the slot signature (per-row positions + slot mask) since
+    # continuous batching landed, so the oracle compiles it too.
+    from repro.launch.steps import make_slot_serve_step
+
+    step = make_slot_serve_step(cfg)
     B = 3
     cache = server._build_cache(B)
     tok = jnp.zeros((B, 1), jnp.int32)
-    args = (params, cache, tok, jnp.asarray(0, jnp.int32))
+    args = (params, cache, tok, jnp.zeros((B,), jnp.int32),
+            jnp.ones((B,), bool))
     oracle = ForgeCompiler(
         PipelineConfig(backend="reference"), cache=CompileCache()
     ).compile(step, *args)

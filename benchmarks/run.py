@@ -17,6 +17,8 @@ Prints ``name,us_per_call,derived`` CSV rows (paper-table mapping):
     shape_buckets     recompile-per-shape vs bucketed ShapeKey reuse
     prefill_buckets   sequential vs whole-prompt batched prefill TTFT,
                       2-D (batch × sequence) grid compiles, pad waste
+    continuous_batching  slot scheduler vs group admission: tok/s,
+                      occupancy, pad-decode fraction, swap fidelity
     variance          Table 19
     roofline_report   §Roofline (reads the dry-run results JSON)
 
@@ -49,6 +51,7 @@ MODULES = (
     "dispatch_overhead",
     "shape_buckets",
     "prefill_buckets",
+    "continuous_batching",
     "variance",
     "roofline_report",
 )

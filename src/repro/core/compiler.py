@@ -214,6 +214,19 @@ def _tree_nbytes(tree: Any) -> int:
     return total
 
 
+def bucket_pool_key(key: ShapeKey) -> Any:
+    """Canonical :class:`BufferPool` keying for one bucket program.
+
+    The single contract shared by pool writers and reapers: the serve
+    path parks caches under the bucket's batch extent (``key.extent``,
+    a plain int — what ``policy.bucket(B)`` hands it before a ShapeKey
+    exists), N-D fronts under the full extents tuple.
+    :meth:`BucketedModule.evict_cold` releases through the same helper,
+    so a keying change cannot silently strand pooled buffers.
+    """
+    return key.extent if key.n_axes == 1 else key.extents
+
+
 class BufferPool:
     """Per-bucket device-buffer pool (DESIGN.md §Buffer pooling).
 
@@ -282,6 +295,19 @@ class BufferPool:
         with self._lock:
             entries = self._free.get(key)
             return len(entries) if entries else 0
+
+    def drop(self, key: Any) -> int:
+        """Release ``key``'s free list (cold-bucket eviction).
+
+        Returns the number of buffer sets dropped; the device buffers
+        are freed when the last reference dies.  A no-op for unknown
+        keys, so callers may drop every plausible keying of an evicted
+        bucket.
+        """
+        with self._lock:
+            entries = self._free.pop(key, None)
+            self._nbytes.pop(key, None)
+        return len(entries) if entries else 0
 
 
 class BucketedModule:
@@ -442,6 +468,41 @@ class BucketedModule:
         outs = mod.executor.execute_padded(flat, plan=plan)
         self.stats.note_dispatch(key, ns, key.extents)
         return mod._unflatten_outputs(outs)
+
+    # -- eviction ---------------------------------------------------------
+
+    def evict_cold(self, max_programs: int) -> List[ShapeKey]:
+        """Retire least-recently-dispatched programs beyond a budget.
+
+        The program table never shrinks on its own — a ladder policy
+        bounds it, but a server that saw a one-off traffic spike keeps
+        the spike's bucket programs (and their pooled buffers) alive
+        forever.  This trims the table to ``max_programs`` entries by
+        the ``BucketStats.per_bucket_last_dispatch`` recency trail
+        (never-dispatched programs evict first), releasing each evicted
+        bucket's pooled device buffers.  Returns the evicted ShapeKeys;
+        a later dispatch of an evicted bucket recompiles it (counted as
+        a fresh ``compiles``) — callers trade table memory for that
+        recompile risk.
+        """
+        if max_programs < 0:
+            raise ValueError(f"max_programs must be >= 0, got {max_programs}")
+        with self._lock:
+            excess = len(self.programs) - max_programs
+            if excess <= 0:
+                return []
+            last = self.stats.per_bucket_last_dispatch
+            victims = sorted(
+                self.programs, key=lambda k: last.get(str(k), 0)
+            )[:excess]
+            for k in victims:
+                del self.programs[k]
+                self._out_axes_flat.pop(k, None)
+                self._build_locks.pop(k, None)
+        for k in victims:
+            self.pool.drop(bucket_pool_key(k))
+            self.stats.note_eviction(k)
+        return victims
 
     # -- transparency -----------------------------------------------------
 

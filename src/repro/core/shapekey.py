@@ -565,6 +565,13 @@ class BucketStats:
     rows_real: int = 0
     rows_padded: int = 0
     per_bucket_calls: Dict[str, int] = field(default_factory=dict)
+    #: monotonic dispatch counter — the "clock" of the recency trail
+    dispatch_seq: int = 0
+    #: ShapeKey str -> dispatch_seq of that bucket's most recent dispatch
+    #: (the traffic signal BucketedModule.evict_cold retires against)
+    per_bucket_last_dispatch: Dict[str, int] = field(default_factory=dict)
+    #: programs retired by evict_cold (their stats trail is dropped too)
+    evictions: int = 0
     # -- per-bucket buffer pool counters (BufferPool) ----------------------
     #: acquisitions satisfied by a pooled device-buffer set
     pool_hits: int = 0
@@ -610,6 +617,16 @@ class BucketStats:
             self.rows_padded += total - valid
             k = str(key)
             self.per_bucket_calls[k] = self.per_bucket_calls.get(k, 0) + 1
+            # recency trail: a monotonic counter rather than wall time, so
+            # "least recently dispatched" is deterministic and testable
+            self.dispatch_seq += 1
+            self.per_bucket_last_dispatch[k] = self.dispatch_seq
+
+    def note_eviction(self, key: "ShapeKey") -> None:
+        """Drop a retired bucket's traffic trail (evict_cold)."""
+        with self._lock:
+            self.evictions += 1
+            self.per_bucket_last_dispatch.pop(str(key), None)
 
     @property
     def hit_rate(self) -> float:

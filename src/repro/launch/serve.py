@@ -1,7 +1,7 @@
 """Batched serving driver: whole-prompt prefill + decode loop over the
-compiled steps, with 2-D shape-generalized bucketing and group-level
-continuous batching (request groups of any batch size × prompt length
-admitted without recompiling).
+compiled steps, with 2-D shape-generalized bucketing and slot-level
+continuous batching (per-row decode positions, mid-generation admission
+into finished slots, pad-waste-aware packing).
 
 The serve path is where the Forge pipeline earns its keep at runtime:
 the decode step is compiled once per batch ShapeKey *bucket* (capture →
@@ -16,25 +16,34 @@ provably inert, see DESIGN.md §Shape generalization), prefilled in ONE
 whole-prompt forward pass on the grid cell's compiled ``prefill_step``
 program (the KV cache written in one shot, causal within the chunk),
 then decoded on the batch bucket's program with the padding rows sliced
-off the emitted tokens.  Before 2-D bucketing, prefill replayed the
-prompt token-at-a-time through ``decode_step`` — time-to-first-token
-(TTFT) scaled linearly with prompt length and every distinct length
-risked a recompile.  After :meth:`BatchedServer.warmup` no (batch,
+off the emitted tokens.  After :meth:`BatchedServer.warmup` no (batch,
 prompt-length) pair within the ladder grid ever re-runs Phases 1-4 —
 compile cost (``compile_s``) and TTFT are reported separately from
 steady-state decode throughput so bucket reuse is visible from the CLI.
+
+Since the decode position became a per-row vector, the forge fronts
+compile the *slot* signature — ``(params, cache, tok(B,1), pos(B,),
+slot_mask(B,))`` — so the same compiled bucket programs serve both
+group admission (``generate``: all rows share one position) and the
+:class:`SlotScheduler` (``SlotScheduler.run``: ragged positions, finished
+slots swapped for queued requests mid-generation, buckets packed
+exactly).  See DESIGN.md §Continuous batching.
 
 Usage (CPU-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch forge-125m --smoke \
       --batch 4 --prompt-len 32 --gen 32
   PYTHONPATH=src python -m repro.launch.serve --arch forge-125m --smoke \
       --mode forge --sweep 1,4 --prompt-sweep 17,32,48,100 --gen 8
+  PYTHONPATH=src python -m repro.launch.serve --arch forge-125m --smoke \
+      --mode forge --continuous 24 --max-slots 8 --gen 12
 """
 from __future__ import annotations
 
 import argparse
 import threading
 import time
+from collections import deque
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -43,7 +52,7 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..models import get_model
-from .steps import make_serve_step
+from .steps import make_serve_step, supports_slot_decode
 
 
 class BatchedServer:
@@ -57,6 +66,13 @@ class BatchedServer:
     so each decode step is a plain program replay — no per-step padding,
     no module rebuilds on batch-size transitions.
 
+    For slot-capable families the decode front compiles the vectorized
+    slot signature (per-row ``pos`` + ``slot_mask``); ``generate`` runs
+    it with a broadcast position and an all-true mask (group admission
+    as a special case of slot decode), and :class:`SlotScheduler` drives
+    the same programs with ragged positions — one program table serves
+    both, so continuous batching adds zero compiles.
+
     Prefill runs through a second, 2-D front: one compiled
     ``prefill_step`` program per (batch-bucket × sequence-bucket) grid
     cell (``seq_bucket_policy``, a fixed ladder by default), consuming
@@ -65,7 +81,11 @@ class BatchedServer:
     scaling with per-token dispatches.  Families without a chunked
     cache-write path (recurrent state caches) fall back to the
     sequential decode-step loop automatically, as do prompts whose
-    sequence bucket would not fit ``max_len``.
+    sequence bucket would not fit ``max_len``.  The prefill front takes
+    a ``slot_mask`` too: the slot scheduler prefills a queued prompt
+    into a finished slot's KV rows while every other slot's cache stays
+    bitwise untouched (write-inert masking, DESIGN.md §Continuous
+    batching).
 
     Steady-state replay avoids re-allocation on two levels (DESIGN.md
     §Donation, §Buffer pooling): accel segments donate dying live-in
@@ -103,11 +123,18 @@ class BatchedServer:
         #: fits the ladder) | "batched" | "sequential" (force the legacy
         #: token-at-a-time loop — the TTFT baseline)
         self.prefill_policy = prefill
+        #: whether the forge fronts carry the vectorized slot signature
+        #: (per-row pos + slot_mask); families outside the slot contract
+        #: compile the legacy scalar-position signature instead
+        self.slot_capable = supports_slot_decode(cfg)
         #: the decode multi-program front (mode=forge); built once
         self.bucketed = None
         #: the 2-D (batch × sequence) whole-prompt prefill front; None
         #: for families without a chunked cache-write path
         self.prefill_bucketed = None
+        #: per-leaf cache batch axes (set with the fronts; the slot
+        #: scheduler's bucket-resize row gather reads it)
+        self.cache_axes = None
         #: how the most recent prefill ran ("batched" | "sequential")
         self.last_prefill_mode = None
         #: most recently dispatched bucket program (CLI transparency)
@@ -129,7 +156,11 @@ class BatchedServer:
                 return
             from ..core import ForgeCompiler, PipelineConfig, PolyAxis
             from ..core.shapekey import infer_poly_axes
-            from .steps import make_batched_prefill_step
+            from .steps import (
+                make_batched_prefill_step,
+                make_slot_prefill_step,
+                make_slot_serve_step,
+            )
 
             # per-leaf cache batch axes differ across model families
             # (transformer: axis 1 under the layer dim; recurrent states:
@@ -141,33 +172,47 @@ class BatchedServer:
                     lambda: self.model.init_cache(self.cfg, b, self.max_len)
                 )
             )
-            step = make_serve_step(self.cfg)
+            self.cache_axes = cache_axes
             compiler = ForgeCompiler(PipelineConfig(backend=self.backend))
             # the 2-D prefill front: batch × sequence, one program per
             # grid cell.  Only tokens/logits carry the sequence axis —
             # the KV cache is max_len-resident on both sides.
-            # prefill_step: (params, cache, tokens, pos) -> (logits, cache)
-            prefill_step = (
-                make_batched_prefill_step(self.cfg)
-                if self.prefill_policy != "sequential" else None
-            )
+            prefill_step = None
+            if self.prefill_policy != "sequential":
+                prefill_step = (
+                    make_slot_prefill_step(self.cfg) if self.slot_capable
+                    else make_batched_prefill_step(self.cfg)
+                )
             prefill_front = None
             if prefill_step is not None:
+                # slot signature: (params, cache, tokens, pos, slot_mask)
+                # legacy:         (params, cache, tokens, pos)
+                b_in = ((None, cache_axes, 0, None, 0) if self.slot_capable
+                        else (None, cache_axes, 0, None))
+                s_in = ((None, None, 1, None, None) if self.slot_capable
+                        else (None, None, 1, None))
                 prefill_front = compiler.compile_bucketed(
                     prefill_step,
                     axes=(
-                        PolyAxis(in_axes=(None, cache_axes, 0, None),
-                                 out_axes=(0, cache_axes),
+                        PolyAxis(in_axes=b_in, out_axes=(0, cache_axes),
                                  policy=self.bucket_policy, label="B"),
-                        PolyAxis(in_axes=(None, None, 1, None),
-                                 out_axes=(1, None),
+                        PolyAxis(in_axes=s_in, out_axes=(1, None),
                                  policy=self.seq_bucket_policy, label="S"),
                     ),
                 )
-            # serve_step: (params, cache, token, pos) -> (next_tok, new_cache)
+            # decode front: one program per batch bucket.  Slot-capable
+            # families compile (params, cache, token, pos(B,), mask(B,))
+            # — group admission broadcasts into it, the slot scheduler
+            # drives it ragged; the program table is shared.
+            if self.slot_capable:
+                step = make_slot_serve_step(self.cfg)
+                in_axes = (None, cache_axes, 0, 0, 0)
+            else:
+                step = make_serve_step(self.cfg)
+                in_axes = (None, cache_axes, 0, None)
             self.bucketed = compiler.compile_bucketed(
                 step,
-                in_axes=(None, cache_axes, 0, None),
+                in_axes=in_axes,
                 out_axes=(0, cache_axes),
                 policy=self.bucket_policy,
             )
@@ -176,6 +221,35 @@ class BatchedServer:
     def _bucket_extent(self, B: int) -> int:
         self._ensure_bucketed()
         return self.bucketed.policy.bucket(B)
+
+    def _decode_args(self, extent: int, tok, pos, active: Optional[Any] = None):
+        """Bucket-program decode argument tuple for the front signature.
+
+        ``pos`` scalar broadcasts to a per-row vector and ``active``
+        defaults to all-true for slot-capable fronts; legacy fronts get
+        the scalar position through unchanged.
+        """
+        if not self.slot_capable:
+            return (tok, jnp.asarray(pos, jnp.int32))
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim == 0:
+            pos = jnp.full((extent,), pos, jnp.int32)
+        if active is None:
+            active = jnp.ones((extent,), bool)
+        else:
+            active = jnp.asarray(active, bool)
+        return (tok, pos, active)
+
+    def _prefill_args(self, extent: int, tokens, pos, active: Optional[Any] = None):
+        """Argument tail for the prefill front (scalar pos + slot mask)."""
+        pos = jnp.asarray(pos, jnp.int32)
+        if not self.slot_capable:
+            return (tokens, pos)
+        if active is None:
+            active = jnp.ones((extent,), bool)
+        else:
+            active = jnp.asarray(active, bool)
+        return (tokens, pos, active)
 
     def _build_cache(self, extent: int):
         from .steps import dealias_tree
@@ -186,7 +260,13 @@ class BatchedServer:
         )
 
     def _acquire_cache(self, extent: int):
-        """Bucket-extent KV cache: pooled in forge mode, fresh otherwise."""
+        """Bucket-extent KV cache: pooled in forge mode, fresh otherwise.
+
+        The pool key is the bare batch extent — the same contract
+        :func:`repro.core.compiler.bucket_pool_key` gives a 1-D
+        ShapeKey, so ``BucketedModule.evict_cold`` releases what this
+        method parks.
+        """
         if self.bucketed is None:
             return self._build_cache(extent)
         return self.bucketed.pool.acquire(
@@ -242,15 +322,12 @@ class BatchedServer:
             done.add(extent)
             prompts_b = np.zeros((extent, 1), np.int32)
             cache, tok = self._bucket_args(prompts_b)
-            mod, key, _ = self.bucketed.program_for(
-                self.params, cache, tok, jnp.asarray(0, jnp.int32)
-            )
+            args = self._decode_args(extent, tok, 0)
+            mod, key, _ = self.bucketed.program_for(self.params, cache, *args)
             # one throwaway step: warms the per-op eager-dispatch caches
             # the host segments hit, so the first *served* request per
             # bucket sees steady-state latency
-            _, warm_cache = mod(
-                self.params, cache, tok, jnp.asarray(0, jnp.int32)
-            )
+            _, warm_cache = mod(self.params, cache, *args)
             # keep the counter invariant (executor total_calls sums to
             # BucketStats.calls) without skewing pad_waste: the throwaway
             # step's rows are all padding, none are served requests
@@ -272,12 +349,11 @@ class BatchedServer:
                     cells.add((extent, s_ext))
                     tokens = jnp.zeros((extent, s_ext), jnp.int32)
                     cache = self._acquire_cache(extent)
+                    pargs = self._prefill_args(extent, tokens, 0)
                     pmod, pkey, _ = self.prefill_bucketed.program_for(
-                        self.params, cache, tokens, jnp.asarray(0, jnp.int32)
+                        self.params, cache, *pargs
                     )
-                    _, warm_cache = pmod(
-                        self.params, cache, tokens, jnp.asarray(0, jnp.int32)
-                    )
+                    _, warm_cache = pmod(self.params, cache, *pargs)
                     # all-padding throwaway, same invariant as decode
                     self.prefill_bucketed.stats.note_dispatch(
                         pkey, (0, 0), pkey.extents
@@ -316,6 +392,28 @@ class BatchedServer:
             )
         return cache, next_tok, P, self.serve_step, None
 
+    def _group_step(self, mod, extent: int):
+        """Adapt a bucket program to the group-admission loop signature.
+
+        ``generate`` advances all rows in lockstep from one scalar
+        position; slot-capable programs receive it broadcast to a
+        per-row vector with an all-true slot mask (group admission is
+        the degenerate slot schedule where every slot shares one
+        request lifetime).
+        """
+        if not self.slot_capable:
+            return mod
+
+        # hoisted: the mask is all-true for the whole generation — only
+        # the position vector changes per step (one broadcast fill)
+        ones = jnp.ones((extent,), bool)
+
+        def step(params, cache, tok, pos):
+            pos_vec = jnp.full((extent,), jnp.asarray(pos, jnp.int32))
+            return mod(params, cache, tok, pos_vec, ones)
+
+        return step
+
     def _prefill_batched(self, prompts: np.ndarray, s_ext: int):
         """Whole-prompt prefill on the (batch × sequence) grid cell.
 
@@ -331,22 +429,22 @@ class BatchedServer:
                            mode="edge")
         cache = self._acquire_cache(extent)
         tokens = jnp.asarray(prompts_b, jnp.int32)
-        pos0 = jnp.asarray(0, jnp.int32)
+        pargs = self._prefill_args(extent, tokens, 0)
         pmod, pkey, _ = self.prefill_bucketed.program_for(
-            self.params, cache, tokens, pos0
+            self.params, cache, *pargs
         )
-        logits, cache = pmod(self.params, cache, tokens, pos0)
+        logits, cache = pmod(self.params, cache, *pargs)
         self.prefill_bucketed.stats.note_dispatch(pkey, (B, P), pkey.extents)
         # mask: the padded tail columns' logits never escape — the next
         # token comes from the last real column (the padded rows decode
         # edge-replica tokens and are sliced off at the end)
         tok = jnp.argmax(logits[:, P - 1, :], axis=-1).astype(jnp.int32)[:, None]
         mod, key, _ = self.bucketed.program_for(
-            self.params, cache, tok, jnp.asarray(P, jnp.int32)
+            self.params, cache, *self._decode_args(extent, tok, P)
         )
         self.forge_module = mod
         self.last_prefill_mode = "batched"
-        return cache, tok, P, mod, key
+        return cache, tok, P, self._group_step(mod, extent), key
 
     def _prefill_sequential(self, prompts: np.ndarray):
         """Token-at-a-time prefill through the decode bucket program
@@ -357,18 +455,19 @@ class BatchedServer:
         prompts_b = np.pad(prompts, ((0, extent - B), (0, 0)), mode="edge")
         cache, tok = self._bucket_args(prompts_b)
         mod, key, _ = self.bucketed.program_for(
-            self.params, cache, tok, jnp.asarray(0, jnp.int32)
+            self.params, cache, *self._decode_args(extent, tok, 0)
         )
         self.forge_module = mod
+        step = self._group_step(mod, extent)
         next_tok = None
         for i in range(P):
             tok_i = jnp.asarray(prompts_b[:, i:i + 1], jnp.int32)
-            next_tok, cache = mod(
+            next_tok, cache = step(
                 self.params, cache, tok_i, jnp.asarray(i, jnp.int32)
             )
             self.bucketed.stats.note_dispatch(key, B, prompts_b.shape[0])
         self.last_prefill_mode = "sequential"
-        return cache, next_tok, P, mod, key
+        return cache, next_tok, P, step, key
 
     def _compile_s_total(self) -> float:
         """Phase 1-4 seconds accumulated across BOTH serve fronts."""
@@ -421,15 +520,502 @@ class BatchedServer:
 
     def run_workload(self, groups: Sequence[np.ndarray], n_new: int
                      ) -> List[Dict[str, Any]]:
-        """Serve a FIFO stream of request groups of varying batch size.
+        """Serve a FIFO stream of request groups, one group at a time.
 
-        Group-level continuous batching: each group is admitted whole
-        and padded to its bucket.  (``decode_step``'s scalar write
-        position keeps the rows of one group in lockstep, so admission
-        is per group — slot-level admission needs per-row positions; see
-        ROADMAP open items.)
+        Group admission: each group is admitted whole, padded to its
+        bucket, and decoded in lockstep until the LAST row reaches
+        ``n_new`` tokens — short requests pad-decode until the longest
+        finishes, and the bucket's padding rows decode garbage for the
+        whole generation.  This is the throughput *baseline*;
+        :class:`SlotScheduler` retires each slot
+        independently and swaps queued requests into finished slots
+        mid-generation, converting both kinds of pad-decode into real
+        tokens.
         """
         return [self.generate(g, n_new) for g in groups]
+
+
+# --------------------------------------------------------------------------
+# slot-level continuous batching
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Request:
+    """One generation request (the slot scheduler's admission unit)."""
+
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new: int  # tokens to emit (first comes from the prompt's last logits)
+    arrival: int = 0  # decode-step tick at which the request may be admitted
+
+
+@dataclass
+class _Slot:
+    """Mutable per-slot serving state (one bucket row)."""
+
+    req: Request
+    pos: int = 0  # next cache write position == tokens consumed so far
+    #: prompt tokens still to consume through masked decode replay; None
+    #: once the prompt is in the cache (batched prefill or fill done)
+    fill: Optional[np.ndarray] = None
+    remaining: int = 0  # decode steps left after the first emitted token
+    cur_tok: int = 0  # last emitted token (next decode input)
+    tokens: List[int] = field(default_factory=list)
+    admitted_tick: int = 0
+    swapped_in: bool = False  # admitted into a slot another request vacated
+
+
+class SlotScheduler:
+    """Slot-level continuous batching over a :class:`BatchedServer`.
+
+    Replaces group admission with per-slot lifetimes: a request queue,
+    per-slot state (position, remaining budget, parked KV rows), and one
+    decode dispatch per tick advancing every active slot at its OWN
+    position (``pos: int32[B]`` + ``slot_mask: bool[B]`` through the
+    bucket program).  When a slot finishes, the next queued request is
+    swapped in mid-generation — its prompt prefilled into the finished
+    slot's KV rows through the slot-masked prefill grid (one dispatch;
+    every other slot's cache rows survive bitwise) or, for families
+    without batched prefill, consumed token-by-token INSIDE the decode
+    loop while the other slots keep generating.
+
+    Admission is pad-waste-aware: queued requests are packed to fill the
+    bucket exactly (13 active + 3 queued → B16), and the bucket is
+    resized — active rows gathered into a smaller/larger bucket's cache
+    via the pooled buffers — only when the active-slot count crosses a
+    ladder rung.  All programs come from the server's warmed bucket
+    grid, so steady-state scheduling runs zero Phase 1-4 compiles.
+    """
+
+    def __init__(self, server: BatchedServer, max_slots: int = 16):
+        if server.mode != "forge":
+            raise ValueError("SlotScheduler needs mode='forge' "
+                             "(bucketed slot-signature fronts)")
+        if not server.slot_capable:
+            raise ValueError(
+                f"family {server.cfg.family!r} has no slot-level decode"
+            )
+        server._ensure_bucketed()
+        self.server = server
+        self.max_slots = int(max_slots)
+        # fail fast if the ladder cannot admit the slot cap
+        self.top_extent = server.bucketed.policy.bucket(self.max_slots)
+        #: one-row init_cache template for stateful-decode swap-ins
+        #: (built lazily; KV-only families never need it)
+        self._init_row = None
+        self.metrics: Dict[str, Any] = {}
+        self._reset_metrics()
+
+    def _reset_metrics(self) -> None:
+        self.metrics = {
+            "decode_dispatches": 0,
+            "occupied_row_steps": 0,
+            "capacity_row_steps": 0,
+            "prefill_dispatches": 0,
+            "swaps": 0,
+            "resizes": 0,
+            "idle_ticks": 0,
+        }
+
+    # -- warmup -----------------------------------------------------------
+
+    def rungs(self) -> List[int]:
+        """Every bucket extent the scheduler can resize through."""
+        policy = self.server.bucketed.policy
+        return sorted({policy.bucket(n) for n in range(1, self.max_slots + 1)})
+
+    def warmup(self, prompt_lens: Optional[Sequence[int]] = None) -> float:
+        """Precompile every reachable rung (and prefill grid cells)."""
+        return self.server.warmup(self.rungs(), prompt_lens=prompt_lens)
+
+    # -- bucket resize ----------------------------------------------------
+
+    def _gather_rows(self, old_cache, new_cache, src_rows: List[int]):
+        """Move the active slots' cache rows into the new bucket's cache.
+
+        Row ``src_rows[j]`` of every batch-polymorphic leaf lands in row
+        ``j``; batch-free leaves (none in current families) keep the new
+        cache's zeros.  Runs once per rung crossing — eager jnp ops, no
+        compiled program involved.
+        """
+        from ..core.shapekey import flatten_axes
+
+        flat_old, tree = jax.tree_util.tree_flatten(old_cache)
+        flat_new, _ = jax.tree_util.tree_flatten(new_cache)
+        axes = flatten_axes(self.server.cache_axes, old_cache)
+        src = jnp.asarray(src_rows, jnp.int32)
+        n = len(src_rows)
+        moved = []
+        for o, nw, ax in zip(flat_old, flat_new, axes):
+            if ax is None:
+                moved.append(nw)
+                continue
+            rows = jnp.take(o, src, axis=ax)
+            sl = [slice(None)] * nw.ndim
+            sl[ax] = slice(0, n)
+            moved.append(nw.at[tuple(sl)].set(rows))
+        return jax.tree_util.tree_unflatten(tree, moved)
+
+    def _reset_rows(self, cache, rows: List[int], extent: int):
+        """Re-initialize the admitted rows of a stateful-decode cache.
+
+        KV rows are reusable as-is (the per-row position mask hides
+        stale entries past the new request's position), but recurrent
+        states fold every past token in: without this reset a swapped-in
+        request would continue the PREVIOUS occupant's h/conv/cell
+        state.  Blends the one-row ``init_cache`` template into the
+        admitted rows only — every other slot's state survives bitwise.
+        """
+        from ..core.shapekey import flatten_axes
+
+        srv = self.server
+        if self._init_row is None:
+            self._init_row = srv.model.init_cache(srv.cfg, 1, srv.max_len)
+        mask = np.zeros((extent,), bool)
+        mask[rows] = True
+        flat, tree = jax.tree_util.tree_flatten(cache)
+        flat_init, _ = jax.tree_util.tree_flatten(self._init_row)
+        axes = flatten_axes(srv.cache_axes, cache)
+        out = []
+        for leaf, ini, ax in zip(flat, flat_init, axes):
+            if ax is None:
+                out.append(leaf)
+                continue
+            shape = [1] * leaf.ndim
+            shape[ax] = extent
+            m = jnp.asarray(mask).reshape(shape)
+            out.append(jnp.where(m, ini, leaf))  # ini broadcasts (1 @ ax)
+        return jax.tree_util.tree_unflatten(tree, out)
+
+    # -- the scheduling loop ----------------------------------------------
+
+    def run(self, requests: Sequence[Request]) -> Dict[str, Any]:
+        """Serve ``requests`` to completion; returns results + metrics.
+
+        The clock is the decode-dispatch counter (``tick``):
+        ``Request.arrival`` is measured in ticks, and a tick with no
+        runnable slot fast-forwards to the next arrival.
+        """
+        srv = self.server
+        params = srv.params
+        policy = srv.bucketed.policy
+        stats = srv.bucketed.stats
+        self._reset_metrics()
+        compiles0 = stats.compiles + (
+            srv.prefill_bucketed.stats.compiles if srv.prefill_bucketed else 0
+        )
+
+        for r in requests:
+            if len(r.prompt) < 1:
+                raise ValueError(f"request {r.rid}: prompt must be non-empty")
+            if len(r.prompt) + r.max_new > srv.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {len(r.prompt)} + budget "
+                    f"{r.max_new} exceeds max_len={srv.max_len}"
+                )
+            if r.max_new < 1:
+                raise ValueError(f"request {r.rid}: max_new must be >= 1")
+
+        pendreq = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        queue: deque = deque()
+        slots: List[Optional[_Slot]] = []
+        extent = 0
+        cache = None
+        mod = key = None
+        cur_tok = np.zeros((0, 1), np.int32)
+        cur_pos = np.zeros((0,), np.int32)
+        results: Dict[int, Dict[str, Any]] = {}
+        tick = 0
+        #: device-resident (tok, pos, mask) for the steady-state fast
+        #: path; None whenever host state changed since the last dispatch
+        dev_args = None
+        #: token columns not yet copied to host (steady-state ticks defer
+        #: the D2H sync; harvested at the next boundary — see _harvest)
+        pending: List[Any] = []
+        t0 = time.perf_counter()
+
+        def active_count() -> int:
+            return sum(s is not None for s in slots)
+
+        def resolve_program():
+            nonlocal mod, key
+            args = srv._decode_args(extent, jnp.asarray(cur_tok),
+                                    jnp.asarray(cur_pos))
+            mod, key, _ = srv.bucketed.program_for(params, cache, *args)
+            srv.forge_module = mod
+
+        def retire(i: int, s: _Slot) -> None:
+            results[s.req.rid] = {
+                "tokens": np.asarray(s.tokens, np.int32),
+                "admitted_tick": s.admitted_tick,
+                "finished_tick": tick,
+                "swapped_in": s.swapped_in,
+            }
+            slots[i] = None
+
+        def harvest() -> None:
+            """Copy the deferred token columns to host, in tick order.
+
+            The active set cannot have changed while ticks were pending
+            (any change is a boundary that harvests first), so every
+            pending column distributes to the same rows.
+            """
+            if not pending:
+                return
+            rows = [i for i, s in enumerate(slots) if s is not None]
+            for out in pending:
+                arr = np.asarray(out)
+                for i in rows:
+                    s = slots[i]
+                    s.cur_tok = int(arr[i, 0])
+                    s.tokens.append(s.cur_tok)
+            pending.clear()
+
+        while pendreq or queue or any(s is not None for s in slots):
+            while pendreq and pendreq[0].arrival <= tick:
+                queue.append(pendreq.popleft())
+
+            # ---- pad-waste-aware admission + rung resize ----------------
+            active = active_count()
+            want = min(active + len(queue), self.max_slots)
+            if want > 0:
+                target = policy.bucket(want)
+                if target != extent:
+                    keep = [(i, s) for i, s in enumerate(slots)
+                            if s is not None]
+                    new_cache = srv._acquire_cache(target)
+                    if keep and cache is not None:
+                        new_cache = self._gather_rows(
+                            cache, new_cache, [i for i, _ in keep]
+                        )
+                    if cache is not None:
+                        srv._release_cache(extent, cache)
+                        self.metrics["resizes"] += 1
+                    cache = new_cache
+                    new_tok = np.zeros((target, 1), np.int32)
+                    new_pos = np.zeros((target,), np.int32)
+                    new_slots: List[Optional[_Slot]] = [None] * target
+                    for dst, (i, s) in enumerate(keep):
+                        new_slots[dst] = s
+                        new_tok[dst] = cur_tok[i]
+                        new_pos[dst] = cur_pos[i]
+                    slots, cur_tok, cur_pos = new_slots, new_tok, new_pos
+                    extent = target
+                    dev_args = None
+                    resolve_program()
+                # pack queued requests into every free slot (13+3 → B16)
+                mid_generation = active > 0
+                admitted: List[int] = []
+                for i in range(extent):
+                    if not queue:
+                        break
+                    if slots[i] is not None:
+                        continue
+                    req = queue.popleft()
+                    # a swap-in: admission while other slots are mid-
+                    # generation (the continuous-batching case the
+                    # lockstep server could not serve)
+                    slots[i] = _Slot(
+                        req=req, admitted_tick=tick,
+                        swapped_in=mid_generation,
+                        fill=np.asarray(req.prompt, np.int32),
+                    )
+                    if mid_generation:
+                        self.metrics["swaps"] += 1
+                    admitted.append(i)
+                if admitted:
+                    cache = self._admit(admitted, slots, cache, extent,
+                                        cur_tok, cur_pos)
+                    dev_args = None
+                    # degenerate 1-token budgets finish at admission
+                    for i in admitted:
+                        s = slots[i]
+                        if s.fill is None and s.remaining <= 0:
+                            retire(i, s)
+
+            if not any(s is not None for s in slots):
+                if pendreq:
+                    # nothing runnable until the next arrival
+                    self.metrics["idle_ticks"] += 1
+                    tick = max(tick + 1, pendreq[0].arrival)
+                    continue
+                break
+
+            # ---- one decode dispatch advances every active slot ---------
+            if dev_args is None:
+                mask_np = np.array([s is not None for s in slots])
+                for i, s in enumerate(slots):
+                    if s is None:
+                        continue
+                    cur_pos[i] = s.pos
+                    cur_tok[i, 0] = (s.fill[s.pos] if s.fill is not None
+                                     else s.cur_tok)
+                tok_dev = jnp.asarray(cur_tok)
+                pos_dev = jnp.asarray(cur_pos)
+                mask_dev = jnp.asarray(mask_np)
+            else:
+                # steady state (same active set, no prompts being
+                # consumed): the previous dispatch's output IS this
+                # dispatch's input — feed the device arrays straight
+                # back, no host round-trip
+                tok_dev, pos_dev, mask_dev = dev_args
+            out_tok, cache = mod(params, cache, tok_dev, pos_dev, mask_dev)
+            n_act = sum(s is not None for s in slots)
+            stats.note_dispatch(key, n_act, extent)
+            self.metrics["decode_dispatches"] += 1
+            self.metrics["occupied_row_steps"] += n_act
+            self.metrics["capacity_row_steps"] += extent
+            tick += 1
+            arrival_due = bool(pendreq) and pendreq[0].arrival <= tick
+            if any(s is not None and s.fill is not None for s in slots):
+                # prompt-consuming rows need this tick's tokens NOW (a
+                # fill transition switches a row's input source); fills
+                # always start at a boundary, so nothing should be
+                # pending — the harvest is a defensive no-op
+                harvest()
+                out_np = np.asarray(out_tok)
+                changed = False
+                for i, s in enumerate(slots):
+                    if s is None:
+                        continue
+                    s.pos += 1
+                    if s.fill is not None:
+                        if s.pos == len(s.fill):
+                            # prompt consumed: this dispatch emitted the
+                            # request's first real token (its next input
+                            # is the program output, like a decode row)
+                            s.fill = None
+                            s.cur_tok = int(out_np[i, 0])
+                            s.tokens.append(s.cur_tok)
+                            s.remaining = s.req.max_new - 1
+                        else:
+                            # mid-prompt rows feed host prompt tokens
+                            changed = True
+                    else:
+                        s.cur_tok = int(out_np[i, 0])
+                        s.tokens.append(s.cur_tok)
+                        s.remaining -= 1
+                    if s.fill is None and s.remaining <= 0:
+                        retire(i, s)
+                        changed = True  # active set shrank: rebuild mask
+                dev_args = (None if changed or arrival_due
+                            else (out_tok, pos_dev + 1, mask_dev))
+            else:
+                # pure decode tick: budgets are host-side counters, so
+                # retirement needs no token values — defer the D2H sync
+                # and keep the loop device-resident until a boundary
+                # (a retire, or an arrival that may admit)
+                pending.append(out_tok)
+                boundary = arrival_due
+                for s in slots:
+                    if s is None:
+                        continue
+                    s.pos += 1
+                    s.remaining -= 1
+                    if s.remaining <= 0:
+                        boundary = True
+                if boundary:
+                    harvest()
+                    for i, s in enumerate(slots):
+                        if s is not None and s.remaining <= 0:
+                            retire(i, s)
+                    dev_args = None
+                else:
+                    dev_args = (out_tok, pos_dev + 1, mask_dev)
+
+        wall = time.perf_counter() - t0
+        if cache is not None:
+            srv._release_cache(extent, cache)
+        compiles = stats.compiles + (
+            srv.prefill_bucketed.stats.compiles if srv.prefill_bucketed
+            else 0
+        ) - compiles0
+        m = self.metrics
+        cap = max(m["capacity_row_steps"], 1)
+        real_tokens = sum(len(r["tokens"]) for r in results.values())
+        return {
+            "results": results,
+            "wall_s": wall,
+            "tok_per_s": real_tokens / max(wall, 1e-9),
+            "real_tokens": real_tokens,
+            "occupancy": m["occupied_row_steps"] / cap,
+            "pad_decode_fraction": 1.0 - m["occupied_row_steps"] / cap,
+            "compiles": compiles,  # 0 after warmup covering the rungs
+            **m,
+        }
+
+    def _admit(self, admitted: List[int], slots: List[Optional[_Slot]],
+               cache, extent: int, cur_tok: np.ndarray,
+               cur_pos: np.ndarray):
+        """Prefill newly admitted slots through the slot-masked grid.
+
+        One ``prefill_step`` dispatch writes every admitted prompt into
+        its slot's KV rows at position 0 while the other slots' rows
+        stay bitwise untouched; the first generated token is read from
+        each row's last real prompt column.  When the grid does not
+        cover the longest admitted prompt (recurrent families, ladder
+        overflow), the slots keep their ``fill`` buffers and consume the
+        prompt inside the decode loop instead — the other slots keep
+        generating in the same dispatches.
+        """
+        srv = self.server
+        if srv.model.stateful_decode:
+            # recurrent state is not positional: swapped-in rows must
+            # restart from the init state, not the previous occupant's
+            cache = self._reset_rows(cache, admitted, extent)
+        Ps = [len(slots[i].req.prompt) for i in admitted]
+        s_ext = srv._seq_bucket_extent(max(Ps))
+        if s_ext is None:
+            # no grid cell covers the prompt (recurrent families, ladder
+            # overflow): the slots keep their fill buffers and consume
+            # the prompt inside the decode loop instead
+            return cache
+        tokens = np.zeros((extent, s_ext), np.int32)
+        mask = np.zeros((extent,), bool)
+        for i, P in zip(admitted, Ps):
+            tokens[i, :P] = slots[i].req.prompt
+            tokens[i, P:] = slots[i].req.prompt[-1]  # edge pad
+            mask[i] = True
+        jtokens = jnp.asarray(tokens)
+        pargs = srv._prefill_args(extent, jtokens, 0, mask)
+        pmod, pkey, _ = srv.prefill_bucketed.program_for(
+            srv.params, cache, *pargs
+        )
+        logits, cache = pmod(srv.params, cache, *pargs)
+        srv.prefill_bucketed.stats.note_dispatch(
+            pkey, (len(admitted), max(Ps)), pkey.extents
+        )
+        self.metrics["prefill_dispatches"] += 1
+        # device-side gather: only the admitted rows' last-real-column
+        # argmax crosses to host ((n_admitted,) ints, not the whole
+        # (extent, S, vocab) logits block)
+        rows = jnp.asarray(admitted, jnp.int32)
+        cols = jnp.asarray([P - 1 for P in Ps], jnp.int32)
+        firsts = np.asarray(
+            jnp.argmax(logits[rows, cols], axis=-1)
+        ).astype(np.int32)
+        for i, P, first in zip(admitted, Ps, firsts):
+            s = slots[i]
+            s.fill = None
+            s.pos = P
+            s.cur_tok = int(first)
+            s.tokens.append(s.cur_tok)
+            s.remaining = s.req.max_new - 1
+            cur_tok[i, 0] = s.cur_tok
+            cur_pos[i] = P
+        return cache
+
+    def report(self) -> str:
+        m = self.metrics
+        cap = max(m["capacity_row_steps"], 1)
+        return (
+            f"slots: dispatches={m['decode_dispatches']} "
+            f"occupancy={m['occupied_row_steps'] / cap:.1%} "
+            f"pad_decode={1 - m['occupied_row_steps'] / cap:.1%} "
+            f"swaps={m['swaps']} resizes={m['resizes']} "
+            f"prefills={m['prefill_dispatches']}"
+        )
 
 
 def main(argv=None) -> int:
@@ -463,6 +1049,12 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-sweep", default=None,
                     help="comma-separated prompt lengths to cross with "
                          "--sweep (mode=forge), e.g. 17,32,48,100")
+    ap.add_argument("--continuous", type=int, default=0, metavar="N",
+                    help="serve N mixed-length requests through the "
+                         "slot scheduler instead of the sweep "
+                         "(mode=forge)")
+    ap.add_argument("--max-slots", type=int, default=8,
+                    help="slot-scheduler bucket cap (--continuous)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -497,6 +1089,34 @@ def main(argv=None) -> int:
                            bucket_policy=args.bucket_policy,
                            seq_bucket_policy=args.seq_bucket_policy,
                            prefill=args.prefill)
+
+    if args.continuous:
+        if args.mode != "forge":
+            ap.error("--continuous needs --mode forge")
+        lens = sorted({max(2, p // (2 ** k)) for p in prompt_sweep
+                       for k in range(2)})
+        reqs = [
+            Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab,
+                                    (int(rng.choice(lens)),)).astype(np.int32),
+                max_new=int(rng.integers(2, args.gen + 1)),
+                arrival=int(i // args.max_slots),
+            )
+            for i in range(args.continuous)
+        ]
+        sched = SlotScheduler(server, max_slots=args.max_slots)
+        warmup_s = sched.warmup(lens)
+        res = sched.run(reqs)
+        print(f"[serve] {cfg.name} continuous n={args.continuous} "
+              f"tok/s={res['tok_per_s']:.0f} "
+              f"occupancy={res['occupancy']:.1%} "
+              f"pad_decode={res['pad_decode_fraction']:.1%} "
+              f"swaps={res['swaps']} resizes={res['resizes']} "
+              f"compiles_post_warmup={res['compiles']} "
+              f"(warmup={warmup_s:.2f}s)")
+        print(f"[serve] {sched.report()}")
+        return 0
 
     warmup_s = server.warmup(sweep, prompt_lens=prompt_sweep)
 

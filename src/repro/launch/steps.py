@@ -113,6 +113,67 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
     return serve_step
 
 
+#: families whose decode_step accepts per-row positions + slot masks —
+#: the slot-level continuous-batching contract (vlm's M-RoPE stream and
+#: encdec's cross-attention cache still assume one shared position)
+SLOT_FAMILIES = ("dense", "moe", "hybrid", "ssm")
+
+
+def supports_slot_decode(cfg: ModelConfig) -> bool:
+    return cfg.family in SLOT_FAMILIES
+
+
+def make_slot_serve_step(cfg: ModelConfig) -> Callable:
+    """Slot-level greedy decode step for continuous batching.
+
+    ``(params, cache, token(B, 1), pos(B,), slot_mask(B,)) ->
+    (next_tok(B, 1), new_cache)``: each batch row writes its KV/state
+    and masks attention at its OWN position, and rows with
+    ``slot_mask[b] == False`` leave their cache rows bitwise untouched
+    (their emitted token is garbage and must be ignored).  The scalar
+    variant (:func:`make_serve_step`) remains the group-lockstep
+    baseline.
+    """
+    if not supports_slot_decode(cfg):
+        raise ValueError(
+            f"family {cfg.family!r} has no slot-level decode "
+            f"(supported: {', '.join(SLOT_FAMILIES)})"
+        )
+    model = get_model(cfg)
+
+    def slot_step(params, cache, token, pos, slot_mask):
+        logits, new_cache = model.decode_step(
+            params, cache, token, pos, cfg, slot_mask=slot_mask
+        )
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+
+    return slot_step
+
+
+def make_slot_prefill_step(cfg: ModelConfig):
+    """Slot-masked whole-prompt prefill for mid-generation swap-in.
+
+    ``(params, cache, tokens(B, S), pos, slot_mask(B,)) -> (logits,
+    cache)``: one forward pass writes the S-token block into the KV
+    rows of the *masked* slots only — every other slot's cache survives
+    bitwise, so a queued prompt can be prefilled into a finished slot
+    while its neighbours are mid-generation.  None for families without
+    a batched prefill (recurrent state caches, MoE capacity routing) —
+    those swap in through masked decode-step replay instead.
+    """
+    model = get_model(cfg)
+    if model.prefill_step is None or not supports_slot_decode(cfg):
+        return None
+
+    def slot_prefill(params, cache, tokens, pos, slot_mask):
+        return model.prefill_step(
+            params, cache, tokens, pos, cfg, slot_mask=slot_mask
+        )
+
+    return slot_prefill
+
+
 def make_batched_prefill_step(cfg: ModelConfig):
     """Whole-prompt prefill step for the 2-D bucketed serve front.
 

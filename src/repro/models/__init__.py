@@ -39,6 +39,12 @@ class ModelAPI:
     prefill_step: Optional[Callable]
     init_cache: Optional[Callable]
     module: Any
+    #: True when the decode cache carries NON-positional state (rg-lru
+    #: h/conv, xLSTM cells): a KV row is reusable as-is because the
+    #: per-row position mask hides stale entries, but recurrent state
+    #: folds every past token in — a slot swap-in must reset the row to
+    #: its init_cache values before the new request's first step
+    stateful_decode: bool = False
 
 
 def get_model(cfg: ModelConfig) -> ModelAPI:
@@ -69,6 +75,7 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
         prefill_step=prefill,
         init_cache=getattr(m, "init_cache", None),
         module=m,
+        stateful_decode=getattr(m, "STATEFUL_DECODE", False),
     )
 
 

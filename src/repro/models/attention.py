@@ -149,24 +149,45 @@ def attention(
         # causal length mask — query i at cache position cache_pos + i
         # sees keys <= cache_pos + i — so one forward pass writes the
         # whole prompt block with exact sequential-decode semantics.
-        k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=2)
-        v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=2)
-        new_cache = {"k": k_cache, "v": v_cache}
-        max_len = k_cache.shape[2]
+        # ``cache_pos`` may be per-row (B,): each batch row then writes
+        # (and masks) at its OWN position — the slot-level continuous-
+        # batching path, where one program advances rows at ragged
+        # decode positions.
+        max_len = cache["k"].shape[2]
         sq = q.shape[2]
+        if getattr(cache_pos, "ndim", 0) == 1:
+            if sq != 1:
+                raise NotImplementedError(
+                    "per-row cache positions require single-token steps "
+                    "(chunked prefill shares one scalar start position)"
+                )
+            # per-row scatter: select the written column per row.  A
+            # vmapped dynamic_update_slice would lower to the same
+            # scatter; the explicit select keeps the graph in the flat
+            # primitive vocabulary the Forge passes already handle.
+            slot_idx = lax.broadcasted_iota(jnp.int32, (1, 1, max_len, 1), 2)
+            write = slot_idx == cache_pos[:, None, None, None]
+            k_cache = jnp.where(write, k, cache["k"])
+            v_cache = jnp.where(write, v, cache["v"])
+        else:
+            k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=2)
+            v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=2)
+        new_cache = {"k": k_cache, "v": v_cache}
         if cache_valid_len is not None:
             # rotating buffer: slots < valid_len hold live entries; softmax
             # attention is permutation-invariant over keys (RoPE applied
-            # pre-cache), so slot order does not matter.
+            # pre-cache), so slot order does not matter.  valid_len may be
+            # per-row (B,) for ragged decode positions.
             idx = lax.broadcasted_iota(jnp.int32, (1, 1, 1, max_len), 3)
-            mask = jnp.where(idx < cache_valid_len, 0.0,
+            mask = jnp.where(idx < L.per_row_pos(cache_valid_len), 0.0,
                              float(np.finfo(np.float32).min))
         elif sq > 1:
             mask = L.prefill_length_mask(cache_pos, sq, max_len,
                                          window=window)
         elif window is not None:
             idx = lax.broadcasted_iota(jnp.int32, (1, 1, 1, max_len), 3)
-            keep = (idx <= cache_pos) & (idx > cache_pos - window)
+            p = L.per_row_pos(cache_pos)
+            keep = (idx <= p) & (idx > p - window)
             mask = jnp.where(keep, 0.0, float(np.finfo(np.float32).min))
         else:
             mask = L.decode_length_mask(cache_pos, max_len)

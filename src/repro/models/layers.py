@@ -180,30 +180,81 @@ def local_causal_where(s: jax.Array, sq: int, sk: int, window: int) -> jax.Array
     return jnp.where(keep, s, neg)
 
 
+def decode_positions(pos: jax.Array) -> jax.Array:
+    """RoPE position stream for one decode step: scalar -> (1,) shared
+    across rows; per-row (B,) -> (B, 1) so row b rotates by its own
+    position (ragged slot decode)."""
+    if pos.ndim == 0:
+        return pos[None]
+    if pos.ndim == 1:
+        return pos[:, None]
+    return pos
+
+
+def per_row_pos(pos: jax.Array) -> jax.Array:
+    """Broadcast a cache position against (B, H, sq, max_len) scores.
+
+    A scalar position passes through (mask batch dim 1, shared by every
+    row); a per-row ``(B,)`` vector reshapes to ``(B, 1, 1, 1)`` so each
+    batch row masks against its *own* decode position — the primitive
+    that lets slot-level continuous batching run rows at ragged
+    positions inside one compiled program.
+    """
+    return pos[:, None, None, None] if getattr(pos, "ndim", 0) == 1 else pos
+
+
 def decode_length_mask(pos: jax.Array, max_len: int, dtype=jnp.float32) -> jax.Array:
-    """Additive mask (1, 1, 1, max_len): 0 for idx <= pos else -inf."""
+    """Additive mask: 0 for idx <= pos else -inf.
+
+    ``pos`` scalar -> (1, 1, 1, max_len) shared mask; ``pos`` (B,) ->
+    (B, 1, 1, max_len) per-row masks (ragged decode positions).
+    """
     idx = lax.broadcasted_iota(jnp.int32, (1, 1, 1, max_len), 3)
     neg = jnp.asarray(jnp.finfo(dtype).min, dtype)
-    return jnp.where(idx <= pos, jnp.asarray(0.0, dtype), neg)
+    return jnp.where(idx <= per_row_pos(pos), jnp.asarray(0.0, dtype), neg)
 
 
 def prefill_length_mask(pos: jax.Array, sq: int, max_len: int,
                         window=None, dtype=jnp.float32) -> jax.Array:
-    """Causal length mask (1, 1, sq, max_len) for chunked prefill.
+    """Causal length mask (1|B, 1, sq, max_len) for chunked prefill.
 
     Query row i sits at cache position ``pos + i`` and sees keys
     ``idx <= pos + i`` (with ``window``, also ``idx > pos + i -
     window``) — causal *within* the chunk, so a whole prompt block can
     be written through the decode cache path in one forward pass.
-    Reduces to :func:`decode_length_mask` at ``sq == 1``.
+    ``pos`` may be per-row (B,) — each batch row then anchors the chunk
+    at its own start position.  Reduces to :func:`decode_length_mask`
+    at ``sq == 1``.
     """
     idx = lax.broadcasted_iota(jnp.int32, (1, 1, sq, max_len), 3)
-    qpos = pos + lax.broadcasted_iota(jnp.int32, (1, 1, sq, max_len), 2)
+    qpos = per_row_pos(pos) + lax.broadcasted_iota(
+        jnp.int32, (1, 1, sq, max_len), 2
+    )
     keep = idx <= qpos
     if window is not None:
         keep &= idx > qpos - window
     neg = jnp.asarray(jnp.finfo(dtype).min, dtype)
     return jnp.where(keep, jnp.asarray(0.0, dtype), neg)
+
+
+def slot_gate(slot_mask: Optional[jax.Array], new_tree: Any, old_tree: Any) -> Any:
+    """Per-row select between updated and previous decode state.
+
+    ``slot_mask: bool[B]`` gates every leaf (batch axis 0) of a decode
+    state update: active rows take the new value, inactive rows keep the
+    old one **bitwise** — `jnp.where` selects rather than multiplies, so
+    an inactive slot is write-inert even when its inputs are NaN (the
+    masked-slot inertness contract of the slot scheduler).  ``None``
+    passes the update through unchanged.
+    """
+    if slot_mask is None:
+        return new_tree
+
+    def blend(n, o):
+        m = slot_mask.reshape(slot_mask.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree_util.tree_map(blend, new_tree, old_tree)
 
 
 # --------------------------------------------------------------------------

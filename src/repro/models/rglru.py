@@ -36,6 +36,10 @@ from . import layers as L
 
 Params = Dict[str, Any]
 
+#: the {h, conv} recurrent states fold every past token in — a slot
+#: swap-in must reset the row to init_cache values (ModelAPI contract)
+STATEFUL_DECODE = True
+
 
 # one opaque fused dispatch unit for the whole recurrence (kept by capture)
 @forge_op("rg_lru")
@@ -233,18 +237,27 @@ def decode_step(
     params: Params,
     cache: Dict[str, Any],
     token: jax.Array,
-    pos: jax.Array,
+    pos: jax.Array,  # int32 — scalar or per-row (B,)
     cfg: ModelConfig,
+    *,
+    slot_mask: Optional[jax.Array] = None,  # bool (B,): active slots
 ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode.  ``pos`` may be a per-row vector: each batch
+    row then rotates RoPE, writes its window slot, and masks validity at
+    its OWN position (slot-level continuous batching).  ``slot_mask``
+    freezes inactive rows' state — both the rotating KV windows and the
+    O(1) recurrent states keep their previous values bitwise, so a
+    parked slot survives other rows' decode steps untouched."""
     x = L.embed(token, params["embed"])
-    positions = pos[None] if pos.ndim == 0 else pos
-    cos, sin = L.rope_tables(positions, cfg.head_dim_, cfg.rope_theta)
+    cos, sin = L.rope_tables(L.decode_positions(pos), cfg.head_dim_,
+                             cfg.rope_theta)
     window = cfg.window or cache["layers"][0].get("k", jnp.zeros((1, 1, 1, 1))).shape[2]
     new_layers = []
     for p, kind, st in zip(params["blocks"], _pattern(cfg), cache["layers"]):
         if kind == "attn":
             h = L.apply_norm(x, p["norm1"], cfg.norm)
-            # rotating local window: write slot = pos % window
+            # rotating local window: write slot = pos % window (per row
+            # when pos is a vector)
             slot = jnp.mod(pos, window)
             valid = jnp.minimum(pos + 1, window)
             a_out, new_st = A.attention(
@@ -255,13 +268,12 @@ def decode_step(
             x = x + a_out
             h = L.apply_norm(x, p["norm2"], cfg.norm)
             x = x + L.apply_ffn(h, p["ffn"], cfg.ffn)
-            new_layers.append(new_st)
         else:
             x, new_st = rec_block_decode(p, x, st, cfg)
             if cfg.d_ff:
                 h = L.apply_norm(x, p["norm2"], cfg.norm)
                 x = x + L.apply_ffn(h, p["ffn"], cfg.ffn)
-            new_layers.append(new_st)
+        new_layers.append(L.slot_gate(slot_mask, new_st, st))
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
     return logits, {"layers": new_layers}

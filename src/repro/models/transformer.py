@@ -238,15 +238,22 @@ def _cached_forward(
     params: Params,
     cache: Dict[str, jax.Array],
     x: jax.Array,  # (B, S, D) embedded inputs
-    pos: jax.Array,  # scalar int32 — first cache write position
+    pos: jax.Array,  # int32 — cache write position, scalar or per-row (B,)
     cos: jax.Array,
     sin: jax.Array,
     cfg: ModelConfig,
     mode: str,
+    slot_mask: Optional[jax.Array] = None,  # bool (B,) — active decode slots
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Shared decode/prefill scaffold: layer loop over the block-decode
     body against the KV cache, final norm, LM head.  ``mode`` keys the
-    forge_body compile cache ("decode" vs "prefill")."""
+    forge_body compile cache ("decode" vs "prefill").
+
+    ``slot_mask`` gates the cache update per batch row (outside the
+    compiled block body, so the body graph is mask-free): inactive rows
+    keep their previous KV bitwise — write-inert even under NaN inputs
+    (see :func:`~repro.models.layers.slot_gate`).
+    """
     one_block = (
         jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
         if cfg.scan_layers else params["blocks"][0]
@@ -258,6 +265,8 @@ def _cached_forward(
         def step(carry, xs):
             p_layer, kc, vc = xs
             y, nk, nv = body(p_layer, carry, kc, vc, pos, cos, sin)
+            nk = L.slot_gate(slot_mask, nk, kc)
+            nv = L.slot_gate(slot_mask, nv, vc)
             return y, (nk, nv)
 
         x, (new_k, new_v) = lax.scan(
@@ -268,8 +277,8 @@ def _cached_forward(
         for i, p_layer in enumerate(params["blocks"]):
             x, nk, nv = body(p_layer, x, cache["k"][i], cache["v"][i],
                              pos, cos, sin)
-            ks.append(nk)
-            vs.append(nv)
+            ks.append(L.slot_gate(slot_mask, nk, cache["k"][i]))
+            vs.append(L.slot_gate(slot_mask, nv, cache["v"][i]))
         new_k, new_v = jnp.stack(ks), jnp.stack(vs)
 
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
@@ -281,20 +290,28 @@ def decode_step(
     params: Params,
     cache: Dict[str, jax.Array],
     token: jax.Array,  # (B, 1) int32
-    pos: jax.Array,  # scalar int32 — write position
+    pos: jax.Array,  # int32 write position — scalar or per-row (B,)
     cfg: ModelConfig,
     *,
+    slot_mask: Optional[jax.Array] = None,  # bool (B,): active slots
     embeds: Optional[jax.Array] = None,
     mrope_positions: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One serve step: logits for the next token + updated cache."""
+    """One serve step: logits for the next token + updated cache.
+
+    With ``pos`` a per-row vector, every batch row decodes at its own
+    position (per-row RoPE rotation, KV write and causal mask) — the
+    primitive behind slot-level continuous batching.  ``slot_mask``
+    additionally freezes inactive rows' cache updates (their logits are
+    garbage and must be ignored by the caller).
+    """
     if embeds is None:
         x = L.embed(token, params["embed"])
     else:
         x = embeds
-    positions = pos[None] if pos.ndim == 0 else pos
-    cos, sin = _rope_for(cfg, positions, mrope_positions)
-    return _cached_forward(params, cache, x, pos, cos, sin, cfg, "decode")
+    cos, sin = _rope_for(cfg, L.decode_positions(pos), mrope_positions)
+    return _cached_forward(params, cache, x, pos, cos, sin, cfg, "decode",
+                           slot_mask=slot_mask)
 
 
 def prefill_step(
@@ -303,6 +320,8 @@ def prefill_step(
     tokens: jax.Array,  # (B, S) int32 — a whole (padded) prompt block
     pos: jax.Array,  # scalar int32 — first write position
     cfg: ModelConfig,
+    *,
+    slot_mask: Optional[jax.Array] = None,  # bool (B,): rows to prefill
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Whole-prompt batched prefill: one forward pass writes the S-token
     block into the KV cache at ``[pos, pos + S)``.
@@ -314,6 +333,11 @@ def prefill_step(
     per-token dispatch count.  Returns the full (B, S, vocab) logits
     (the serve path reads the last *valid* column) plus the updated
     cache.
+
+    ``slot_mask`` restricts the cache write to the marked rows — the
+    slot scheduler's mid-generation swap-in prefills a queued prompt
+    into a finished slot's KV rows while every other slot's cache stays
+    bitwise untouched.
     """
     if cfg.family == "moe":
         # capacity routing is first-come-first-served over the flattened
@@ -327,4 +351,5 @@ def prefill_step(
     S = x.shape[1]
     positions = pos + jnp.arange(S, dtype=jnp.int32)
     cos, sin = _rope_for(cfg, positions, None)
-    return _cached_forward(params, cache, x, pos, cos, sin, cfg, "prefill")
+    return _cached_forward(params, cache, x, pos, cos, sin, cfg, "prefill",
+                           slot_mask=slot_mask)

@@ -34,6 +34,10 @@ from . import layers as L
 
 Params = Dict[str, Any]
 
+#: the {conv, cell} / sLSTM states fold every past token in — a slot
+#: swap-in must reset the row to init_cache values (ModelAPI contract)
+STATEFUL_DECODE = True
+
 
 # --------------------------------------------------------------------------
 # mLSTM parallel core (one opaque accel dispatch unit)
@@ -322,7 +326,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0) -> Dict[str, Any]
     return {"layers": layers}
 
 
-def decode_step(params, cache, token, pos, cfg):
+def decode_step(params, cache, token, pos, cfg, *, slot_mask=None):
+    """One-token decode.  The recurrent state carries no positional
+    index, so a per-row ``pos`` vector is accepted and ignored;
+    ``slot_mask: bool[B]`` freezes inactive rows' {conv, cell, sLSTM}
+    states bitwise (slot-level continuous batching)."""
     x = L.embed(token, params["embed"])
     new_layers = []
     for p, kind, st in zip(params["blocks"], _kinds(cfg), cache["layers"]):
@@ -330,7 +338,7 @@ def decode_step(params, cache, token, pos, cfg):
             x, new_st = slstm_block_decode(p, x, st, cfg)
         else:
             x, new_st = mlstm_block_decode(p, x, st, cfg)
-        new_layers.append(new_st)
+        new_layers.append(L.slot_gate(slot_mask, new_st, st))
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
     return logits, {"layers": new_layers}
