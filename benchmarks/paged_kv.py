@@ -1,0 +1,213 @@
+"""Paged KV cache: resident bytes, prefix reuse, swap-in cost (ISSUE 6).
+
+The contiguous serving cache pins ``bucket_extent x max_len`` KV rows
+per slot the moment a bucket is acquired — admission pays worst-case
+memory, and a slot swap-in / rung resize moves KV with an O(cache-copy)
+row gather.  The page pool allocates only the pages a request's
+prompt + budget actually needs, shares prefilled prefix pages across
+requests through the prefix tree (refcount bump, no re-prefill), and
+makes swap-in / resize an O(page-table) row update.
+
+This benchmark serves one deterministic mixed-budget, shared-prefix
+workload through BOTH schedulers on the same warmed bucket grid and
+reports:
+
+* resident KV bytes — the contiguous peak-extent cache vs the page
+  pool's high-water mark (``peak_pages_in_use x page_bytes``); the
+  ISSUE acceptance bound (>= 2x reduction) is asserted,
+* prefix-tree economics — hit rate and the prefill-skip rate (fraction
+  of prompt tokens never re-prefilled), asserted > 0,
+* swap-in cost — the contiguous O(cache-copy) row gather vs the paged
+  O(table) row update + upload, timed directly,
+* steady-state decode tok/s for both schedulers (reported, not gated —
+  the mechanism metrics above are the deterministic CI gates), and
+* fidelity — the paged run must emit bitwise the contiguous run's
+  tokens for every request (prefix hits and swap-ins included).
+
+Counters (bytes, hit rates, compiles) derive from request lengths +
+scheduling only, so they gate deterministically in BENCH_fast.json.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.paging import pages_for
+from repro.launch.serve import BatchedServer, Request, SlotScheduler
+from repro.models import get_model
+
+from . import common
+from .common import Csv, _block
+
+PAGE_SIZE = 8
+MAX_LEN = 128  # worst-case budget the contiguous cache must pin
+SEQ_POLICY = "ladder:16,32"
+SHARED_PREFIX = 24  # 3 full pages — the "system prompt" every 3rd request
+N_REQUESTS = 24
+MAX_SLOTS = 8
+FAST_N_REQUESTS = 10
+FAST_MAX_SLOTS = 4
+
+
+def make_workload(n: int, max_slots: int, seed: int = 0) -> List[Request]:
+    """Deterministic mixed-budget stream: every third request opens with
+    the shared prefix (prefix-tree hits after the first), budgets
+    alternate short/long so slots retire at different ticks (swap-ins),
+    arrivals saturate the slots one wave at a time."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, 512, (SHARED_PREFIX,)).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        if i % 3 == 0:
+            tail = rng.integers(0, 512, (2 + i % 4,)).astype(np.int32)
+            prompt = np.concatenate([shared, tail])
+        else:
+            p = 4 + 3 * (i % 5)
+            prompt = rng.integers(0, 512, (p,)).astype(np.int32)
+        reqs.append(Request(
+            rid=i, prompt=prompt,
+            max_new=8 if i % max_slots == max_slots - 1 else 2 + i % 3,
+            arrival=i // max_slots,
+        ))
+    return reqs
+
+
+def _server(cfg, params, *, paged: bool) -> BatchedServer:
+    kw = {"paged": True, "kv_page_size": PAGE_SIZE} if paged else {}
+    return BatchedServer(
+        cfg, params, max_len=MAX_LEN, mode="forge", backend="segment_jit",
+        bucket_policy="pow2", seq_bucket_policy=SEQ_POLICY, **kw,
+    )
+
+
+def _leaf_bytes(tree) -> int:
+    return sum(int(np.prod(v.shape)) * v.dtype.itemsize
+               for v in jax.tree_util.tree_leaves(tree))
+
+
+def run(csv: Csv) -> None:
+    fast = common.FAST
+    n = FAST_N_REQUESTS if fast else N_REQUESTS
+    max_slots = FAST_MAX_SLOTS if fast else MAX_SLOTS
+    iters = 3 if fast else 10
+
+    cfg = get_config("forge-125m", smoke=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    reqs = make_workload(n, max_slots)
+    prompt_lens = sorted({len(r.prompt) for r in reqs})
+
+    contig_srv = _server(cfg, params, paged=False)
+    contig = SlotScheduler(contig_srv, max_slots=max_slots)
+    contig.warmup(prompt_lens)
+    rc = contig.run(reqs)
+    assert rc["compiles"] == 0, "contiguous run compiled after warmup"
+    warm_c = contig.run(reqs)
+
+    paged_srv = _server(cfg, params, paged=True)
+    paged = SlotScheduler(paged_srv, max_slots=max_slots)
+    paged.warmup(prompt_lens)
+    rp = paged.run(reqs)
+    assert rp["compiles"] == 0, (
+        f"paged run compiled {rp['compiles']} programs after warmup"
+    )
+    # second pass: the prefix tree is warm from the first, so every
+    # shared-prefix request hits; wall time is the steady-state number
+    warm_p = paged.run(reqs)
+    paged_srv.page_pool.check()
+
+    # fidelity (acceptance: exact): paged ≡ contiguous, bitwise, on
+    # every request — prefix-hit admissions and swap-ins included
+    assert set(rc["results"]) == set(rp["results"])
+    for rid in rc["results"]:
+        np.testing.assert_array_equal(
+            rc["results"][rid]["tokens"], rp["results"][rid]["tokens"],
+            err_msg=f"request {rid} diverged between paged and contiguous",
+        )
+        np.testing.assert_array_equal(
+            rp["results"][rid]["tokens"], warm_p["results"][rid]["tokens"],
+            err_msg=f"request {rid} diverged on the warm-tree pass",
+        )
+    assert rp["prefix_hits"] >= 1, "workload must hit the prefix tree"
+    assert rp["prefill_skip_rate"] > 0.0
+    assert rc["swaps"] >= 1 and rp["swaps"] >= 1
+
+    # resident KV bytes: what the contiguous scheduler pins while the
+    # slots are saturated (peak-rung cache) vs the page pool's
+    # high-water mark.  ISSUE acceptance: >= 2x reduction.
+    extent_peak = contig_srv.bucketed.policy.bucket(max_slots)
+    peak_cache = contig_srv._acquire_cache(extent_peak)
+    contig_bytes = _leaf_bytes(peak_cache)
+    contig_srv._release_cache(extent_peak, peak_cache)
+    paged_bytes = warm_p["kv_bytes_resident_peak"]
+    kv_ratio = contig_bytes / max(paged_bytes, 1)
+    assert kv_ratio >= 2.0, (
+        f"resident KV reduction {kv_ratio:.2f}x < 2x acceptance "
+        f"({contig_bytes} -> {paged_bytes} bytes)"
+    )
+
+    # swap-in cost: the contiguous rung resize gathers every surviving
+    # KV row through the pooled caches; the paged path rewrites the
+    # page-table rows and uploads the (extent, MP) int32 table
+    rows = list(range(extent_peak))
+    cache_a = contig_srv._acquire_cache(extent_peak)
+    cache_b = contig_srv._acquire_cache(extent_peak)
+    _block(contig._gather_rows(cache_a, cache_b, rows))  # absorb tracing
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        _block(contig._gather_rows(cache_a, cache_b, rows))
+    swap_c = (time.perf_counter() - t0) / iters
+    contig_srv._release_cache(extent_peak, cache_a)
+    contig_srv._release_cache(extent_peak, cache_b)
+
+    MP = paged_srv.max_pages_per_slot
+    src = np.arange(extent_peak * MP, dtype=np.int32).reshape(
+        extent_peak, MP
+    ) % max(paged_srv.page_pool.num_pages, 1)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        pt = np.empty((extent_peak, MP), np.int32)
+        pt[:] = src
+        _block(jax.numpy.asarray(pt))
+    swap_p = (time.perf_counter() - t0) / iters
+
+    total_prompt = sum(len(r.prompt) for r in reqs)
+    paged_alloc_waste = float(np.mean([
+        pages_for(len(r.prompt) + r.max_new, PAGE_SIZE) * PAGE_SIZE
+        - len(r.prompt) - r.max_new for r in reqs
+    ]))
+    csv.row(
+        "paged_kv/paged",
+        warm_p["wall_s"] * 1e6,
+        f"tok_per_s={warm_p['tok_per_s']:.0f};"
+        f"kv_mib_resident_peak={paged_bytes / 2**20:.2f};"
+        f"kv_pages_peak={warm_p['kv_peak_pages_in_use']};"
+        f"prefix_hit_rate={warm_p['prefix_hit_rate']:.3f};"
+        f"prefill_skip_rate={warm_p['prefill_skip_rate']:.3f};"
+        f"tokens_reused={warm_p['tokens_reused']};"
+        f"pages_reclaimed={warm_p['pages_reclaimed']};"
+        f"deferrals={warm_p['deferrals']};swaps={warm_p['swaps']};"
+        f"alloc_waste_tokens_per_seq={paged_alloc_waste:.1f};"
+        f"compiles_post_warmup={rp['compiles']}",
+    )
+    csv.row(
+        "paged_kv/contiguous",
+        warm_c["wall_s"] * 1e6,
+        f"tok_per_s={warm_c['tok_per_s']:.0f};"
+        f"kv_mib_resident_peak={contig_bytes / 2**20:.2f};"
+        f"swaps={warm_c['swaps']};resizes={warm_c['resizes']}",
+    )
+    csv.row(
+        "paged_kv/ratio",
+        kv_ratio * 1e6,
+        f"kv_bytes_ratio={kv_ratio:.2f}x;"
+        f"tok_s_ratio={warm_p['tok_per_s'] / max(warm_c['tok_per_s'], 1e-9):.2f}x;"
+        f"swap_us_contiguous={swap_c * 1e6:.0f};"
+        f"swap_us_paged={swap_p * 1e6:.0f};"
+        f"swap_speedup={swap_c / max(swap_p, 1e-9):.1f}x;"
+        f"n_requests={n};total_prompt_tokens={total_prompt}",
+    )

@@ -17,11 +17,18 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.metrics import check_prefill_fidelity
+from repro.core.paging import pages_for
 from repro.launch.serve import BatchedServer
 from repro.models import get_model
 
 from . import common
 from .common import Csv
+
+#: page size the paged KV serving path allocates at (benchmarks/paged_kv
+#: and the --kv-page-size smoke runs use the same granularity): KV
+#: storage waste per sequence is bounded by PAGE_SIZE - 1 tokens, vs the
+#: ladder rung gap for bucket-sized contiguous allocation
+PAGE_SIZE = 8
 
 BATCHES = (1, 4)
 PROMPTS = (17, 32, 48, 100)
@@ -108,11 +115,20 @@ def run(csv: Csv) -> None:
         f"2-D grid did not bound the prefill program count: "
         f"{pf.compiles} compiles for {exact_cells} exact cells"
     )
+    # KV *storage* waste per sequence: the contiguous path allocates the
+    # bucket rung (rung - P wasted tokens, bounded only by the ladder
+    # gap); page-granular allocation rounds to the next page boundary,
+    # so waste is structurally <= PAGE_SIZE - 1 tokens per sequence
+    bucket_waste = [batched._seq_bucket_extent(P) - P for P in prompts]
+    page_waste = [pages_for(P, PAGE_SIZE) * PAGE_SIZE - P for P in prompts]
+    assert max(page_waste) <= PAGE_SIZE - 1, page_waste
     csv.row(
         "prefill_buckets/grid",
         pf.compile_s * 1e6,
         f"prefill_compiles={pf.compiles};exact_cells={exact_cells};"
         f"pad_waste={pf.pad_waste:.1%};hit_rate={pf.hit_rate:.1%};"
+        f"kv_page_waste_tokens={float(np.mean(page_waste)):.1f};"
+        f"kv_bucket_waste_tokens={float(np.mean(bucket_waste)):.1f};"
         f"ttft_speedup_mean={float(np.mean(speedups)):.2f}x;"
         f"max_abs_vs_sequential={rep.max_abs_diff:.2e}",
     )

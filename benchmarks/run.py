@@ -19,6 +19,8 @@ Prints ``name,us_per_call,derived`` CSV rows (paper-table mapping):
                       2-D (batch × sequence) grid compiles, pad waste
     continuous_batching  slot scheduler vs group admission: tok/s,
                       occupancy, pad-decode fraction, swap fidelity
+    paged_kv          page pool vs contiguous KV: resident bytes,
+                      prefix-hit prefill skip, swap-in cost, fidelity
     variance          Table 19
     roofline_report   §Roofline (reads the dry-run results JSON)
 
@@ -52,6 +54,7 @@ MODULES = (
     "shape_buckets",
     "prefill_buckets",
     "continuous_batching",
+    "paged_kv",
     "variance",
     "roofline_report",
 )

@@ -308,11 +308,19 @@ def bucket_report(stats: Any) -> str:
             f"reused={stats.pool_bytes_reused / 1e6:.1f}MB)"
         )
     evic = f" evictions={stats.evictions}" if stats.evictions else ""
+    pages = ""
+    if getattr(stats, "kv_pages_capacity", 0):
+        pages = (
+            f" kv_pages={stats.kv_pages_in_use}/{stats.kv_pages_capacity}"
+            f" (peak={stats.kv_peak_pages_in_use},"
+            f" prefix_hits={stats.kv_prefix_hits},"
+            f" tokens_reused={stats.kv_tokens_reused})"
+        )
     return (
         f"buckets: compiles={stats.compiles} hits={stats.bucket_hits} "
         f"(hit_rate={stats.hit_rate:.1%}) calls={stats.calls} "
         f"pad_waste={stats.pad_waste:.1%} compile_s={stats.compile_s:.2f}"
-        f"{evic}{pool} [{per}]"
+        f"{evic}{pool}{pages} [{per}]"
     )
 
 

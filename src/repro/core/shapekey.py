@@ -579,6 +579,17 @@ class BucketStats:
     pool_misses: int = 0
     #: device bytes served from the pool instead of freshly allocated
     pool_bytes_reused: int = 0
+    # -- paged-KV pool counters (filled by the paged serve scheduler) ------
+    #: KV pages currently referenced (PagePool.pages_in_use snapshot)
+    kv_pages_in_use: int = 0
+    #: page-pool capacity (allocatable pages; excludes the trash page)
+    kv_pages_capacity: int = 0
+    #: high-water mark of pages in use across the run
+    kv_peak_pages_in_use: int = 0
+    #: prefix-tree lookups that matched at least one full page
+    kv_prefix_hits: int = 0
+    #: prompt tokens whose prefill was skipped via shared-prefix pages
+    kv_tokens_reused: int = 0
 
     def __post_init__(self) -> None:
         self._lock = threading.Lock()

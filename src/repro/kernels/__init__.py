@@ -8,11 +8,13 @@ Each kernel ships three layers (repo convention):
 * ``ref.py``     — pure-jnp oracles the kernels are validated against.
 
 Kernels: flash_attention (forge.sdpa), fused_linear (forge.linear_act /
-forge.swiglu), rg_lru (forge.rg_lru recurrence).
+forge.swiglu), rg_lru (forge.rg_lru recurrence), paged_attention
+(page-table-indirected decode over the paged KV pool).
 """
 from . import ops, ref
 from .flash_attention import flash_attention
 from .fused_linear import fused_linear_pallas
+from .paged_attention import paged_attention
 from .rg_lru import rg_lru_pallas
 
 __all__ = [
@@ -20,5 +22,6 @@ __all__ = [
     "ref",
     "flash_attention",
     "fused_linear_pallas",
+    "paged_attention",
     "rg_lru_pallas",
 ]

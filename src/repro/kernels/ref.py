@@ -53,6 +53,58 @@ def sdpa_ref(
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
 
 
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Gather a contiguous per-row KV view out of a paged store.
+
+    pages: (num_pages, page_size, KVH, D) — the flat page pool.
+    page_table: (B, max_pages) int32 — per-row page indices; unallocated
+    entries point at the trash page (0) and are masked out by the caller.
+
+    Returns (B, KVH, max_pages * page_size, D), the same layout a
+    contiguous cache row would have.
+    """
+    NP, ps, KVH, D = pages.shape
+    B, MP = page_table.shape
+    flat = pages.reshape(NP * ps, KVH, D)
+    sl = jnp.arange(MP * ps, dtype=jnp.int32)
+    rows = page_table[:, sl // ps].astype(jnp.int32) * ps + sl % ps  # (B, L)
+    view = jnp.take(flat, rows, axis=0)  # (B, L, KVH, D)
+    return view.transpose(0, 2, 1, 3)
+
+
+def paged_sdpa_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    pos: jax.Array,
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference paged-attention decode step (the kernel's fidelity oracle).
+
+    q: (B, H, D) — one query token per row; k_pages/v_pages:
+    (num_pages, page_size, KVH, D); page_table: (B, max_pages) int32;
+    pos: (B,) int32 — the query's position (keys at indices <= pos are
+    live; garbage beyond pos, including trash-page reads, is masked).
+    Returns (B, H, D).
+    """
+    ps = k_pages.shape[1]
+    MP = page_table.shape[1]
+    L = MP * ps
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    idx = jnp.arange(L, dtype=jnp.int32)[None, None, None, :]
+    p = pos.astype(jnp.int32)[:, None, None, None]
+    keep = idx <= p
+    if window is not None:
+        keep = jnp.logical_and(keep, idx > p - window)
+    mask = jnp.where(keep, 0.0, jnp.finfo(jnp.float32).min)
+    out = sdpa_ref(q[:, :, None, :], k, v, mask, scale=scale)
+    return out[:, :, 0, :]
+
+
 def fused_linear_ref(
     x: jax.Array,
     w: jax.Array,

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCH_IDS, get_config
+from ..core.paging import TRASH_PAGE, build_row_table, pages_for
 from ..models import get_model
 from .steps import make_serve_step, supports_slot_decode
 
@@ -106,7 +107,8 @@ class BatchedServer:
     def __init__(self, cfg, params, max_len: int = 256, mode: str = "jit",
                  backend: str = "segment_jit", bucket_policy: str = "pow2",
                  seq_bucket_policy: str = "ladder:16,32,64,128,256",
-                 prefill: str = "auto"):
+                 prefill: str = "auto", paged: bool = False,
+                 kv_page_size: int = 16, kv_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)
@@ -139,6 +141,31 @@ class BatchedServer:
         self.last_prefill_mode = None
         #: most recently dispatched bucket program (CLI transparency)
         self.forge_module = None
+        #: paged-KV serving (DESIGN.md §Paged KV cache): the per-slot
+        #: contiguous cache rows are replaced by a shared page pool +
+        #: per-slot page tables.  Scheduler-only — ``generate`` raises.
+        self.paged = bool(paged)
+        self.kv_page_size = int(kv_page_size)
+        self.kv_pages = kv_pages
+        self.page_pool = None
+        self.prefix_tree = None
+        #: server-resident {k_pages, v_pages} store (no batch axis);
+        #: every slot reads/writes it through its page-table row
+        self.page_store = None
+        self.max_pages_per_slot = 0
+        if self.paged:
+            from .steps import supports_paged_decode
+            if mode != "forge":
+                raise ValueError("paged KV serving needs mode='forge'")
+            if not supports_paged_decode(cfg):
+                raise ValueError(
+                    f"family {cfg.family!r} has no paged decode path"
+                )
+            if max_len % self.kv_page_size:
+                raise ValueError(
+                    f"max_len={max_len} must be a multiple of "
+                    f"kv_page_size={self.kv_page_size}"
+                )
         self._front_lock = threading.Lock()
         #: donating zero-fill: recycles a pooled KV cache's device buffers
         #: in place instead of allocating a fresh bucket-sized pytree
@@ -153,6 +180,9 @@ class BatchedServer:
         """Build the BucketedModule fronts once (lazy, mode=forge only)."""
         with self._front_lock:
             if self.bucketed is not None:
+                return
+            if self.paged:
+                self._build_paged_front()
                 return
             from ..core import ForgeCompiler, PipelineConfig, PolyAxis
             from ..core.shapekey import infer_poly_axes
@@ -217,6 +247,66 @@ class BatchedServer:
                 policy=self.bucket_policy,
             )
             self.prefill_bucketed = prefill_front
+
+    def _build_paged_front(self):
+        """Build the paged-KV fronts + pool state (called under the lock).
+
+        Unlike the contiguous fronts, the KV store carries NO batch axis
+        — ``in_axes`` marks it None on both sides, so every bucket
+        program reads and returns the one server-resident page store.
+        Only the page table / tokens / pos / mask are bucket-shaped,
+        which is what makes swap-in and rung resizes O(table): the
+        pages themselves never move.
+        """
+        from ..core import ForgeCompiler, PipelineConfig, PolyAxis
+        from ..core.paging import PagePool, PrefixTree
+        from .steps import (
+            dealias_tree,
+            make_paged_prefill_step,
+            make_paged_serve_step,
+        )
+
+        ps = self.kv_page_size
+        self.max_pages_per_slot = self.max_len // ps
+        # default pool: eight full-length slots' worth of pages, plus
+        # the reserved trash page (id 0) that absorbs masked writes
+        num_pages = int(self.kv_pages or 8 * self.max_pages_per_slot + 1)
+        self.page_pool = PagePool(num_pages, ps)
+        self.prefix_tree = PrefixTree(self.page_pool)
+        full = self.model.init_paged_cache(
+            self.cfg, 1, self.max_len, num_pages=num_pages, page_size=ps
+        )
+        self.page_store = dealias_tree(
+            {"k_pages": full["k_pages"], "v_pages": full["v_pages"]}
+        )
+        self.cache_axes = None  # no batch-polymorphic cache rows exist
+        compiler = ForgeCompiler(PipelineConfig(backend=self.backend))
+        prefill_front = None
+        if self.prefill_policy != "sequential":
+            pstep = make_paged_prefill_step(self.cfg)
+            if pstep is not None:
+                # (params, store, page_table(B,MP), tokens(B,S),
+                #  pos(B,), mask(B,)) — per-row pos lets prefix-hit rows
+                # anchor their chunk at the skip offset in the same
+                # dispatch as cold rows
+                prefill_front = compiler.compile_bucketed(
+                    pstep,
+                    axes=(
+                        PolyAxis(in_axes=(None, None, 0, 0, 0, 0),
+                                 out_axes=(0, None),
+                                 policy=self.bucket_policy, label="B"),
+                        PolyAxis(in_axes=(None, None, None, 1, None, None),
+                                 out_axes=(1, None),
+                                 policy=self.seq_bucket_policy, label="S"),
+                    ),
+                )
+        self.bucketed = compiler.compile_bucketed(
+            make_paged_serve_step(self.cfg),
+            in_axes=(None, None, 0, 0, 0, 0),
+            out_axes=(0, None),
+            policy=self.bucket_policy,
+        )
+        self.prefill_bucketed = prefill_front
 
     def _bucket_extent(self, B: int) -> int:
         self._ensure_bucketed()
@@ -313,6 +403,8 @@ class BatchedServer:
         if self.mode != "forge":
             return 0.0
         self._ensure_bucketed()
+        if self.paged:
+            return self._warmup_paged(batch_sizes, prompt_lens)
         t0 = time.perf_counter()
         done = set()
         for B in batch_sizes:
@@ -361,6 +453,51 @@ class BatchedServer:
                     self._release_cache(extent, warm_cache)
         return time.perf_counter() - t0
 
+    def _warmup_paged(self, batch_sizes: Sequence[int],
+                      prompt_lens: Optional[Sequence[int]]) -> float:
+        """Paged-front warmup: all-false slot masks + trash-only page
+        tables route every throwaway write to the trash page, so the
+        warmed store stays all-zeros and the pool state is untouched."""
+        t0 = time.perf_counter()
+        MP = self.max_pages_per_slot
+        store = self.page_store
+        done = set()
+        for B in batch_sizes:
+            extent = self._bucket_extent(int(B))
+            if extent in done:
+                continue
+            done.add(extent)
+            args = (jnp.zeros((extent, MP), jnp.int32),
+                    jnp.zeros((extent, 1), jnp.int32),
+                    jnp.zeros((extent,), jnp.int32),
+                    jnp.zeros((extent,), bool))
+            mod, key, _ = self.bucketed.program_for(self.params, store, *args)
+            _, store = mod(self.params, store, *args)
+            self.bucketed.stats.note_dispatch(key, 0, extent)
+            self.forge_module = mod
+        if prompt_lens and self.prefill_bucketed is not None:
+            cells = set()
+            for B in batch_sizes:
+                extent = self._bucket_extent(int(B))
+                for P in prompt_lens:
+                    s_ext = self._seq_bucket_extent(int(P))
+                    if s_ext is None or (extent, s_ext) in cells:
+                        continue
+                    cells.add((extent, s_ext))
+                    pargs = (jnp.zeros((extent, MP), jnp.int32),
+                             jnp.zeros((extent, s_ext), jnp.int32),
+                             jnp.zeros((extent,), jnp.int32),
+                             jnp.zeros((extent,), bool))
+                    pmod, pkey, _ = self.prefill_bucketed.program_for(
+                        self.params, store, *pargs
+                    )
+                    _, store = pmod(self.params, store, *pargs)
+                    self.prefill_bucketed.stats.note_dispatch(
+                        pkey, (0, 0), pkey.extents
+                    )
+        self.page_store = store
+        return time.perf_counter() - t0
+
     # -- serving ----------------------------------------------------------
 
     def prefill(self, prompts: np.ndarray):
@@ -375,6 +512,11 @@ class BatchedServer:
         B, P = prompts.shape
         if self.cfg.family == "encdec":
             raise NotImplementedError("use examples/ for enc-dec serving")
+        if self.paged:
+            raise NotImplementedError(
+                "paged KV serving is slot-scheduled: drive it through "
+                "SlotScheduler.run (page allocation is per-slot)"
+            )
 
         if self.mode == "forge":
             self._ensure_bucketed()
@@ -564,6 +706,11 @@ class _Slot:
     tokens: List[int] = field(default_factory=list)
     admitted_tick: int = 0
     swapped_in: bool = False  # admitted into a slot another request vacated
+    #: page-pool pages owned by this slot (paged mode; freed at retire —
+    #: shared prefix pages survive through the prefix tree's own refs)
+    pages: List[int] = field(default_factory=list)
+    #: prompt tokens whose prefill was skipped via shared-prefix pages
+    skip: int = 0
 
 
 class SlotScheduler:
@@ -598,6 +745,10 @@ class SlotScheduler:
             )
         server._ensure_bucketed()
         self.server = server
+        #: paged-KV scheduling: page-table edits replace every KV copy
+        #: (resize, swap-in), admission allocates pages + consults the
+        #: prefix tree, retirement frees the slot's pages
+        self.paged = bool(server.paged)
         self.max_slots = int(max_slots)
         # fail fast if the ladder cannot admit the slot cap
         self.top_extent = server.bucketed.policy.bucket(self.max_slots)
@@ -616,6 +767,9 @@ class SlotScheduler:
             "swaps": 0,
             "resizes": 0,
             "idle_ticks": 0,
+            #: admissions bounced back to the queue because the page
+            #: pool was exhausted even after LRU tree reclaim (paged)
+            "deferrals": 0,
         }
 
     # -- warmup -----------------------------------------------------------
@@ -716,12 +870,28 @@ class SlotScheduler:
                 )
             if r.max_new < 1:
                 raise ValueError(f"request {r.rid}: max_new must be >= 1")
+            if self.paged:
+                need = pages_for(len(r.prompt) + r.max_new,
+                                 srv.page_pool.page_size)
+                if need > srv.page_pool.capacity:
+                    raise ValueError(
+                        f"request {r.rid}: needs {need} pages, pool "
+                        f"capacity is {srv.page_pool.capacity}"
+                    )
 
+        paged = self.paged
+        pool = srv.page_pool if paged else None
+        MP = srv.max_pages_per_slot if paged else 0
+        #: host-side page table (extent, MP); device copy refreshed at
+        #: resize/admission boundaries — retired rows go stale on device,
+        #: which is inert (their mask is False, writes route to trash)
+        pt_host = np.full((0, MP), TRASH_PAGE, np.int32)
+        pt_dev = None
         pendreq = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
         queue: deque = deque()
         slots: List[Optional[_Slot]] = []
         extent = 0
-        cache = None
+        cache = srv.page_store if paged else None
         mod = key = None
         cur_tok = np.zeros((0, 1), np.int32)
         cur_pos = np.zeros((0,), np.int32)
@@ -740,8 +910,12 @@ class SlotScheduler:
 
         def resolve_program():
             nonlocal mod, key
-            args = srv._decode_args(extent, jnp.asarray(cur_tok),
-                                    jnp.asarray(cur_pos))
+            if paged:
+                args = (jnp.asarray(pt_host), jnp.asarray(cur_tok),
+                        jnp.asarray(cur_pos), jnp.zeros((extent,), bool))
+            else:
+                args = srv._decode_args(extent, jnp.asarray(cur_tok),
+                                        jnp.asarray(cur_pos))
             mod, key, _ = srv.bucketed.program_for(params, cache, *args)
             srv.forge_module = mod
 
@@ -753,6 +927,12 @@ class SlotScheduler:
                 "swapped_in": s.swapped_in,
             }
             slots[i] = None
+            if paged and s.pages:
+                # the slot's refs drop; pages shared through the prefix
+                # tree stay live on the tree's own refs
+                pool.free(s.pages)
+                s.pages = []
+                pt_host[i, :] = TRASH_PAGE
 
         def harvest() -> None:
             """Copy the deferred token columns to host, in tick order.
@@ -781,18 +961,39 @@ class SlotScheduler:
             want = min(active + len(queue), self.max_slots)
             if want > 0:
                 target = policy.bucket(want)
+                if target != extent or (queue and any(s is None
+                                                      for s in slots)):
+                    # resize/admission is a boundary: sync the pending
+                    # device-resident token columns before slot rows move
+                    # or dev_args is rebuilt from host state (a deferred
+                    # request retrying admission reaches here from a
+                    # steady-state tick with no other boundary — without
+                    # the harvest the rebuilt tok_dev would feed a stale
+                    # cur_tok back in)
+                    harvest()
                 if target != extent:
                     keep = [(i, s) for i, s in enumerate(slots)
                             if s is not None]
-                    new_cache = srv._acquire_cache(target)
-                    if keep and cache is not None:
-                        new_cache = self._gather_rows(
-                            cache, new_cache, [i for i, _ in keep]
-                        )
-                    if cache is not None:
-                        srv._release_cache(extent, cache)
-                        self.metrics["resizes"] += 1
-                    cache = new_cache
+                    if paged:
+                        # O(table) resize: surviving rows' page-table
+                        # entries move; the KV pages themselves do not
+                        new_pt = np.full((target, MP), TRASH_PAGE,
+                                         np.int32)
+                        for dst, (i, _) in enumerate(keep):
+                            new_pt[dst] = pt_host[i]
+                        pt_host = new_pt
+                        if extent > 0:
+                            self.metrics["resizes"] += 1
+                    else:
+                        new_cache = srv._acquire_cache(target)
+                        if keep and cache is not None:
+                            new_cache = self._gather_rows(
+                                cache, new_cache, [i for i, _ in keep]
+                            )
+                        if cache is not None:
+                            srv._release_cache(extent, cache)
+                            self.metrics["resizes"] += 1
+                        cache = new_cache
                     new_tok = np.zeros((target, 1), np.int32)
                     new_pos = np.zeros((target,), np.int32)
                     new_slots: List[Optional[_Slot]] = [None] * target
@@ -803,6 +1004,8 @@ class SlotScheduler:
                     slots, cur_tok, cur_pos = new_slots, new_tok, new_pos
                     extent = target
                     dev_args = None
+                    if paged:
+                        pt_dev = jnp.asarray(pt_host)
                     resolve_program()
                 # pack queued requests into every free slot (13+3 → B16)
                 mid_generation = active > 0
@@ -825,13 +1028,21 @@ class SlotScheduler:
                         self.metrics["swaps"] += 1
                     admitted.append(i)
                 if admitted:
-                    cache = self._admit(admitted, slots, cache, extent,
-                                        cur_tok, cur_pos)
+                    if paged:
+                        cache = self._admit_paged(admitted, slots, cache,
+                                                  extent, cur_tok, cur_pos,
+                                                  pt_host, queue)
+                        pt_dev = jnp.asarray(pt_host)
+                    else:
+                        cache = self._admit(admitted, slots, cache, extent,
+                                            cur_tok, cur_pos)
                     dev_args = None
                     # degenerate 1-token budgets finish at admission
+                    # (a paged deferral leaves slots[i] None — skip it)
                     for i in admitted:
                         s = slots[i]
-                        if s.fill is None and s.remaining <= 0:
+                        if s is not None and s.fill is None \
+                                and s.remaining <= 0:
                             retire(i, s)
 
             if not any(s is not None for s in slots):
@@ -860,7 +1071,15 @@ class SlotScheduler:
                 # dispatch's input — feed the device arrays straight
                 # back, no host round-trip
                 tok_dev, pos_dev, mask_dev = dev_args
-            out_tok, cache = mod(params, cache, tok_dev, pos_dev, mask_dev)
+            if paged:
+                out_tok, cache = mod(params, cache, pt_dev, tok_dev,
+                                     pos_dev, mask_dev)
+                # pool invariant holds after every tick: every page is
+                # either referenced or on the free list, never both
+                pool.check()
+            else:
+                out_tok, cache = mod(params, cache, tok_dev, pos_dev,
+                                     mask_dev)
             n_act = sum(s is not None for s in slots)
             stats.note_dispatch(key, n_act, extent)
             self.metrics["decode_dispatches"] += 1
@@ -925,7 +1144,11 @@ class SlotScheduler:
                     dev_args = (out_tok, pos_dev + 1, mask_dev)
 
         wall = time.perf_counter() - t0
-        if cache is not None:
+        if paged:
+            # the store is server-resident: the next run (and the prefix
+            # tree's cached pages) continue from it
+            srv.page_store = cache
+        elif cache is not None:
             srv._release_cache(extent, cache)
         compiles = stats.compiles + (
             srv.prefill_bucketed.stats.compiles if srv.prefill_bucketed
@@ -934,7 +1157,7 @@ class SlotScheduler:
         m = self.metrics
         cap = max(m["capacity_row_steps"], 1)
         real_tokens = sum(len(r["tokens"]) for r in results.values())
-        return {
+        out = {
             "results": results,
             "wall_s": wall,
             "tok_per_s": real_tokens / max(wall, 1e-9),
@@ -944,6 +1167,45 @@ class SlotScheduler:
             "compiles": compiles,  # 0 after warmup covering the rungs
             **m,
         }
+        if paged:
+            ps_ = pool.stats
+            leaf_bytes = sum(
+                int(np.prod(v.shape)) * v.dtype.itemsize
+                for v in jax.tree_util.tree_leaves(cache)
+            )
+            page_bytes = leaf_bytes // pool.num_pages
+            out.update(
+                kv_pages_in_use=pool.pages_in_use,
+                kv_pages_capacity=pool.capacity,
+                kv_peak_pages_in_use=ps_.peak_pages_in_use,
+                kv_page_bytes=page_bytes,
+                #: high-water mark of KV bytes actually referenced — the
+                #: number a contiguous cache pins at extent * max_len
+                kv_bytes_resident_peak=ps_.peak_pages_in_use * page_bytes,
+                prefix_hits=ps_.prefix_hits,
+                prefix_misses=ps_.prefix_misses,
+                prefix_hit_rate=ps_.prefix_hit_rate,
+                prefill_skip_rate=ps_.prefill_skip_rate,
+                tokens_reused=ps_.tokens_reused,
+                pages_allocated=ps_.pages_allocated,
+                pages_reused=ps_.pages_reused,
+                pages_reclaimed=ps_.pages_reclaimed,
+            )
+            # surface the pool counters on the decode front + executor
+            # stats so bucket_report / the CLI transparency block print
+            # them alongside the bucketing numbers
+            stats.kv_pages_in_use = pool.pages_in_use
+            stats.kv_pages_capacity = pool.capacity
+            stats.kv_peak_pages_in_use = ps_.peak_pages_in_use
+            stats.kv_prefix_hits = ps_.prefix_hits
+            stats.kv_tokens_reused = ps_.tokens_reused
+            if srv.forge_module is not None:
+                es = srv.forge_module.stats
+                es.kv_pages_in_use = pool.pages_in_use
+                es.kv_peak_pages_in_use = ps_.peak_pages_in_use
+                es.kv_prefix_hits = ps_.prefix_hits
+                es.kv_tokens_reused = ps_.tokens_reused
+        return out
 
     def _admit(self, admitted: List[int], slots: List[Optional[_Slot]],
                cache, extent: int, cur_tok: np.ndarray,
@@ -1006,6 +1268,131 @@ class SlotScheduler:
             cur_pos[i] = P
         return cache
 
+    def _admit_paged(self, admitted: List[int],
+                     slots: List[Optional[_Slot]], store, extent: int,
+                     cur_tok: np.ndarray, cur_pos: np.ndarray,
+                     pt_host: np.ndarray, queue: deque):
+        """Admit into the page pool: prefix match, alloc, masked prefill.
+
+        Per admitted slot: match the prompt's leading full-page blocks
+        in the prefix tree (matched pages are forked — refcount bump, no
+        prefill, no copy), allocate fresh pages for the rest of the
+        prompt + generation budget, and write the slot's page-table row.
+        Pool exhaustion first reclaims LRU tree-only pages; if the pool
+        is still short the request is bounced back to the queue (its
+        pages are held by mid-generation slots — they free at retire).
+
+        The prefill dispatch is per-row anchored: a prefix-hit row's
+        chunk starts at its skip offset, so hit and cold rows share one
+        dispatch and the sequence bucket covers only the longest
+        *suffix*.  After prefill each prompt's full pages are inserted
+        into the tree so later admissions can share them.
+        """
+        srv = self.server
+        pool = srv.page_pool
+        tree = srv.prefix_tree
+        ps = pool.page_size
+        MP = srv.max_pages_per_slot
+        Ps = [len(slots[i].req.prompt) for i in admitted]
+        # prefix reuse is only sound on the grid path: matched pages
+        # skip prefill, but a fill-path (decode-replay) admission must
+        # write every position itself
+        grid_ok = srv._seq_bucket_extent(max(Ps)) is not None
+
+        live: List[int] = []
+        deferred: List[Request] = []
+        for i in list(admitted):
+            s = slots[i]
+            prompt = np.asarray(s.req.prompt, np.int32)
+            P = len(prompt)
+            total = pages_for(P + s.req.max_new, ps)
+            shared: List[int] = []
+            skip = 0
+            if grid_ok:
+                # the last real prompt token must prefill — its logits
+                # emit the first token — so the match is capped one
+                # token short of the prompt
+                shared, skip = tree.match(
+                    prompt, max_tokens=((P - 1) // ps) * ps
+                )
+            try:
+                if shared:
+                    pool.fork(shared)  # the slot's own refs on the chain
+                try:
+                    fresh = pool.alloc(total - len(shared))
+                except MemoryError:
+                    tree.reclaim(total - len(shared) - pool.pages_free)
+                    fresh = pool.alloc(total - len(shared))
+            except MemoryError:
+                # exhausted even after reclaim: the missing pages are
+                # held by mid-generation slots — requeue and vacate
+                if shared:
+                    pool.free(shared)
+                slots[i] = None
+                deferred.append(s.req)
+                self.metrics["deferrals"] += 1
+                if s.swapped_in:
+                    self.metrics["swaps"] -= 1
+                continue
+            s.pages = list(shared) + list(fresh)
+            s.skip = skip
+            pt_host[i] = build_row_table(s.pages, MP)
+            live.append(i)
+        if deferred:
+            queue.extendleft(reversed(deferred))
+        if not live or not grid_ok:
+            # fill-path admission: the decode loop writes the prompt's
+            # pages token-by-token through the table (skip == 0)
+            return store
+        Ls = [len(slots[i].req.prompt) - slots[i].skip for i in live]
+        # suffixes never exceed the full prompts, so the cell that
+        # admitted max(Ps) covers max(Ls) too
+        s_ext = srv._seq_bucket_extent(max(Ls))
+        tokens = np.zeros((extent, s_ext), np.int32)
+        mask = np.zeros((extent,), bool)
+        pos_np = np.zeros((extent,), np.int32)
+        for i, L in zip(live, Ls):
+            s = slots[i]
+            suffix = np.asarray(s.req.prompt[s.skip:], np.int32)
+            tokens[i, :L] = suffix
+            tokens[i, L:] = suffix[-1]  # edge pad
+            mask[i] = True
+            pos_np[i] = s.skip
+        pargs = (jnp.asarray(pt_host), jnp.asarray(tokens),
+                 jnp.asarray(pos_np), jnp.asarray(mask))
+        pmod, pkey, _ = srv.prefill_bucketed.program_for(
+            srv.params, store, *pargs
+        )
+        logits, store = pmod(srv.params, store, *pargs)
+        srv.prefill_bucketed.stats.note_dispatch(
+            pkey, (len(live), max(Ls)), pkey.extents
+        )
+        self.metrics["prefill_dispatches"] += 1
+        pool.stats.tokens_prefilled += sum(Ls)
+        # device-side gather of each row's last-real-suffix-column argmax
+        rows = jnp.asarray(live, jnp.int32)
+        cols = jnp.asarray([L - 1 for L in Ls], jnp.int32)
+        firsts = np.asarray(
+            jnp.argmax(logits[rows, cols], axis=-1)
+        ).astype(np.int32)
+        for i, first in zip(live, firsts):
+            s = slots[i]
+            P = len(s.req.prompt)
+            s.fill = None
+            s.pos = P
+            s.cur_tok = int(first)
+            s.tokens.append(s.cur_tok)
+            s.remaining = s.req.max_new - 1
+            cur_tok[i, 0] = s.cur_tok
+            cur_pos[i] = P
+            # register the prompt's full pages for later admissions;
+            # decode writes start at P — strictly past every registered
+            # page — so cached pages are never mutated afterwards
+            nfull = P // ps
+            if nfull:
+                tree.insert(s.req.prompt[:nfull * ps], s.pages[:nfull])
+        return store
+
     def report(self) -> str:
         m = self.metrics
         cap = max(m["capacity_row_steps"], 1)
@@ -1015,6 +1402,7 @@ class SlotScheduler:
             f"pad_decode={1 - m['occupied_row_steps'] / cap:.1%} "
             f"swaps={m['swaps']} resizes={m['resizes']} "
             f"prefills={m['prefill_dispatches']}"
+            + (f" deferrals={m['deferrals']}" if self.paged else "")
         )
 
 
@@ -1055,8 +1443,30 @@ def main(argv=None) -> int:
                          "(mode=forge)")
     ap.add_argument("--max-slots", type=int, default=8,
                     help="slot-scheduler bucket cap (--continuous)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve the KV cache from a shared page pool "
+                         "with prefix reuse (--mode forge --continuous); "
+                         "contiguous per-slot rows remain the default")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="tokens per KV page (--paged; must divide "
+                         "--max-len)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="page-pool size incl. the reserved trash page "
+                         "(--paged; 0 = eight full-length slots' worth)")
+    ap.add_argument("--kv-kernel", default="ref",
+                    choices=["ref", "pallas"],
+                    help="paged attend implementation (--paged): ref = "
+                         "page gather + unfused sdpa (bitwise vs the "
+                         "contiguous cache), pallas = the paged-"
+                         "attention decode kernel (interpreted off-TPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.paged and not args.continuous:
+        ap.error("--paged serves through the slot scheduler; "
+                 "add --continuous N")
+    if args.paged and args.mode != "forge":
+        ap.error("--paged needs --mode forge")
 
     sweep = ([int(x) for x in args.sweep.split(",")] if args.sweep
              else [args.batch])
@@ -1079,6 +1489,8 @@ def main(argv=None) -> int:
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.family == "encdec":
         raise SystemExit("use examples/ for enc-dec serving")
+    if args.paged:
+        cfg = cfg.with_(kv_kernel=args.kv_kernel)
     model = get_model(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key, cfg)
@@ -1088,7 +1500,9 @@ def main(argv=None) -> int:
                            backend=args.backend,
                            bucket_policy=args.bucket_policy,
                            seq_bucket_policy=args.seq_bucket_policy,
-                           prefill=args.prefill)
+                           prefill=args.prefill, paged=args.paged,
+                           kv_page_size=args.kv_page_size,
+                           kv_pages=args.kv_pages or None)
 
     if args.continuous:
         if args.mode != "forge":
@@ -1116,6 +1530,17 @@ def main(argv=None) -> int:
               f"compiles_post_warmup={res['compiles']} "
               f"(warmup={warmup_s:.2f}s)")
         print(f"[serve] {sched.report()}")
+        if args.paged:
+            print(f"[serve] pages: in_use={res['kv_pages_in_use']}/"
+                  f"{res['kv_pages_capacity']} "
+                  f"peak={res['kv_peak_pages_in_use']} "
+                  f"(page={args.kv_page_size}tok) "
+                  f"prefix hit_rate={res['prefix_hit_rate']:.1%} "
+                  f"skip_rate={res['prefill_skip_rate']:.1%} "
+                  f"tokens_reused={res['tokens_reused']} "
+                  f"reclaimed={res['pages_reclaimed']}")
+            from repro.core.metrics import bucket_report
+            print(f"[serve] decode {bucket_report(server.bucketed.stats)}")
         return 0
 
     warmup_s = server.warmup(sweep, prompt_lens=prompt_sweep)

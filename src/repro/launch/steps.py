@@ -195,6 +195,73 @@ def make_batched_prefill_step(cfg: ModelConfig):
     return prefill_step
 
 
+def supports_paged_decode(cfg: ModelConfig) -> bool:
+    """Paged KV is a transformer-cache concept: only families whose decode
+    state is a pure positional KV cache can swap it for a page pool
+    (recurrent/state caches fold past tokens into non-positional state)."""
+    model = get_model(cfg)
+    return (
+        model.paged_decode_step is not None
+        and supports_slot_decode(cfg)
+        and not model.stateful_decode
+    )
+
+
+def make_paged_serve_step(cfg: ModelConfig) -> Callable:
+    """Slot-level greedy decode against the paged KV pool.
+
+    ``(params, store, page_table(B, MP), token(B, 1), pos(B,),
+    slot_mask(B,)) -> (next_tok(B, 1), new_store)``: same contract as
+    :func:`make_slot_serve_step`, but the per-slot KV rows live behind a
+    page table into a shared page pool (``store`` = {k_pages, v_pages}).
+    The table is read-only here — allocation happens host-side in the
+    scheduler — so swap-in/resize is a table edit, never a KV copy.
+    """
+    if not supports_paged_decode(cfg):
+        raise ValueError(f"family {cfg.family!r} has no paged decode path")
+    model = get_model(cfg)
+
+    def paged_step(params, store, page_table, token, pos, slot_mask):
+        cache = dict(store, page_table=page_table)
+        logits, new_cache = model.paged_decode_step(
+            params, cache, token, pos, cfg, slot_mask=slot_mask
+        )
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        new_store = {"k_pages": new_cache["k_pages"],
+                     "v_pages": new_cache["v_pages"]}
+        return next_tok[:, None], new_store
+
+    return paged_step
+
+
+def make_paged_prefill_step(cfg: ModelConfig):
+    """Slot-masked whole-prompt prefill into the paged KV pool.
+
+    ``(params, store, page_table(B, MP), tokens(B, S), pos(B,),
+    slot_mask(B,)) -> ((B, S, vocab) logits, new_store)``.  ``pos`` is
+    per-row: a row whose leading pages were matched in the prefix tree
+    anchors its chunk at the skip offset, so prefix-hit and cold rows
+    prefill in the same dispatch.  None for families without a batched
+    prefill (MoE capacity routing).
+    """
+    if not supports_paged_decode(cfg):
+        return None
+    model = get_model(cfg)
+    if model.paged_prefill_step is None:
+        return None
+
+    def paged_prefill(params, store, page_table, tokens, pos, slot_mask):
+        cache = dict(store, page_table=page_table)
+        logits, new_cache = model.paged_prefill_step(
+            params, cache, tokens, pos, cfg, slot_mask=slot_mask
+        )
+        new_store = {"k_pages": new_cache["k_pages"],
+                     "v_pages": new_cache["v_pages"]}
+        return logits, new_store
+
+    return paged_prefill
+
+
 # NOTE: the exact-shape forge serve-step builder that used to live here
 # (make_forge_serve_step) was removed with the rebuild-per-shape server:
 # launch/serve.py now compiles the decode step behind a ShapeKey

@@ -45,6 +45,13 @@ class ModelAPI:
     #: folds every past token in — a slot swap-in must reset the row to
     #: its init_cache values before the new request's first step
     stateful_decode: bool = False
+    #: paged-KV entry points (None for families without a paged path):
+    #: decode/prefill against a flat page pool + per-slot page table
+    #: (see core/paging.py); init_paged_cache(cfg, batch, max_len, *,
+    #: num_pages, page_size) builds the state
+    paged_decode_step: Optional[Callable] = None
+    paged_prefill_step: Optional[Callable] = None
+    init_paged_cache: Optional[Callable] = None
 
 
 def get_model(cfg: ModelConfig) -> ModelAPI:
@@ -67,6 +74,9 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
     supports = getattr(m, "supports_batched_prefill", None)
     if prefill is not None and supports is not None and not supports(cfg):
         prefill = None
+    paged_prefill = getattr(m, "paged_prefill_step", None)
+    if paged_prefill is not None and supports is not None and not supports(cfg):
+        paged_prefill = None
     return ModelAPI(
         family=cfg.family,
         init=m.init,
@@ -76,6 +86,9 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
         init_cache=getattr(m, "init_cache", None),
         module=m,
         stateful_decode=getattr(m, "STATEFUL_DECODE", False),
+        paged_decode_step=getattr(m, "paged_decode_step", None),
+        paged_prefill_step=paged_prefill,
+        init_paged_cache=getattr(m, "init_paged_cache", None),
     )
 
 

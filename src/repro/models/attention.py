@@ -102,6 +102,86 @@ def sdpa_unfused(
     return o.astype(v.dtype)
 
 
+def _paged_update_attend(
+    q: jax.Array,  # (B, H, sq, D) post-RoPE queries
+    k: jax.Array,  # (B, KVH, sq, D) post-RoPE keys for this step
+    v: jax.Array,
+    cache: Dict[str, jax.Array],  # k_pages / v_pages / page_table
+    cache_pos: jax.Array,  # scalar or per-row (B,) write position
+    *,
+    window: Optional[int],
+    write_mask: Optional[jax.Array],  # bool (B,) — rows allowed to write
+    kv_kernel: str,  # "ref" (gather + unfused sdpa) | "pallas"
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Paged-cache decode/prefill: scatter this step's K/V into the flat
+    page pool through the page table, then attend over the row's pages.
+
+    The write is a per-token scatter ``flat[table[b, pos//ps]*ps + pos%ps]
+    = k`` — rows outside ``write_mask`` (inactive slots) and positions
+    past the table extent (prefill pad) are routed to the reserved trash
+    page 0, so the store needs no batch axis and no post-hoc slot gate.
+    The "ref" attend gathers the row's pages back into the exact
+    contiguous-cache layout and reuses the same masks + sdpa — the paged
+    path is **bitwise** the contiguous path on live rows (garbage beyond
+    ``pos``, trash reads included, lands on score columns already pinned
+    to the additive-mask floor).  "pallas" dispatches the page-table-
+    indirected decode kernel instead (see kernels/paged_attention.py).
+    """
+    from ..kernels.paged_attention import paged_attention as _paged_kernel
+    from ..kernels.ref import gather_pages as _gather_pages
+
+    k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+    pt = cache["page_table"].astype(jnp.int32)
+    NP, ps, KVH, D = k_pages.shape
+    B, MP = pt.shape
+    max_len = MP * ps
+    sq = q.shape[2]
+
+    pos_arr = jnp.asarray(cache_pos, jnp.int32)
+    pos_row = jnp.broadcast_to(pos_arr, (B,)) if pos_arr.ndim == 0 else pos_arr
+    abs_pos = pos_row[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    page_idx = jnp.clip(abs_pos // ps, 0, MP - 1)
+    slot = jnp.take_along_axis(pt, page_idx, axis=1) * ps + abs_pos % ps
+    ok = abs_pos < max_len
+    if write_mask is not None:
+        ok = jnp.logical_and(ok, write_mask[:, None])
+    # trash-routed writes may collide (last-writer-wins): trash content is
+    # never unmasked, live destinations are uniquely owned per (row, pos)
+    dest = jnp.where(ok, slot, abs_pos % ps).reshape(-1)
+    k_tok = k.transpose(0, 2, 1, 3).reshape(B * sq, KVH, D)
+    v_tok = v.transpose(0, 2, 1, 3).reshape(B * sq, KVH, D)
+    new_k = k_pages.reshape(NP * ps, KVH, D).at[dest].set(k_tok).reshape(
+        k_pages.shape
+    )
+    new_v = v_pages.reshape(NP * ps, KVH, D).at[dest].set(v_tok).reshape(
+        v_pages.shape
+    )
+
+    if kv_kernel == "pallas" and sq == 1:
+        interpret = jax.default_backend() != "tpu"
+        out = _paged_kernel(
+            q[:, :, 0, :], new_k, new_v, pt, pos_row,
+            window=window, interpret=interpret,
+        )[:, :, None, :].astype(v.dtype)
+    else:
+        # must mirror the contiguous cache branch of attention() exactly:
+        # same mask builders, same cache_pos rank, same sdpa — that is the
+        # bitwise-equality contract tests/test_paged_kv.py enforces
+        k_view = _gather_pages(new_k, pt)
+        v_view = _gather_pages(new_v, pt)
+        if sq > 1:
+            mask = L.prefill_length_mask(cache_pos, sq, max_len, window=window)
+        elif window is not None:
+            idx = lax.broadcasted_iota(jnp.int32, (1, 1, 1, max_len), 3)
+            p = L.per_row_pos(cache_pos)
+            keep = (idx <= p) & (idx > p - window)
+            mask = jnp.where(keep, 0.0, float(np.finfo(np.float32).min))
+        else:
+            mask = L.decode_length_mask(cache_pos, max_len)
+        out = sdpa_unfused(q, k_view, v_view, causal=False, extra_mask=mask)
+    return out, {"k_pages": new_k, "v_pages": new_v}
+
+
 def attention(
     x: jax.Array,
     p: Params,
@@ -117,6 +197,8 @@ def attention(
     cache: Optional[Dict[str, jax.Array]] = None,
     cache_pos: Optional[jax.Array] = None,
     cache_valid_len: Optional[jax.Array] = None,  # rotating-buffer masks
+    write_mask: Optional[jax.Array] = None,  # bool (B,) — paged cache only
+    kv_kernel: str = "ref",  # paged-cache attend impl (see above)
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Full attention sub-layer.  Returns (out, updated_cache)."""
     src = kv if kv is not None else x
@@ -143,7 +225,17 @@ def attention(
             k = L.apply_rope(k, rope_cos, rope_sin)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and "k_pages" in cache:
+        if cache_valid_len is not None:
+            raise NotImplementedError(
+                "rotating-buffer valid_len masks are a contiguous-cache "
+                "feature; paged rows are length-masked through pos"
+            )
+        out, new_cache = _paged_update_attend(
+            q, k, v, cache, cache_pos,
+            window=window, write_mask=write_mask, kv_kernel=kv_kernel,
+        )
+    elif cache is not None:
         # single-token or whole-chunk decode: write at cache_pos, attend
         # to all.  A chunk (Sq > 1, the batched-prefill path) gets a
         # causal length mask — query i at cache position cache_pos + i
@@ -186,8 +278,8 @@ def attention(
                                          window=window)
         elif window is not None:
             idx = lax.broadcasted_iota(jnp.int32, (1, 1, 1, max_len), 3)
-            p = L.per_row_pos(cache_pos)
-            keep = (idx <= p) & (idx > p - window)
+            prow = L.per_row_pos(cache_pos)
+            keep = (idx <= prow) & (idx > prow - window)
             mask = jnp.where(keep, 0.0, float(np.finfo(np.float32).min))
         else:
             mask = L.decode_length_mask(cache_pos, max_len)

@@ -146,6 +146,43 @@ def block_decode(
     return x + ffn_out, new_cache["k"], new_cache["v"]
 
 
+def block_paged_decode(
+    p: Params,
+    x: jax.Array,
+    k_pages: jax.Array,  # (num_pages, page_size, KVH, D) — this layer's pool
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32, shared by all layers
+    pos: jax.Array,  # scalar or per-row (B,) write position
+    write_mask: jax.Array,  # bool (B,) — rows allowed to write (slot mask)
+    cos: jax.Array,
+    sin: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Block body against the paged KV pool (decode and chunked prefill).
+
+    Unlike :func:`block_decode`, the slot mask rides *inside* the body:
+    the page store has no batch axis to gate post hoc, so inactive rows'
+    writes are routed to the trash page by the scatter itself."""
+    h = L.apply_norm(x, p["norm1"], cfg.norm)
+    attn_out, new_cache = A.attention(
+        h, p["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        rope_cos=cos, rope_sin=sin,
+        cache={"k_pages": k_pages, "v_pages": v_pages,
+               "page_table": page_table},
+        cache_pos=pos, write_mask=write_mask, kv_kernel=cfg.kv_kernel,
+    )
+    x = x + attn_out
+    h = L.apply_norm(x, p["norm2"], cfg.norm)
+    if cfg.family == "moe":
+        ffn_out = MOE.moe_ffn(
+            h, p["moe"], n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+    else:
+        ffn_out = L.apply_ffn(h, p["ffn"], cfg.ffn)
+    return x + ffn_out, new_cache["k_pages"], new_cache["v_pages"]
+
+
 # --------------------------------------------------------------------------
 # Forge integration: compile the block body once per (cfg, shapes)
 # --------------------------------------------------------------------------
@@ -154,14 +191,23 @@ from ._forge import forge_body  # noqa: E402  (shared across families)
 
 
 def _body_fn(cfg: ModelConfig, mode: str, example_args) -> Any:
-    base = block_apply if mode == "apply" else block_decode
+    enabled = cfg.fuse == "forge"
+    if mode.startswith("paged_"):
+        base = block_paged_decode
+        # the pallas kernel is itself the fused dispatch: capturing a
+        # pallas_call through the Phase-1 tracer buys nothing and the
+        # passes don't know the primitive — run the body raw
+        enabled = enabled and cfg.kv_kernel != "pallas"
+        mode = f"{mode}[{cfg.kv_kernel}]"  # keep body-cache keys distinct
+    else:
+        base = block_apply if mode == "apply" else block_decode
 
     def raw(*args):
         return base(*args, cfg=cfg)
 
     return forge_body(
         raw, f"{cfg.name}/{mode}", example_args,
-        enabled=(cfg.fuse == "forge"), remat=cfg.remat,
+        enabled=enabled, remat=cfg.remat,
     )
 
 
@@ -226,6 +272,33 @@ def init_cache(
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
+def init_paged_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    *,
+    num_pages: int,
+    page_size: int,
+) -> Dict[str, jax.Array]:
+    """Paged decode state: one flat page pool per layer plus one page
+    table shared by every layer (a logical page holds all layers' K/V for
+    its token block, so the allocator hands out one index per block).
+
+    Page 0 is the reserved trash page (see core/paging.py): a zero-filled
+    table points every slot there, masked/pad writes scatter there, and
+    the length masks keep whatever accumulates in it out of the softmax.
+    """
+    if max_len % page_size:
+        raise ValueError(f"max_len {max_len} not a multiple of page_size {page_size}")
+    dt = _dtype(cfg)
+    shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim_)
+    return {
+        "k_pages": jnp.zeros(shape, dt),
+        "v_pages": jnp.zeros(shape, dt),
+        "page_table": jnp.zeros((batch, max_len // page_size), jnp.int32),
+    }
+
+
 def supports_batched_prefill(cfg: ModelConfig) -> bool:
     """Whole-block prefill reproduces sequential decode only when no op
     couples tokens across the (B, S) block — false for MoE, whose
@@ -284,6 +357,107 @@ def _cached_forward(
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
     return logits, {"k": new_k, "v": new_v}
+
+
+def _paged_cached_forward(
+    params: Params,
+    cache: Dict[str, jax.Array],
+    x: jax.Array,  # (B, S, D) embedded inputs
+    pos: jax.Array,  # int32 write position, scalar or per-row (B,)
+    cos: jax.Array,
+    sin: jax.Array,
+    cfg: ModelConfig,
+    mode: str,
+    slot_mask: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """:func:`_cached_forward` against the paged KV pool.  The page table
+    is read-only inside the model (allocation is host-side, in the serve
+    layer); the slot mask rides inside the body because the batch-free
+    page store cannot be gated per row after the fact."""
+    B = x.shape[0]
+    mask = (jnp.ones((B,), jnp.bool_) if slot_mask is None
+            else jnp.asarray(slot_mask, jnp.bool_))
+    pt = cache["page_table"]
+    one_block = (
+        jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+        if cfg.scan_layers else params["blocks"][0]
+    )
+    k0, v0 = cache["k_pages"][0], cache["v_pages"][0]
+    body = _body_fn(cfg, mode, (one_block, x, k0, v0, pt, pos, mask, cos, sin))
+
+    if cfg.scan_layers:
+        def step(carry, xs):
+            p_layer, kp, vp = xs
+            y, nk, nv = body(p_layer, carry, kp, vp, pt, pos, mask, cos, sin)
+            return y, (nk, nv)
+
+        x, (new_k, new_v) = lax.scan(
+            step, x, (params["blocks"], cache["k_pages"], cache["v_pages"])
+        )
+    else:
+        ks, vs = [], []
+        for i, p_layer in enumerate(params["blocks"]):
+            x, nk, nv = body(p_layer, x, cache["k_pages"][i],
+                             cache["v_pages"][i], pt, pos, mask, cos, sin)
+            ks.append(nk)
+            vs.append(nv)
+        new_k, new_v = jnp.stack(ks), jnp.stack(vs)
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
+    return logits, {"k_pages": new_k, "v_pages": new_v, "page_table": pt}
+
+
+def paged_decode_step(
+    params: Params,
+    cache: Dict[str, jax.Array],
+    token: jax.Array,  # (B, 1) int32
+    pos: jax.Array,  # int32 write position — scalar or per-row (B,)
+    cfg: ModelConfig,
+    *,
+    slot_mask: Optional[jax.Array] = None,  # bool (B,): active slots
+    embeds: Optional[jax.Array] = None,
+    mrope_positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """:func:`decode_step` against the paged KV pool — same logits,
+    bitwise, on active rows (tests/test_paged_kv.py holds the line)."""
+    if embeds is None:
+        x = L.embed(token, params["embed"])
+    else:
+        x = embeds
+    cos, sin = _rope_for(cfg, L.decode_positions(pos), mrope_positions)
+    return _paged_cached_forward(params, cache, x, pos, cos, sin, cfg,
+                                 "paged_decode", slot_mask=slot_mask)
+
+
+def paged_prefill_step(
+    params: Params,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,  # (B, S) int32 — a whole (padded) prompt block
+    pos: jax.Array,  # int32 first write position — scalar or per-row (B,)
+    cfg: ModelConfig,
+    *,
+    slot_mask: Optional[jax.Array] = None,  # bool (B,): rows to prefill
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """:func:`prefill_step` against the paged KV pool.
+
+    Beyond the contiguous version, ``pos`` may be per-row (B,): each row
+    anchors its chunk at its own start position.  That is the prefix-
+    reuse entry point — a row whose leading pages came from the prefix
+    tree prefills only the suffix, with ``pos`` at its skip offset, in
+    the same dispatch as rows starting from zero."""
+    if cfg.family == "moe":
+        raise NotImplementedError(
+            "MoE capacity routing couples tokens across the block; "
+            "prefill sequentially through paged_decode_step"
+        )
+    x = L.embed(tokens, params["embed"])
+    S = x.shape[1]
+    offs = jnp.arange(S, dtype=jnp.int32)
+    positions = (pos[:, None] + offs) if getattr(pos, "ndim", 0) == 1 else pos + offs
+    cos, sin = _rope_for(cfg, positions, None)
+    return _paged_cached_forward(params, cache, x, pos, cos, sin, cfg,
+                                 "paged_prefill", slot_mask=slot_mask)
 
 
 def decode_step(
