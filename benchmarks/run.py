@@ -21,6 +21,8 @@ Prints ``name,us_per_call,derived`` CSV rows (paper-table mapping):
                       occupancy, pad-decode fraction, swap fidelity
     paged_kv          page pool vs contiguous KV: resident bytes,
                       prefix-hit prefill skip, swap-in cost, fidelity
+    async_compile     inline vs background compilation: tick p99,
+                      warm-fallback counts, restart replay from disk
     variance          Table 19
     roofline_report   §Roofline (reads the dry-run results JSON)
 
@@ -55,6 +57,7 @@ MODULES = (
     "prefill_buckets",
     "continuous_batching",
     "paged_kv",
+    "async_compile",
     "variance",
     "roofline_report",
 )

@@ -10,11 +10,14 @@ Public API:
 from .backends import Backend, available_backends, get_backend, register_backend
 from .cache import (
     CompileCache,
+    DiskCacheStore,
+    cache_salt,
     fingerprint_program,
     get_compile_cache,
     make_cache_key,
 )
 from .capture import CaptureResult, graph_to_fn, trace_to_graph
+from .compile_service import CompileService, get_compile_service
 from .compiler import (
     BucketedModule,
     BufferPool,
@@ -74,8 +77,12 @@ __all__ = [
     "get_backend",
     "register_backend",
     "CompileCache",
+    "CompileService",
+    "DiskCacheStore",
+    "cache_salt",
     "fingerprint_program",
     "get_compile_cache",
+    "get_compile_service",
     "Graph",
     "GLit",
     "GNode",

@@ -16,7 +16,16 @@ from ``PipelineConfig.backend`` / ``forge_compile(..., backend=...)``.
 from __future__ import annotations
 
 from abc import ABC, abstractmethod
-from typing import Any, Callable, Dict, List, Protocol, Type, runtime_checkable
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Type,
+    runtime_checkable,
+)
 
 from ..lowering import RGIRProgram
 
@@ -49,6 +58,32 @@ class Backend(ABC):
         validate: bool = True,
     ) -> ExecutorLike:
         """Compile an RGIR program into an executor."""
+
+    # -- persistence hooks (DESIGN.md §Async compilation & persistent
+    # cache).  Both are best-effort: ``None`` means "this backend (or
+    # this particular program) does not persist", and the compile cache
+    # falls back to a full build.  An entry must be pure picklable data
+    # — RGIR itself is NOT picklable (op targets are closures), so
+    # entries store analysis products + serialized segment executables
+    # and are rehydrated against a freshly lowered program of the same
+    # fingerprint.
+
+    def export_entry(
+        self, prog: RGIRProgram, executor: ExecutorLike
+    ) -> Optional[Dict[str, Any]]:
+        """Serialize ``executor`` into a picklable disk-cache entry."""
+        return None
+
+    def build_from_entry(
+        self,
+        prog: RGIRProgram,
+        entry: Dict[str, Any],
+        *,
+        reorder: bool = True,
+        validate: bool = True,
+    ) -> Optional[ExecutorLike]:
+        """Rebuild an executor from a disk entry + fresh RGIR, or None."""
+        return None
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"<backend {self.name!r}>"

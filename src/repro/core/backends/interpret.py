@@ -14,7 +14,13 @@ the outputs.
 """
 from __future__ import annotations
 
-from ..executor import CompiledExecutor, analyze_program
+from typing import Any, Dict, Optional
+
+from ..executor import (
+    CompiledExecutor,
+    analyze_program,
+    analyzed_from_persisted,
+)
 from ..lowering import RGIRProgram
 from .base import Backend, register_backend
 
@@ -32,3 +38,46 @@ class InterpretBackend(Backend):
     ) -> CompiledExecutor:
         analyzed = analyze_program(prog, reorder=reorder, validate=validate)
         return CompiledExecutor(analyzed.prog, analyzed=analyzed)
+
+    # -- persistence: analysis products only (per-op dispatch has no
+    # XLA executables to serialize; restoring schedule/liveness/alloc
+    # still skips Phase 4a-c on restart) ------------------------------
+
+    def export_entry(
+        self, prog: RGIRProgram, executor: Any
+    ) -> Optional[Dict[str, Any]]:
+        if not isinstance(executor, CompiledExecutor):
+            return None
+        return {
+            "kind": self.name,
+            "n_ops": len(executor.prog.ops),
+            "sched": executor.sched,
+            "live": executor.live,
+            "alloc": executor.alloc,
+        }
+
+    def build_from_entry(
+        self,
+        prog: RGIRProgram,
+        entry: Dict[str, Any],
+        *,
+        reorder: bool = True,
+        validate: bool = True,
+    ) -> Optional[CompiledExecutor]:
+        if entry.get("kind") != self.name:
+            return None
+        if entry.get("n_ops") != len(prog.ops):
+            return None
+        analyzed = analyzed_from_persisted(
+            prog,
+            entry["sched"],
+            entry["live"],
+            entry["alloc"],
+            validate=validate,
+        )
+        if analyzed is None:
+            return None
+        try:
+            return CompiledExecutor(analyzed.prog, analyzed=analyzed)
+        except Exception:
+            return None

@@ -31,7 +31,7 @@ scales with δ, not with instruction count.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import numpy as np
@@ -43,9 +43,35 @@ from ..executor import (
     ExecutorStats,
     PaddedExecutionMixin,
     analyze_program,
+    analyzed_from_persisted,
 )
 from ..lowering import RGIROp, RGIRProgram
 from .base import Backend, register_backend
+
+
+def _restore_segment_export(blob: bytes) -> Optional[Callable]:
+    """Deserialize one AOT-exported segment; None on any failure."""
+    try:
+        from jax import export as jax_export
+
+        exp = jax_export.deserialize(bytearray(blob))
+        return exp.call
+    except Exception:
+        return None
+
+
+def _serialize_segment(seg: "CompiledSegment", avals: List[Any]) -> Optional[bytes]:
+    """``jax.export`` one compiled segment at its live-in avals."""
+    try:
+        from jax import export as jax_export
+
+        specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in avals]
+        # export the non-donating twin: donate_argnums are recomputed
+        # deterministically at load time and re-applied by jax.jit
+        exp = jax_export.export(seg.fn_nodonate)(*specs)
+        return bytes(exp.serialize())
+    except Exception:
+        return None
 
 
 @dataclass
@@ -116,6 +142,7 @@ class SegmentExecutor(BufferFilePoolMixin, PaddedExecutionMixin):
         *,
         warmup: bool = True,
         donate: bool = True,
+        exports: Optional[Dict[int, bytes]] = None,
     ):
         self.prog = analyzed.prog
         self.sched = analyzed.sched
@@ -196,6 +223,14 @@ class SegmentExecutor(BufferFilePoolMixin, PaddedExecutionMixin):
                         live_out=live_out,
                         free_after=free_after,
                     )
+                # a persisted jax.export blob replaces re-tracing the
+                # Python replay closure through jit; deserialization
+                # failure (platform drift, format change) silently falls
+                # back to the fresh trace — never a wrong program
+                if exports and si in exports:
+                    restored = _restore_segment_export(exports[si])
+                    if restored is not None:
+                        fn = restored
                 fn_nodonate = jax.jit(fn)
                 fn = (
                     jax.jit(fn, donate_argnums=donate_argnums)
@@ -373,3 +408,58 @@ class SegmentJitBackend(Backend):
     ) -> SegmentExecutor:
         analyzed = analyze_program(prog, reorder=reorder, validate=validate)
         return SegmentExecutor(analyzed)
+
+    # -- persistence (DESIGN.md §Async compilation & persistent cache) --
+
+    def export_entry(
+        self, prog: RGIRProgram, executor: Any
+    ) -> Optional[Dict[str, Any]]:
+        if not isinstance(executor, SegmentExecutor):
+            return None
+        reg_avals = executor.prog.reg_avals
+        exports: Dict[int, bytes] = {}
+        for seg in executor.segments:
+            if not seg.compiled:
+                continue
+            blob = _serialize_segment(
+                seg, [reg_avals[r] for r in seg.live_in]
+            )
+            if blob is not None:
+                exports[seg.index] = blob
+        return {
+            "kind": self.name,
+            "n_ops": len(executor.prog.ops),
+            "sched": executor.sched,
+            "live": executor.live,
+            # carried for AnalyzedProgram completeness only: the rebuilt
+            # executor recomputes its segment-aware scan from ``live``
+            # exactly as a fresh build does
+            "alloc": executor.alloc,
+            "exports": exports,
+        }
+
+    def build_from_entry(
+        self,
+        prog: RGIRProgram,
+        entry: Dict[str, Any],
+        *,
+        reorder: bool = True,
+        validate: bool = True,
+    ) -> Optional[SegmentExecutor]:
+        if entry.get("kind") != self.name:
+            return None
+        if entry.get("n_ops") != len(prog.ops):
+            return None
+        analyzed = analyzed_from_persisted(
+            prog,
+            entry["sched"],
+            entry["live"],
+            entry["alloc"],
+            validate=validate,
+        )
+        if analyzed is None:
+            return None
+        try:
+            return SegmentExecutor(analyzed, exports=entry.get("exports"))
+        except Exception:
+            return None

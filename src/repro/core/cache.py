@@ -17,11 +17,15 @@ parameter values.
 from __future__ import annotations
 
 import hashlib
+import os
+import pickle
+import sys
+import tempfile
 import threading
 import weakref
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -197,44 +201,255 @@ def make_cache_key(
     return f"{backend}|reorder={int(reorder)}{sk}|{fingerprint}"
 
 
+#: on-disk schema version — bump on any change to the entry payload
+#: layout; old entries then miss on salt and are lazily rewritten
+DISK_SCHEMA = 1
+
+#: file header; the trailing digest covers everything after it
+_DISK_MAGIC = b"FORGEC01\n"
+
+
+def cache_salt() -> str:
+    """Environment fingerprint folded into every on-disk address.
+
+    A serialized executor embeds XLA artifacts (``jax.export`` blobs)
+    and analysis products whose validity is tied to the jax/jaxlib
+    build, the accelerator platform, and the interpreter that pickled
+    them — a restart under any different one must miss and recompile,
+    never deserialize a stale program.
+    """
+    try:
+        import jaxlib  # noqa: PLC0415 — version probe only
+
+        jaxlib_v = getattr(jaxlib, "__version__", "?")
+    except Exception:  # pragma: no cover - jaxlib always ships with jax
+        jaxlib_v = "?"
+    return "|".join(
+        (
+            f"schema={DISK_SCHEMA}",
+            f"jax={jax.__version__}",
+            f"jaxlib={jaxlib_v}",
+            f"platform={jax.default_backend()}",
+            f"py={sys.version_info.major}.{sys.version_info.minor}",
+        )
+    )
+
+
+@dataclass
+class DiskStoreStats:
+    hits: int = 0           #: entries read, verified, and deserialized
+    misses: int = 0         #: no file for the key
+    writes: int = 0
+    corrupt: int = 0        #: checksum/format failures (file unlinked)
+    write_errors: int = 0
+    bytes_written: int = 0
+
+
+class DiskCacheStore:
+    """Content-addressed persistent tier under one ``--cache-dir``.
+
+    Entry files are named by ``sha256(salt | cache_key)`` — the same
+    fingerprint scheme as the in-memory cache, salted with
+    :func:`cache_salt` so a jax/platform upgrade invalidates the whole
+    store by address (no scan, no version check on read).  Each file is
+    ``MAGIC + sha256(payload) + payload``; a truncated or bit-flipped
+    entry fails the checksum, is counted, unlinked, and treated as a
+    miss — corruption can cost a recompile, never a wrong program.
+    Writes go through a same-directory temp file + ``os.replace`` so a
+    crashed writer leaves either the old entry or none.
+    """
+
+    def __init__(self, root: str, salt: Optional[str] = None):
+        self.root = os.path.abspath(root)
+        self.salt = cache_salt() if salt is None else salt
+        self.stats = DiskStoreStats()
+        os.makedirs(self.root, exist_ok=True)
+
+    def path_for(self, key: str) -> str:
+        digest = hashlib.sha256(
+            self.salt.encode() + b"\x00" + key.encode()
+        ).hexdigest()
+        return os.path.join(self.root, digest[:2], f"{digest}.forgec")
+
+    def load_entry(self, key: str) -> Optional[Dict[str, Any]]:
+        path = self.path_for(key)
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+        except FileNotFoundError:
+            self.stats.misses += 1
+            return None
+        except OSError:
+            self.stats.misses += 1
+            return None
+        try:
+            if not blob.startswith(_DISK_MAGIC):
+                raise ValueError("bad magic")
+            off = len(_DISK_MAGIC)
+            digest, payload = blob[off : off + 32], blob[off + 32 :]
+            if hashlib.sha256(payload).digest() != digest:
+                raise ValueError("checksum mismatch")
+            wrapper = pickle.loads(payload)
+            # defense in depth: a (vanishingly unlikely) path collision
+            # or a store re-rooted onto foreign files must still miss
+            if wrapper.get("key") != key or wrapper.get("salt") != self.salt:
+                raise ValueError("key/salt mismatch")
+            entry = wrapper["entry"]
+        except Exception:
+            self.stats.corrupt += 1
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None
+        self.stats.hits += 1
+        return entry
+
+    def store_entry(self, key: str, entry: Dict[str, Any]) -> bool:
+        path = self.path_for(key)
+        try:
+            payload = pickle.dumps(
+                {"key": key, "salt": self.salt, "entry": entry},
+                protocol=pickle.HIGHEST_PROTOCOL,
+            )
+            blob = _DISK_MAGIC + hashlib.sha256(payload).digest() + payload
+            d = os.path.dirname(path)
+            os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        except Exception:
+            self.stats.write_errors += 1
+            return False
+        self.stats.writes += 1
+        self.stats.bytes_written += len(blob)
+        return True
+
+    def delete(self, key: str) -> bool:
+        try:
+            os.unlink(self.path_for(key))
+            return True
+        except OSError:
+            return False
+
+    def __len__(self) -> int:
+        n = 0
+        for _root, _dirs, files in os.walk(self.root):
+            n += sum(1 for f in files if f.endswith(".forgec"))
+        return n
+
+
 @dataclass
 class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    evictions: int = 0
+    hits: int = 0                   #: in-memory hits
+    misses: int = 0                 #: full backend builds required
+    evictions: int = 0              #: LRU max_entries evictions
+    disk_hits: int = 0              #: rebuilt from the persistent tier
+    disk_rebuild_failures: int = 0  #: entry read ok but rebuild declined
+    coherence_drops: int = 0        #: entries dropped by bucket eviction
 
     @property
     def hit_rate(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
+        """Fraction of lookups that avoided a full backend build."""
+        total = self.hits + self.disk_hits + self.misses
+        return (self.hits + self.disk_hits) / total if total else 0.0
 
 
 class CompileCache:
-    """Thread-safe LRU mapping fingerprint keys to built executors."""
+    """Thread-safe LRU mapping fingerprint keys to built executors.
 
-    def __init__(self, max_entries: int = 256):
+    With a :class:`DiskCacheStore` attached, lookups that miss memory
+    consult the persistent tier: the caller supplies a ``loader`` that
+    rebuilds an executor from the stored entry (the backend's
+    ``build_from_entry``), and successful rebuilds are promoted into
+    the memory LRU.  ``stats.misses`` then counts exactly the lookups
+    that required a full Phase-4 build — the restart-replay gate
+    (``compiles_post_restart == 0``) is ``misses == 0`` on run 2.
+    """
+
+    def __init__(
+        self, max_entries: int = 256, store: Optional[DiskCacheStore] = None
+    ):
         self.max_entries = max_entries
+        self.store = store
         self._entries: "OrderedDict[str, Any]" = OrderedDict()
         self._lock = threading.Lock()
         self.stats = CacheStats()
 
-    def get(self, key: str) -> Optional[Any]:
+    def get(
+        self,
+        key: str,
+        loader: Optional[Callable[[Dict[str, Any]], Optional[Any]]] = None,
+    ) -> Optional[Any]:
         with self._lock:
             entry = self._entries.get(key)
-            if entry is None:
-                self.stats.misses += 1
-                return None
-            self._entries.move_to_end(key)
-            self.stats.hits += 1
-            return entry
-
-    def put(self, key: str, value: Any) -> None:
+            if entry is not None:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                return entry
+        if self.store is not None and loader is not None:
+            # disk read + executor rebuild run outside the lock: they
+            # can take XLA-compile time and must not serialize lookups
+            payload = self.store.load_entry(key)
+            if payload is not None:
+                try:
+                    value = loader(payload)
+                except Exception:
+                    value = None
+                if value is not None:
+                    with self._lock:
+                        self.stats.disk_hits += 1
+                        self._insert_locked(key, value)
+                    return value
+                with self._lock:
+                    self.stats.disk_rebuild_failures += 1
         with self._lock:
-            self._entries[key] = value
-            self._entries.move_to_end(key)
-            while len(self._entries) > self.max_entries:
-                self._entries.popitem(last=False)
-                self.stats.evictions += 1
+            self.stats.misses += 1
+        return None
+
+    def put(
+        self,
+        key: str,
+        value: Any,
+        disk_entry: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        with self._lock:
+            self._insert_locked(key, value)
+        if self.store is not None and disk_entry is not None:
+            self.store.store_entry(key, disk_entry)
+
+    def _insert_locked(self, key: str, value: Any) -> None:
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+
+    def drop(self, key: str, *, disk: bool = False) -> bool:
+        """Coherence hook for ``BucketedModule.evict_cold``.
+
+        Removes the retired bucket's memory entry so the LRU stops
+        pinning a dead executor.  The disk entry survives by default —
+        it is the cold tier a re-discovered bucket replays from — and
+        is unlinked only on explicit ``disk=True``.
+        """
+        dropped = False
+        with self._lock:
+            if key in self._entries:
+                del self._entries[key]
+                self.stats.coherence_drops += 1
+                dropped = True
+        if disk and self.store is not None:
+            self.store.delete(key)
+        return dropped
 
     def clear(self) -> None:
         with self._lock:

@@ -1,0 +1,269 @@
+"""Background compile service (DESIGN.md §Async compilation).
+
+Cold-bucket dispatches used to compile inline under a per-key build
+lock — a tail-latency cliff whenever traffic discovered a new
+(batch × seq) cell.  The ``CompileService`` moves all bucket
+compilations onto a small worker pool so the dispatch path can submit
+the exact key and immediately fall back to a warm dominating bucket
+(``BucketedModule`` owns that policy; this module owns only execution).
+
+Contract:
+
+* **Per-key deduplication** — concurrent submits of one key share a
+  single :class:`concurrent.futures.Future`; only one worker ever
+  builds it (the thundering-herd guarantee).
+* **Priority ordering** — foreground-discovered keys (a live request
+  is padding into a fallback bucket right now) are drained before
+  speculative warmup keys.  ``promote`` upgrades a queued speculative
+  job in place when traffic discovers it.
+* **Failure transparency** — a build that raises resolves its future
+  with the exception (every waiter sees it) and is forgotten, so a
+  later submit retries rather than caching the failure forever.
+
+Workers are daemon threads: compilation is pure-Python orchestration
+around JAX tracing/XLA compiles, which release the GIL for the
+expensive parts, so a thread pool (not a subprocess pool) captures the
+available parallelism without serializing programs across a pipe.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+#: drain order: every foreground job before any speculative job
+PRIORITY_FOREGROUND = 0
+PRIORITY_SPECULATIVE = 1
+
+
+@dataclass
+class CompileServiceStats:
+    submitted: int = 0          #: distinct jobs accepted (post-dedup)
+    dedup_hits: int = 0         #: submits coalesced onto an existing job
+    promoted: int = 0           #: speculative jobs upgraded to foreground
+    completed: int = 0          #: builds that returned a value
+    failed: int = 0             #: builds that raised
+    busy_s: float = 0.0         #: summed worker wall time inside builds
+    peak_queued: int = 0        #: high-water mark of jobs waiting + running
+
+    def snapshot(self) -> Dict[str, Any]:
+        return dict(self.__dict__)
+
+
+@dataclass(order=True)
+class _Job:
+    priority: int
+    seq: int
+    key: str = field(compare=False)
+    build: Optional[Callable[[], Any]] = field(compare=False, default=None)
+    future: Optional[Future] = field(compare=False, default=None)
+    #: a promoted job leaves its old heap entry behind as a tombstone
+    stale: bool = field(compare=False, default=False)
+
+
+class CompileService:
+    """Priority worker pool with per-key future deduplication."""
+
+    def __init__(self, workers: int = 2, name: str = "forge-compile"):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.stats = CompileServiceStats()
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._heap: List[_Job] = []
+        #: key -> live job (queued or running); the dedup table
+        self._jobs: Dict[str, _Job] = {}
+        self._seq = itertools.count()
+        self._shutdown = False
+        self._idle = threading.Condition(self._lock)
+        self._inflight = 0
+        self._threads = [
+            threading.Thread(
+                target=self._worker, name=f"{name}-{i}", daemon=True
+            )
+            for i in range(workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------------
+    # submission API
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        key: str,
+        build: Callable[[], Any],
+        *,
+        foreground: bool = True,
+    ) -> Future:
+        """Enqueue ``build`` under ``key``; returns the shared future.
+
+        A second submit of a live key returns the existing future
+        (``build`` is dropped); a foreground re-submit of a queued
+        speculative key promotes it to the front of the line.
+        """
+        priority = PRIORITY_FOREGROUND if foreground else PRIORITY_SPECULATIVE
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError("CompileService is shut down")
+            job = self._jobs.get(key)
+            if job is not None:
+                self.stats.dedup_hits += 1
+                if foreground and job.priority == PRIORITY_SPECULATIVE:
+                    self._promote_locked(job)
+                return job.future
+            job = _Job(
+                priority=priority,
+                seq=next(self._seq),
+                key=key,
+                build=build,
+                future=Future(),
+            )
+            self._jobs[key] = job
+            heapq.heappush(self._heap, job)
+            self.stats.submitted += 1
+            self.stats.peak_queued = max(
+                self.stats.peak_queued, len(self._jobs)
+            )
+            self._wake.notify()
+            return job.future
+
+    def promote(self, key: str) -> bool:
+        """Upgrade a queued speculative key to foreground priority."""
+        with self._lock:
+            job = self._jobs.get(key)
+            if job is None or job.priority != PRIORITY_SPECULATIVE:
+                return False
+            self._promote_locked(job)
+            return True
+
+    def _promote_locked(self, job: _Job) -> None:
+        # Re-push a foreground twin and tombstone the speculative entry;
+        # heapq has no decrease-key.  Running jobs are past the queue.
+        if job.stale or job.build is None:
+            return
+        job.stale = True
+        twin = _Job(
+            priority=PRIORITY_FOREGROUND,
+            seq=next(self._seq),
+            key=job.key,
+            build=job.build,
+            future=job.future,
+        )
+        self._jobs[job.key] = twin
+        heapq.heappush(self._heap, twin)
+        self.stats.promoted += 1
+        self._wake.notify()
+
+    def pending(self) -> int:
+        """Jobs queued or building right now."""
+        with self._lock:
+            return len(self._jobs)
+
+    def lookup(self, key: str) -> Optional[Future]:
+        """The live future for ``key``, if a build is queued/running."""
+        with self._lock:
+            job = self._jobs.get(key)
+            return job.future if job is not None else None
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        """Block until no jobs are queued or running.  True on success."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._idle:
+            while self._jobs or self._inflight:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return False
+                self._idle.wait(remaining)
+            return True
+
+    def shutdown(self, wait: bool = True) -> None:
+        with self._lock:
+            if self._shutdown:
+                return
+            self._shutdown = True
+            # cancel queued (not yet running) jobs so waiters unblock
+            for job in self._heap:
+                if not job.stale and job.build is not None:
+                    job.build = None
+                    self._jobs.pop(job.key, None)
+                    job.future.cancel()
+            self._heap.clear()
+            self._wake.notify_all()
+            self._idle.notify_all()
+        if wait:
+            for t in self._threads:
+                t.join(timeout=30.0)
+
+    # ------------------------------------------------------------------
+    # worker loop
+    # ------------------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            with self._wake:
+                while not self._heap and not self._shutdown:
+                    self._wake.wait()
+                if self._shutdown and not self._heap:
+                    return
+                job = heapq.heappop(self._heap)
+                if job.stale or job.build is None:
+                    continue
+                build = job.build
+                job.build = None  # claim: any heap twin is now a tombstone
+                self._inflight += 1
+            t0 = time.perf_counter()
+            try:
+                result = build()
+            except BaseException as exc:  # noqa: BLE001 — relay to waiters
+                self._finish(job, err=exc, dt=time.perf_counter() - t0)
+            else:
+                self._finish(job, result=result, dt=time.perf_counter() - t0)
+
+    def _finish(
+        self,
+        job: _Job,
+        *,
+        result: Any = None,
+        err: Optional[BaseException] = None,
+        dt: float = 0.0,
+    ) -> None:
+        with self._lock:
+            self._inflight -= 1
+            # forget the key first so a post-failure resubmit retries
+            live = self._jobs.get(job.key)
+            if live is not None and live.future is job.future:
+                del self._jobs[job.key]
+            self.stats.busy_s += dt
+            if err is not None:
+                self.stats.failed += 1
+            else:
+                self.stats.completed += 1
+            self._idle.notify_all()
+        # resolve outside the lock: done-callbacks may call back in
+        if err is not None:
+            job.future.set_exception(err)
+        else:
+            job.future.set_result(result)
+
+
+#: lazily created process-default service (serve/CLI convenience);
+#: tests and servers that want their own pool construct one directly
+_DEFAULT: Optional[CompileService] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def get_compile_service(workers: int = 2) -> CompileService:
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = CompileService(workers=workers)
+        return _DEFAULT

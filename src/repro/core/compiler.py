@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import threading
 import time
+from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -31,6 +32,7 @@ from .cache import (
     get_compile_cache,
     make_cache_key,
 )
+from .compile_service import CompileService, get_compile_service
 from .capture import CaptureResult, trace_to_graph
 from .cost_model import CostBreakdown, score_graph
 from .executor import CompiledExecutor, ExecutorStats
@@ -74,6 +76,9 @@ class CompilationResult:
     # Phase-4 backend + compile-cache provenance
     backend: str = "interpret"
     cache_hit: bool = False
+    #: the hit was served by the persistent tier (executor rebuilt from
+    #: a disk entry rather than found in the memory LRU)
+    cache_disk_hit: bool = False
     cache_key: Optional[str] = None
     cache_hits: int = 0  # global counter snapshots at compile time
     cache_misses: int = 0
@@ -340,9 +345,21 @@ class BucketedModule:
         out_axes: AxisSpec = 0,
         policy: Union[str, BucketPolicy] = "pow2",
         pad_mode: str = "edge",
+        async_compile: bool = False,
+        service: Optional[CompileService] = None,
     ):
         self.compiler = compiler
         self.fn = fn
+        #: async mode (DESIGN.md §Async compilation): a cold dispatch
+        #: submits its exact key to the CompileService and pads into the
+        #: nearest warm dominating bucket instead of blocking — it only
+        #: ever blocks when no warm bucket dominates the concrete shape
+        self.async_compile = bool(async_compile)
+        self.service: Optional[CompileService] = (
+            service
+            if service is not None
+            else (get_compile_service() if async_compile else None)
+        )
         if axes is None:
             axes = (PolyAxis(in_axes=in_axes, out_axes=out_axes,
                              policy=policy),)
@@ -400,7 +417,11 @@ class BucketedModule:
         return self._program_for_key(key, args), key, n
 
     def _program_for_key(
-        self, key: ShapeKey, args: Tuple[Any, ...]
+        self,
+        key: ShapeKey,
+        args: Tuple[Any, ...],
+        *,
+        background: bool = False,
     ) -> CompiledModule:
         with self._lock:
             mod = self.programs.get(key)
@@ -409,13 +430,19 @@ class BucketedModule:
                     key, threading.Lock()
                 )
         if mod is not None:
-            self.stats.note_lookup(hit=True)
+            if not background:
+                self.stats.note_lookup(hit=True)
             return mod
+        # everything below is request-visible stall unless a service
+        # worker is doing it: the split compile_wait_s is judged by
+        t_wait = time.perf_counter()
         with build_lock:
             with self._lock:
                 mod = self.programs.get(key)
             if mod is not None:  # a concurrent dispatch built it first
-                self.stats.note_lookup(hit=True)
+                if not background:
+                    self.stats.note_lookup(hit=True)
+                    self.stats.note_wait(time.perf_counter() - t_wait)
                 return mod
             t0 = time.perf_counter()
             padded = pad_args(
@@ -431,9 +458,146 @@ class BucketedModule:
             with self._lock:
                 self.programs[key] = mod
             self.stats.note_lookup(
-                hit=False, compile_s=time.perf_counter() - t0
+                hit=False,
+                compile_s=time.perf_counter() - t0,
+                background=background,
             )
+            if not background:
+                self.stats.note_wait(time.perf_counter() - t_wait)
         return mod
+
+    # -- async compile service integration --------------------------------
+
+    def _service_key(self, key: ShapeKey) -> str:
+        # the module's identity joins the key: two fronts can share one
+        # CompileService without colliding on equal ShapeKeys
+        return f"bucketed@{id(self):#x}|{key}"
+
+    def has_program(self, key: ShapeKey) -> bool:
+        with self._lock:
+            return key in self.programs
+
+    def lookup_program(self, key: ShapeKey) -> Optional[CompiledModule]:
+        """Table read without stats side effects (scheduler probes)."""
+        with self._lock:
+            return self.programs.get(key)
+
+    def warm_keys(self) -> List[ShapeKey]:
+        """Every ShapeKey with a compiled program (scheduler probes)."""
+        with self._lock:
+            return list(self.programs.keys())
+
+    def key_for_extents(
+        self, extents: Union[int, Sequence[int]]
+    ) -> ShapeKey:
+        """The ShapeKey of a given per-axis bucket-extent assignment."""
+        if isinstance(extents, int):
+            extents = (extents,)
+        if len(extents) != len(self.axes):
+            raise ValueError(
+                f"expected {len(self.axes)} extents, got {len(extents)}"
+            )
+        return ShapeKey(
+            tuple(
+                AxisKey(pa.policy.name, int(e), pa.label)
+                for pa, e in zip(self.axes, extents)
+            )
+        )
+
+    def nearest_warm(
+        self, ns: Union[int, Sequence[int]]
+    ) -> Optional[ShapeKey]:
+        """Smallest warm bucket that *dominates* the concrete extents.
+
+        The fallback-domination rule (DESIGN.md): a warm bucket is a
+        legal pad-up target iff every axis extent is >= the concrete
+        extent — the dispatch then runs as an ordinary padded call of
+        that bucket, bitwise equal to the warm program's own output on
+        the same padded inputs.  Among legal buckets the one with the
+        fewest total cells (ties: lexicographically smallest extents)
+        wins, minimizing the fallback pad premium.
+        """
+        if isinstance(ns, int):
+            ns = (ns,)
+        ns = tuple(int(n) for n in ns)
+        with self._lock:
+            warm = list(self.programs.keys())
+        best: Optional[ShapeKey] = None
+        best_rank: Tuple[int, Tuple[int, ...]] = (0, ())
+        for k in warm:
+            ext = k.extents
+            if len(ext) != len(ns):
+                continue
+            if any(e < n for e, n in zip(ext, ns)):
+                continue
+            rank = (int(np.prod(ext)), ext)
+            if best is None or rank < best_rank:
+                best, best_rank = k, rank
+        return best
+
+    def submit_key(
+        self,
+        key: ShapeKey,
+        args: Optional[Tuple[Any, ...]] = None,
+        args_fn: Optional[Callable[[], Tuple[Any, ...]]] = None,
+        *,
+        foreground: bool = True,
+    ) -> Future:
+        """Queue ``key``'s compile on the service; returns its future.
+
+        ``args_fn`` defers example-arg construction (e.g. a bucket-sized
+        KV cache) to the worker thread so submission itself stays cheap.
+        An already-warm key returns a resolved future.
+        """
+        if self.service is None:
+            raise RuntimeError("BucketedModule has no CompileService")
+        with self._lock:
+            mod = self.programs.get(key)
+        if mod is not None:
+            fut: Future = Future()
+            fut.set_result(mod)
+            return fut
+        if args is None and args_fn is None:
+            raise TypeError("submit_key needs args or args_fn")
+
+        def build() -> CompiledModule:
+            a = args if args is not None else args_fn()
+            return self._program_for_key(key, a, background=True)
+
+        return self.service.submit(
+            self._service_key(key), build, foreground=foreground
+        )
+
+    def _resolve_dispatch(
+        self, key: ShapeKey, ns: Tuple[int, ...], args: Tuple[Any, ...]
+    ) -> Tuple[CompiledModule, ShapeKey]:
+        """Pick the (program, bucket) a concrete call executes under.
+
+        Sync mode: the exact bucket, compiled inline on a miss.  Async
+        mode: the exact bucket when warm; otherwise submit it to the
+        service and pad into ``nearest_warm`` — blocking on the future
+        only when no warm bucket dominates (the very first program).
+        """
+        if not self.async_compile or self.service is None:
+            return self._program_for_key(key, args), key
+        with self._lock:
+            mod = self.programs.get(key)
+        if mod is not None:
+            self.stats.note_lookup(hit=True)
+            return mod, key
+        fut = self.submit_key(key, args=args, foreground=True)
+        warm = self.nearest_warm(ns)
+        if warm is not None:
+            mod = self.lookup_program(warm)
+            if mod is not None:
+                self.stats.note_fallback(
+                    int(np.prod(warm.extents)) - int(np.prod(key.extents))
+                )
+                return mod, warm
+        t0 = time.perf_counter()
+        mod = fut.result()
+        self.stats.note_wait(time.perf_counter() - t0)
+        return mod, key
 
     def _plan_for(
         self, mod: CompiledModule, key: ShapeKey, ns: Tuple[int, ...]
@@ -462,11 +626,13 @@ class BucketedModule:
         # hot path: one pytree flatten feeds dispatch AND execution
         flat, tree = jax.tree_util.tree_flatten(args)
         key, ns = self._shape_key_flat(flat, args)
-        mod = self._program_for_key(key, args)
+        # async mode may substitute a warm dominating bucket for a cold
+        # exact key; the pad plan then pads up to *that* bucket's extents
+        mod, use_key = self._resolve_dispatch(key, ns, args)
         flat = mod._filter_flat_inputs(flat, tree)
-        plan = self._plan_for(mod, key, ns)
+        plan = self._plan_for(mod, use_key, ns)
         outs = mod.executor.execute_padded(flat, plan=plan)
-        self.stats.note_dispatch(key, ns, key.extents)
+        self.stats.note_dispatch(use_key, ns, use_key.extents)
         return mod._unflatten_outputs(outs)
 
     # -- eviction ---------------------------------------------------------
@@ -495,13 +661,21 @@ class BucketedModule:
             victims = sorted(
                 self.programs, key=lambda k: last.get(str(k), 0)
             )[:excess]
+            victim_mods = [self.programs[k] for k in victims]
             for k in victims:
                 del self.programs[k]
                 self._out_axes_flat.pop(k, None)
                 self._build_locks.pop(k, None)
-        for k in victims:
+        for k, m in zip(victims, victim_mods):
             self.pool.drop(bucket_pool_key(k))
             self.stats.note_eviction(k)
+            # eviction coherence: drop the retired program's compile-
+            # cache memory entry too, so the LRU stops pinning a dead
+            # executor.  The disk entry (if any) survives — a later
+            # re-dispatch replays it instead of doing a full build.
+            ck = m.result.cache_key
+            if ck is not None and self.compiler.cache is not None:
+                self.compiler.cache.drop(ck)
         return victims
 
     # -- transparency -----------------------------------------------------
@@ -586,6 +760,7 @@ class ForgeCompiler:
         backend = get_backend(self.backend_name)
         cache_key: Optional[str] = None
         executor = None
+        disk_hit = False
         if self.cache is not None:
             try:
                 cache_key = make_cache_key(
@@ -594,16 +769,41 @@ class ForgeCompiler:
                     fingerprint_program(prog),
                     shape_key,
                 )
-                executor = self.cache.get(cache_key)
             except UncacheableProgram:
                 # tracer-valued constants (compile inside an enclosing
                 # trace): no stable content address — bypass the cache
                 cache_key = None
+            if cache_key is not None:
+                loader = None
+                if self.cache.store is not None:
+                    # persistent tier: rehydrate the executor from the
+                    # stored analysis + exported segment programs
+                    # against this freshly lowered same-fingerprint RGIR
+                    came_from_disk = []
+
+                    def loader(entry, _prog=prog, _mark=came_from_disk):
+                        ex = backend.build_from_entry(
+                            _prog, entry, reorder=self.reorder
+                        )
+                        if ex is not None:
+                            _mark.append(True)
+                        return ex
+
+                    executor = self.cache.get(cache_key, loader)
+                    disk_hit = bool(came_from_disk) and executor is not None
+                else:
+                    executor = self.cache.get(cache_key)
         cache_hit = executor is not None
         if executor is None:
             executor = backend.build(prog, reorder=self.reorder)
             if self.cache is not None and cache_key is not None:
-                self.cache.put(cache_key, executor)
+                disk_entry = None
+                if self.cache.store is not None:
+                    try:
+                        disk_entry = backend.export_entry(prog, executor)
+                    except Exception:
+                        disk_entry = None
+                self.cache.put(cache_key, executor, disk_entry=disk_entry)
         backend_ms = (time.perf_counter() - t0) * 1e3
 
         cost = score_graph(g, self.config.precision)
@@ -629,6 +829,7 @@ class ForgeCompiler:
             config=self.config,
             backend=self.backend_name,
             cache_hit=cache_hit,
+            cache_disk_hit=disk_hit,
             cache_key=cache_key,
             cache_hits=self.cache.stats.hits if self.cache else 0,
             cache_misses=self.cache.stats.misses if self.cache else 0,
@@ -645,6 +846,8 @@ class ForgeCompiler:
         out_axes: AxisSpec = 0,
         policy: Union[str, BucketPolicy] = "pow2",
         pad_mode: str = "edge",
+        async_compile: bool = False,
+        service: Optional[CompileService] = None,
     ) -> "BucketedModule":
         """Build a shape-generalized multi-program front over ``fn``.
 
@@ -659,6 +862,7 @@ class ForgeCompiler:
         mod = BucketedModule(
             self, fn, axes=axes, in_axes=in_axes, out_axes=out_axes,
             policy=policy, pad_mode=pad_mode,
+            async_compile=async_compile, service=service,
         )
         if example_args:
             mod.program_for(*example_args)
@@ -686,6 +890,8 @@ def forge_compile_bucketed(
     out_axes: AxisSpec = 0,
     policy: Union[str, BucketPolicy] = "pow2",
     pad_mode: str = "edge",
+    async_compile: bool = False,
+    service: Optional[CompileService] = None,
     config: Optional[PipelineConfig] = None,
     backend: Optional[str] = None,
     **config_kwargs: Any,
@@ -702,4 +908,5 @@ def forge_compile_bucketed(
     return ForgeCompiler(config, backend=backend).compile_bucketed(
         fn, *example_args, axes=axes, in_axes=in_axes, out_axes=out_axes,
         policy=policy, pad_mode=pad_mode,
+        async_compile=async_compile, service=service,
     )

@@ -273,6 +273,42 @@ def analyze_program(
     return AnalyzedProgram(prog=scheduled, sched=sched, live=live, alloc=alloc)
 
 
+def analyzed_from_persisted(
+    prog: RGIRProgram,
+    sched: ScheduleResult,
+    live: LivenessInfo,
+    alloc: AllocationResult,
+    *,
+    validate: bool = True,
+) -> Optional[AnalyzedProgram]:
+    """Rehydrate Phase-4 analysis from a disk-cache entry.
+
+    ``prog`` is a freshly lowered program whose fingerprint matched the
+    persisted entry's cache key; ``renumber`` keeps register ids, so the
+    stored schedule/liveness/allocation (all keyed by register id and
+    scheduled instruction index) apply verbatim.  Returns ``None`` on
+    any inconsistency — the caller falls back to a full analysis, never
+    trusts a stale entry.
+    """
+    n = len(prog.ops)
+    if sorted(sched.order) != list(range(n)):
+        return None
+    if sched.segments and sched.segments[-1].stop != n:
+        return None
+    try:
+        if validate:
+            verify_topological(prog, sched.order)
+        scheduled = prog.renumber(sched.order)
+        regs = set(scheduled.input_regs) | set(scheduled.constants)
+        for op in scheduled.ops:
+            regs.update(op.output_regs)
+        if not regs.issubset(live.intervals.keys()):
+            return None
+    except Exception:
+        return None
+    return AnalyzedProgram(prog=scheduled, sched=sched, live=live, alloc=alloc)
+
+
 class CompiledExecutor(BufferFilePoolMixin, PaddedExecutionMixin):
     """Flat instruction-stream executor over a physical buffer file."""
 

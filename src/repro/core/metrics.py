@@ -308,6 +308,17 @@ def bucket_report(stats: Any) -> str:
             f"reused={stats.pool_bytes_reused / 1e6:.1f}MB)"
         )
     evic = f" evictions={stats.evictions}" if stats.evictions else ""
+    # async-compile split: request-visible stall vs worker-absorbed time
+    async_note = ""
+    if getattr(stats, "compile_background_s", 0.0) or getattr(
+        stats, "fallback_calls", 0
+    ):
+        async_note = (
+            f" wait_s={stats.compile_wait_s:.2f}"
+            f" bg_s={stats.compile_background_s:.2f}"
+            f" fallbacks={stats.fallback_calls}"
+            f" (+{stats.fallback_cells_padded} padded cells)"
+        )
     pages = ""
     if getattr(stats, "kv_pages_capacity", 0):
         pages = (
@@ -320,7 +331,7 @@ def bucket_report(stats: Any) -> str:
         f"buckets: compiles={stats.compiles} hits={stats.bucket_hits} "
         f"(hit_rate={stats.hit_rate:.1%}) calls={stats.calls} "
         f"pad_waste={stats.pad_waste:.1%} compile_s={stats.compile_s:.2f}"
-        f"{evic}{pool}{pages} [{per}]"
+        f"{async_note}{evic}{pool}{pages} [{per}]"
     )
 
 

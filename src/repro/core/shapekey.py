@@ -562,6 +562,20 @@ class BucketStats:
     bucket_hits: int = 0
     compiles: int = 0
     compile_s: float = 0.0
+    #: request-visible compile stall: seconds a *dispatching* caller
+    #: spent blocked on a cold-bucket build (inline compile, build-lock
+    #: convoy, or an async future it had to wait out).  Disjoint from
+    #: ``compile_background_s`` — the split the async path is judged by.
+    compile_wait_s: float = 0.0
+    #: compile seconds absorbed by CompileService workers off the
+    #: request path (also folded into ``compile_s`` totals)
+    compile_background_s: float = 0.0
+    #: dispatches served by a warm dominating bucket while the exact
+    #: bucket compiled in the background
+    fallback_calls: int = 0
+    #: extra padded cells those fallback dispatches executed *beyond*
+    #: what the exact bucket would have padded (the fallback premium)
+    fallback_cells_padded: int = 0
     rows_real: int = 0
     rows_padded: int = 0
     per_bucket_calls: Dict[str, int] = field(default_factory=dict)
@@ -594,13 +608,31 @@ class BucketStats:
     def __post_init__(self) -> None:
         self._lock = threading.Lock()
 
-    def note_lookup(self, *, hit: bool, compile_s: float = 0.0) -> None:
+    def note_lookup(
+        self,
+        *,
+        hit: bool,
+        compile_s: float = 0.0,
+        background: bool = False,
+    ) -> None:
         with self._lock:
             if hit:
                 self.bucket_hits += 1
             else:
                 self.compiles += 1
                 self.compile_s += compile_s
+                if background:
+                    self.compile_background_s += compile_s
+
+    def note_wait(self, wait_s: float) -> None:
+        """Fold one request-visible compile stall into the split."""
+        with self._lock:
+            self.compile_wait_s += wait_s
+
+    def note_fallback(self, cells_extra: int) -> None:
+        with self._lock:
+            self.fallback_calls += 1
+            self.fallback_cells_padded += int(cells_extra)
 
     def note_pool(self, *, hit: bool, nbytes: int = 0) -> None:
         with self._lock:

@@ -40,6 +40,7 @@ Usage (CPU-scale):
 from __future__ import annotations
 
 import argparse
+import os
 import threading
 import time
 from collections import deque
@@ -54,6 +55,24 @@ from ..configs import ARCH_IDS, get_config
 from ..core.paging import TRASH_PAGE, build_row_table, pages_for
 from ..models import get_model
 from .steps import make_serve_step, supports_slot_decode
+
+
+def _enable_jax_persistent_cache(cache_dir: str) -> None:
+    """Point XLA's own persistent compilation cache under ``cache_dir``.
+
+    The Forge disk store replays Phase 4a-c analysis + ``jax.export``
+    blobs, but deserialized segment executables (and any segments that
+    fell back to fresh tracing) still lower through XLA — this second
+    tier keeps *those* XLA compiles off the restart path too.
+    Best-effort: jaxlibs without the flags keep serving without it.
+    """
+    try:
+        jax.config.update(
+            "jax_compilation_cache_dir", os.path.join(cache_dir, "xla")
+        )
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    except Exception:
+        pass
 
 
 class BatchedServer:
@@ -108,7 +127,9 @@ class BatchedServer:
                  backend: str = "segment_jit", bucket_policy: str = "pow2",
                  seq_bucket_policy: str = "ladder:16,32,64,128,256",
                  prefill: str = "auto", paged: bool = False,
-                 kv_page_size: int = 16, kv_pages: Optional[int] = None):
+                 kv_page_size: int = 16, kv_pages: Optional[int] = None,
+                 async_compile: bool = False, compile_workers: int = 2,
+                 cache_dir: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)
@@ -166,6 +187,33 @@ class BatchedServer:
                     f"max_len={max_len} must be a multiple of "
                     f"kv_page_size={self.kv_page_size}"
                 )
+        #: async background compilation (DESIGN.md §Async compilation):
+        #: a cold bucket compiles on the worker pool while dispatches
+        #: pad into the nearest warm dominating bucket; a dispatch only
+        #: blocks when no warm bucket can hold it (the first program)
+        self.async_compile = bool(async_compile)
+        self.compile_service = None
+        if self.async_compile:
+            from ..core import CompileService
+            self.compile_service = CompileService(workers=compile_workers)
+        #: persistent on-disk compile tier (--cache-dir): bucket
+        #: programs (Phase 4a-c analysis + jax.export'ed segment
+        #: executables) survive process restarts — a restart replays
+        #: the whole warmed ladder with zero full builds
+        self.cache_dir = cache_dir
+        self.compile_cache = None
+        if cache_dir is not None:
+            from ..core import CompileCache, DiskCacheStore, get_compile_cache
+            store = DiskCacheStore(cache_dir)
+            self.compile_cache = CompileCache(store=store)
+            # the per-block forge bodies (models/_forge.py, cfg.fuse ==
+            # 'forge') compile through the process-global cache — give
+            # it the same disk tier so a restart replays them too and
+            # the whole process runs zero full builds
+            g = get_compile_cache()
+            if g.store is None:
+                g.store = store
+            _enable_jax_persistent_cache(str(cache_dir))
         self._front_lock = threading.Lock()
         #: donating zero-fill: recycles a pooled KV cache's device buffers
         #: in place instead of allocating a fresh bucket-sized pytree
@@ -203,7 +251,8 @@ class BatchedServer:
                 )
             )
             self.cache_axes = cache_axes
-            compiler = ForgeCompiler(PipelineConfig(backend=self.backend))
+            compiler = ForgeCompiler(PipelineConfig(backend=self.backend),
+                                     cache=self.compile_cache)
             # the 2-D prefill front: batch × sequence, one program per
             # grid cell.  Only tokens/logits carry the sequence axis —
             # the KV cache is max_len-resident on both sides.
@@ -229,6 +278,8 @@ class BatchedServer:
                         PolyAxis(in_axes=s_in, out_axes=(1, None),
                                  policy=self.seq_bucket_policy, label="S"),
                     ),
+                    async_compile=self.async_compile,
+                    service=self.compile_service,
                 )
             # decode front: one program per batch bucket.  Slot-capable
             # families compile (params, cache, token, pos(B,), mask(B,))
@@ -245,6 +296,8 @@ class BatchedServer:
                 in_axes=in_axes,
                 out_axes=(0, cache_axes),
                 policy=self.bucket_policy,
+                async_compile=self.async_compile,
+                service=self.compile_service,
             )
             self.prefill_bucketed = prefill_front
 
@@ -280,7 +333,8 @@ class BatchedServer:
             {"k_pages": full["k_pages"], "v_pages": full["v_pages"]}
         )
         self.cache_axes = None  # no batch-polymorphic cache rows exist
-        compiler = ForgeCompiler(PipelineConfig(backend=self.backend))
+        compiler = ForgeCompiler(PipelineConfig(backend=self.backend),
+                                 cache=self.compile_cache)
         prefill_front = None
         if self.prefill_policy != "sequential":
             pstep = make_paged_prefill_step(self.cfg)
@@ -299,18 +353,87 @@ class BatchedServer:
                                  out_axes=(1, None),
                                  policy=self.seq_bucket_policy, label="S"),
                     ),
+                    async_compile=self.async_compile,
+                    service=self.compile_service,
                 )
         self.bucketed = compiler.compile_bucketed(
             make_paged_serve_step(self.cfg),
             in_axes=(None, None, 0, 0, 0, 0),
             out_axes=(0, None),
             policy=self.bucket_policy,
+            async_compile=self.async_compile,
+            service=self.compile_service,
         )
         self.prefill_bucketed = prefill_front
 
     def _bucket_extent(self, B: int) -> int:
+        """Decode bucket extent for a batch size — async-aware.
+
+        Sync mode: the policy's exact bucket (its program compiles
+        inline on the first dispatch).  Async mode: the exact bucket
+        when its program is warm; otherwise the exact key goes to the
+        compile service and the smallest warm bucket that *dominates*
+        B serves the admission padded up — the call only blocks when
+        no warm bucket can hold the batch (the very first program).
+        """
         self._ensure_bucketed()
-        return self.bucketed.policy.bucket(B)
+        exact = self.bucketed.policy.bucket(B)
+        if not self.async_compile:
+            return exact
+        return self._async_extent(exact)
+
+    def _async_extent(self, exact: int) -> int:
+        """Warm-fallback extent selection for the decode front."""
+        front = self.bucketed
+        key = front.key_for_extents(exact)
+        if front.lookup_program(key) is not None:
+            return exact
+        fut = front.submit_key(
+            key,
+            args_fn=(lambda e=exact: self._decode_example_args(e)),
+            foreground=True,
+        )
+        warm = front.nearest_warm(exact)
+        if warm is not None:
+            # fallback premium: the extra padded rows vs the exact rung
+            front.stats.note_fallback(warm.extents[0] - exact)
+            return warm.extents[0]
+        # nothing dominates: the very first program must block
+        t0 = time.perf_counter()
+        fut.result()
+        front.stats.note_wait(time.perf_counter() - t0)
+        return exact
+
+    def _decode_example_args(self, extent: int):
+        """Bucket-shaped example args for a background decode compile.
+
+        Built in the service worker thread (``submit_key`` defers via
+        ``args_fn``) so submission stays cheap; the throwaway cache is
+        only traced/padded, never served.
+        """
+        if self.paged:
+            MP = self.max_pages_per_slot
+            return (self.params, self.page_store,
+                    jnp.zeros((extent, MP), jnp.int32),
+                    jnp.zeros((extent, 1), jnp.int32),
+                    jnp.zeros((extent,), jnp.int32),
+                    jnp.zeros((extent,), bool))
+        cache = self._build_cache(extent)
+        tok = jnp.zeros((extent, 1), jnp.int32)
+        return (self.params, cache) + self._decode_args(extent, tok, 0)
+
+    def _prefill_example_args(self, extent: int, s_ext: int):
+        """Example args for a background (extent × s_ext) cell compile."""
+        if self.paged:
+            MP = self.max_pages_per_slot
+            return (self.params, self.page_store,
+                    jnp.zeros((extent, MP), jnp.int32),
+                    jnp.zeros((extent, s_ext), jnp.int32),
+                    jnp.zeros((extent,), jnp.int32),
+                    jnp.zeros((extent,), bool))
+        cache = self._build_cache(extent)
+        tokens = jnp.zeros((extent, s_ext), jnp.int32)
+        return (self.params, cache) + self._prefill_args(extent, tokens, 0)
 
     def _decode_args(self, extent: int, tok, pos, active: Optional[Any] = None):
         """Bucket-program decode argument tuple for the front signature.
@@ -376,12 +499,18 @@ class BatchedServer:
         tok = jnp.asarray(prompts_b[:, :1], jnp.int32)
         return cache, tok
 
-    def _seq_bucket_extent(self, P: int):
+    def _seq_bucket_extent(self, P: int, extent: Optional[int] = None):
         """Sequence bucket for a prompt length, or None → sequential path.
 
         None when the family has no batched prefill, the policy rejects
         the length (ladder admission bound), or the bucket would not fit
-        the cache (``max_len``).
+        the cache (``max_len``).  Async mode (when the batch ``extent``
+        is known) additionally requires a *warm* grid cell: a cold
+        exact cell goes to the compile service and the smallest warm
+        cell at the same batch extent with ``s' >= s`` serves the
+        prompt edge-padded further right; with no such cell the prompt
+        takes the sequential fill path — the decode program is warm by
+        construction, so nothing stalls either way.
         """
         if self.prefill_bucketed is None:
             return None
@@ -389,7 +518,35 @@ class BatchedServer:
             s = self.prefill_bucketed.axes[1].policy.bucket(P)
         except ValueError:
             return None
-        return s if s <= self.max_len else None
+        if s > self.max_len:
+            return None
+        if not self.async_compile or extent is None:
+            return s
+        return self._async_cell_extent(extent, s)
+
+    def _async_cell_extent(self, extent: int, s_ext: int) -> Optional[int]:
+        """Warm-fallback sequence extent at a fixed batch extent."""
+        front = self.prefill_bucketed
+        key = front.key_for_extents((extent, s_ext))
+        if front.lookup_program(key) is not None:
+            return s_ext
+        front.submit_key(
+            key,
+            args_fn=(lambda e=extent, s=s_ext:
+                     self._prefill_example_args(e, s)),
+            foreground=True,
+        )
+        # the batch extent is pinned by the decode bucket (the cache is
+        # built at it), so only same-extent cells are legal pad targets
+        best = None
+        for k in front.warm_keys():
+            es = k.extents
+            if es[0] == extent and s_ext <= es[1] <= self.max_len:
+                if best is None or es[1] < best:
+                    best = es[1]
+        if best is not None:
+            front.stats.note_fallback(extent * (best - s_ext))
+        return best
 
     def warmup(self, batch_sizes: Sequence[int],
                prompt_lens: Optional[Sequence[int]] = None) -> float:
@@ -406,6 +563,8 @@ class BatchedServer:
         if self.paged:
             return self._warmup_paged(batch_sizes, prompt_lens)
         t0 = time.perf_counter()
+        if self.async_compile:
+            self._submit_warmup(batch_sizes, prompt_lens)
         done = set()
         for B in batch_sizes:
             extent = self._bucket_extent(int(B))
@@ -453,12 +612,58 @@ class BatchedServer:
                     self._release_cache(extent, warm_cache)
         return time.perf_counter() - t0
 
+    def _submit_warmup(self, batch_sizes: Sequence[int],
+                       prompt_lens: Optional[Sequence[int]]) -> None:
+        """Queue every reachable grid cell on the compile service.
+
+        Speculative priority — a foreground request discovering a cold
+        bucket mid-warmup jumps the queue via promotion.  With W
+        workers the warmup wall approaches sum(cells)/W instead of
+        sum(cells); against a populated ``--cache-dir`` the workers
+        replay disk entries, so warmup collapses to the deserialization
+        cost with zero full builds.
+        """
+        front = self.bucketed
+        done = set()
+        for B in batch_sizes:
+            extent = front.policy.bucket(int(B))
+            if extent in done:
+                continue
+            done.add(extent)
+            front.submit_key(
+                front.key_for_extents(extent),
+                args_fn=(lambda e=extent: self._decode_example_args(e)),
+                foreground=False,
+            )
+        pf = self.prefill_bucketed
+        if prompt_lens and pf is not None:
+            cells = set()
+            for B in batch_sizes:
+                extent = front.policy.bucket(int(B))
+                for P in prompt_lens:
+                    try:
+                        s_ext = pf.axes[1].policy.bucket(int(P))
+                    except ValueError:
+                        continue
+                    if s_ext > self.max_len or (extent, s_ext) in cells:
+                        continue
+                    cells.add((extent, s_ext))
+                    pf.submit_key(
+                        pf.key_for_extents((extent, s_ext)),
+                        args_fn=(lambda e=extent, s=s_ext:
+                                 self._prefill_example_args(e, s)),
+                        foreground=False,
+                    )
+        self.compile_service.wait_idle()
+
     def _warmup_paged(self, batch_sizes: Sequence[int],
                       prompt_lens: Optional[Sequence[int]]) -> float:
         """Paged-front warmup: all-false slot masks + trash-only page
         tables route every throwaway write to the trash page, so the
         warmed store stays all-zeros and the pool state is untouched."""
         t0 = time.perf_counter()
+        if self.async_compile:
+            self._submit_warmup(batch_sizes, prompt_lens)
         MP = self.max_pages_per_slot
         store = self.page_store
         done = set()
@@ -520,10 +725,13 @@ class BatchedServer:
 
         if self.mode == "forge":
             self._ensure_bucketed()
-            s_ext = self._seq_bucket_extent(P)
+            # batch extent first: in async mode the sequence-cell probe
+            # needs to know which batch rung the group will run on
+            extent = self._bucket_extent(B)
+            s_ext = self._seq_bucket_extent(P, extent=extent)
             if s_ext is not None:
-                return self._prefill_batched(prompts, s_ext)
-            return self._prefill_sequential(prompts)
+                return self._prefill_batched(prompts, s_ext, extent)
+            return self._prefill_sequential(prompts, extent)
         self.last_prefill_mode = "sequential"
         cache = self._build_cache(B)
         next_tok = None
@@ -556,7 +764,8 @@ class BatchedServer:
 
         return step
 
-    def _prefill_batched(self, prompts: np.ndarray, s_ext: int):
+    def _prefill_batched(self, prompts: np.ndarray, s_ext: int,
+                         extent: Optional[int] = None):
         """Whole-prompt prefill on the (batch × sequence) grid cell.
 
         The prompt block is edge-padded on both axes, the cell's
@@ -566,7 +775,8 @@ class BatchedServer:
         from the last *real* prompt column's logits.
         """
         B, P = prompts.shape
-        extent = self._bucket_extent(B)
+        if extent is None:
+            extent = self._bucket_extent(B)
         prompts_b = np.pad(prompts, ((0, extent - B), (0, s_ext - P)),
                            mode="edge")
         cache = self._acquire_cache(extent)
@@ -588,11 +798,13 @@ class BatchedServer:
         self.last_prefill_mode = "batched"
         return cache, tok, P, self._group_step(mod, extent), key
 
-    def _prefill_sequential(self, prompts: np.ndarray):
+    def _prefill_sequential(self, prompts: np.ndarray,
+                            extent: Optional[int] = None):
         """Token-at-a-time prefill through the decode bucket program
         (recurrent families, or prompts outside the sequence ladder)."""
         B, P = prompts.shape
-        extent = self._bucket_extent(B)
+        if extent is None:
+            extent = self._bucket_extent(B)
         # admit the group: edge-pad the prompt rows up to the bucket
         prompts_b = np.pad(prompts, ((0, extent - B), (0, 0)), mode="edge")
         cache, tok = self._bucket_args(prompts_b)
@@ -770,6 +982,9 @@ class SlotScheduler:
             #: admissions bounced back to the queue because the page
             #: pool was exhausted even after LRU tree reclaim (paged)
             "deferrals": 0,
+            #: ticks served on a warm rung while the exact rung
+            #: compiled in the background (--async-compile)
+            "warm_fallbacks": 0,
         }
 
     # -- warmup -----------------------------------------------------------
@@ -784,6 +999,48 @@ class SlotScheduler:
         return self.server.warmup(self.rungs(), prompt_lens=prompt_lens)
 
     # -- bucket resize ----------------------------------------------------
+
+    def _target_rung(self, exact: int) -> int:
+        """Rung selection at a scheduling boundary — async-aware.
+
+        Sync mode: the exact rung (``resolve_program`` compiles inline
+        at the resize boundary, stalling the tick).  Async mode: a cold
+        exact rung compiles in the background while this tick proceeds
+        on the smallest warm rung that dominates it; once the exact
+        program lands a later boundary re-selects it through the warm
+        path (the ordinary resize machinery does the switch).  When no
+        warm rung dominates (growth past the warm top) the scheduler
+        serves what fits in the *largest* warm rung — excess requests
+        stay queued until the background compile lands — and only the
+        very first rung, with nothing warm at all, blocks.
+        """
+        srv = self.server
+        if not srv.async_compile:
+            return exact
+        front = srv.bucketed
+        if front.lookup_program(front.key_for_extents(exact)) is not None:
+            return exact
+        fut = front.submit_key(
+            front.key_for_extents(exact),
+            args_fn=(lambda e=exact: srv._decode_example_args(e)),
+            foreground=True,
+        )
+        warm = [k.extents[0] for k in front.warm_keys()]
+        dominating = [w for w in warm if w >= exact]
+        if dominating:
+            target = min(dominating)
+            front.stats.note_fallback(target - exact)
+        elif warm:
+            # capacity-capped: no pad premium, the rung is *smaller*
+            target = max(warm)
+            front.stats.note_fallback(0)
+        else:
+            t0 = time.perf_counter()
+            fut.result()
+            front.stats.note_wait(time.perf_counter() - t0)
+            return exact
+        self.metrics["warm_fallbacks"] += 1
+        return target
 
     def _gather_rows(self, old_cache, new_cache, src_rows: List[int]):
         """Move the active slots' cache rows into the new bucket's cache.
@@ -903,6 +1160,10 @@ class SlotScheduler:
         #: token columns not yet copied to host (steady-state ticks defer
         #: the D2H sync; harvested at the next boundary — see _harvest)
         pending: List[Any] = []
+        #: per-tick host wall seconds (admission + resize + dispatch);
+        #: inline compile stalls at rung crossings land here, which is
+        #: what the async-vs-inline p99 comparison measures
+        tick_s: List[float] = []
         t0 = time.perf_counter()
 
         def active_count() -> int:
@@ -959,8 +1220,9 @@ class SlotScheduler:
             # ---- pad-waste-aware admission + rung resize ----------------
             active = active_count()
             want = min(active + len(queue), self.max_slots)
+            t_tick = time.perf_counter()
             if want > 0:
-                target = policy.bucket(want)
+                target = self._target_rung(policy.bucket(want))
                 if target != extent or (queue and any(s is None
                                                       for s in slots)):
                     # resize/admission is a boundary: sync the pending
@@ -1142,6 +1404,7 @@ class SlotScheduler:
                     dev_args = None
                 else:
                     dev_args = (out_tok, pos_dev + 1, mask_dev)
+            tick_s.append(time.perf_counter() - t_tick)
 
         wall = time.perf_counter() - t0
         if paged:
@@ -1157,6 +1420,7 @@ class SlotScheduler:
         m = self.metrics
         cap = max(m["capacity_row_steps"], 1)
         real_tokens = sum(len(r["tokens"]) for r in results.values())
+        tick_ms = np.asarray(tick_s) * 1e3
         out = {
             "results": results,
             "wall_s": wall,
@@ -1165,6 +1429,11 @@ class SlotScheduler:
             "occupancy": m["occupied_row_steps"] / cap,
             "pad_decode_fraction": 1.0 - m["occupied_row_steps"] / cap,
             "compiles": compiles,  # 0 after warmup covering the rungs
+            # tick-latency tail: inline compile stalls at cold rung
+            # crossings dominate p99/max; --async-compile absorbs them
+            "tick_ms_p50": float(np.percentile(tick_ms, 50)) if len(tick_ms) else 0.0,
+            "tick_ms_p99": float(np.percentile(tick_ms, 99)) if len(tick_ms) else 0.0,
+            "tick_ms_max": float(tick_ms.max()) if len(tick_ms) else 0.0,
             **m,
         }
         if paged:
@@ -1227,7 +1496,7 @@ class SlotScheduler:
             # restart from the init state, not the previous occupant's
             cache = self._reset_rows(cache, admitted, extent)
         Ps = [len(slots[i].req.prompt) for i in admitted]
-        s_ext = srv._seq_bucket_extent(max(Ps))
+        s_ext = srv._seq_bucket_extent(max(Ps), extent=extent)
         if s_ext is None:
             # no grid cell covers the prompt (recurrent families, ladder
             # overflow): the slots keep their fill buffers and consume
@@ -1297,7 +1566,7 @@ class SlotScheduler:
         # prefix reuse is only sound on the grid path: matched pages
         # skip prefill, but a fill-path (decode-replay) admission must
         # write every position itself
-        grid_ok = srv._seq_bucket_extent(max(Ps)) is not None
+        grid_ok = srv._seq_bucket_extent(max(Ps), extent=extent) is not None
 
         live: List[int] = []
         deferred: List[Request] = []
@@ -1347,7 +1616,7 @@ class SlotScheduler:
         Ls = [len(slots[i].req.prompt) - slots[i].skip for i in live]
         # suffixes never exceed the full prompts, so the cell that
         # admitted max(Ps) covers max(Ls) too
-        s_ext = srv._seq_bucket_extent(max(Ls))
+        s_ext = srv._seq_bucket_extent(max(Ls), extent=extent)
         tokens = np.zeros((extent, s_ext), np.int32)
         mask = np.zeros((extent,), bool)
         pos_np = np.zeros((extent,), np.int32)
@@ -1403,7 +1672,48 @@ class SlotScheduler:
             f"swaps={m['swaps']} resizes={m['resizes']} "
             f"prefills={m['prefill_dispatches']}"
             + (f" deferrals={m['deferrals']}" if self.paged else "")
+            + (f" warm_fallbacks={m['warm_fallbacks']}"
+               if self.server.async_compile else "")
         )
+
+
+def _compile_epilogue(server: BatchedServer, args) -> int:
+    """CLI transparency for the async/persistent compile tiers, plus
+    the restart-replay gate (``--assert-no-builds``)."""
+    rc = 0
+    if server.compile_cache is not None:
+        from repro.core import get_compile_cache
+
+        cs = server.compile_cache.stats
+        ds = server.compile_cache.store.stats
+        # bucket-front builds + the per-block forge bodies that compile
+        # through the process-global cache (same disk tier, attached in
+        # BatchedServer.__init__) — together: every full Phase 1-4 run
+        builds = cs.misses + get_compile_cache().stats.misses
+        print(f"[serve] disk cache: builds={builds} "
+              f"disk_hits={cs.disk_hits + get_compile_cache().stats.disk_hits} "
+              f"mem_hits={cs.hits} writes={ds.writes} "
+              f"corrupt={ds.corrupt} bytes_written={ds.bytes_written}")
+        if args.assert_no_builds and builds > 0:
+            print(f"[serve] ASSERT FAILED: {builds} full builds ran "
+                  f"against --cache-dir={args.cache_dir} (expected a "
+                  f"pure disk replay)")
+            rc = 1
+    if server.compile_service is not None:
+        ss = server.compile_service.stats.snapshot()
+        extra = ""
+        if server.bucketed is not None:
+            bs = server.bucketed.stats
+            extra = (f" wait_s={bs.compile_wait_s:.2f} "
+                     f"bg_s={bs.compile_background_s:.2f} "
+                     f"fallbacks={bs.fallback_calls}"
+                     f"(+{bs.fallback_cells_padded} cells)")
+        print(f"[serve] compile service: submitted={ss['submitted']} "
+              f"completed={ss['completed']} dedup={ss['dedup_hits']} "
+              f"promoted={ss['promoted']} failed={ss['failed']} "
+              f"busy_s={ss['busy_s']:.2f}" + extra)
+        server.compile_service.shutdown()
+    return rc
 
 
 def main(argv=None) -> int:
@@ -1459,6 +1769,24 @@ def main(argv=None) -> int:
                          "page gather + unfused sdpa (bitwise vs the "
                          "contiguous cache), pallas = the paged-"
                          "attention decode kernel (interpreted off-TPU)")
+    ap.add_argument("--async-compile", action="store_true",
+                    help="compile cold buckets on a background worker "
+                         "pool; dispatches pad into the nearest warm "
+                         "dominating bucket instead of blocking "
+                         "(--mode forge)")
+    ap.add_argument("--compile-workers", type=int, default=2,
+                    help="background compile worker threads "
+                         "(--async-compile)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent on-disk compile cache: bucket "
+                         "programs (Phase 4a-c analysis + serialized "
+                         "segment executables) replay across process "
+                         "restarts (--mode forge)")
+    ap.add_argument("--assert-no-builds", action="store_true",
+                    help="exit nonzero if any full Phase 1-4 build ran "
+                         "(compile-cache miss count > 0) — the CI "
+                         "restart-replay gate against a populated "
+                         "--cache-dir")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -1467,6 +1795,12 @@ def main(argv=None) -> int:
                  "add --continuous N")
     if args.paged and args.mode != "forge":
         ap.error("--paged needs --mode forge")
+    if (args.async_compile or args.cache_dir) and args.mode != "forge":
+        ap.error("--async-compile / --cache-dir need --mode forge "
+                 "(they act on the bucketed fronts)")
+    if args.assert_no_builds and not args.cache_dir:
+        ap.error("--assert-no-builds needs --cache-dir (it gates the "
+                 "restart-replay path)")
 
     sweep = ([int(x) for x in args.sweep.split(",")] if args.sweep
              else [args.batch])
@@ -1502,7 +1836,10 @@ def main(argv=None) -> int:
                            seq_bucket_policy=args.seq_bucket_policy,
                            prefill=args.prefill, paged=args.paged,
                            kv_page_size=args.kv_page_size,
-                           kv_pages=args.kv_pages or None)
+                           kv_pages=args.kv_pages or None,
+                           async_compile=args.async_compile,
+                           compile_workers=args.compile_workers,
+                           cache_dir=args.cache_dir)
 
     if args.continuous:
         if args.mode != "forge":
@@ -1541,7 +1878,7 @@ def main(argv=None) -> int:
                   f"reclaimed={res['pages_reclaimed']}")
             from repro.core.metrics import bucket_report
             print(f"[serve] decode {bucket_report(server.bucketed.stats)}")
-        return 0
+        return _compile_epilogue(server, args)
 
     warmup_s = server.warmup(sweep, prompt_lens=prompt_sweep)
 
@@ -1586,7 +1923,7 @@ def main(argv=None) -> int:
               f"file_pool={rs.file_pool_hits}h/{rs.file_pool_misses}m "
               f"cache hit_rate={cs.hit_rate:.1%} "
               f"({cs.hits}h/{cs.misses}m)")
-    return 0
+    return _compile_epilogue(server, args)
 
 
 if __name__ == "__main__":
