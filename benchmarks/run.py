@@ -23,6 +23,8 @@ Prints ``name,us_per_call,derived`` CSV rows (paper-table mapping):
                       prefix-hit prefill skip, swap-in cost, fidelity
     async_compile     inline vs background compilation: tick p99,
                       warm-fallback counts, restart replay from disk
+    fault_recovery    seeded fault injection: faulted vs clean tok/s,
+                      typed request outcomes, leaked pages/slots == 0
     variance          Table 19
     roofline_report   §Roofline (reads the dry-run results JSON)
 
@@ -58,6 +60,7 @@ MODULES = (
     "continuous_batching",
     "paged_kv",
     "async_compile",
+    "fault_recovery",
     "variance",
     "roofline_report",
 )

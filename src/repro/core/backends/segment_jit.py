@@ -36,6 +36,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 import jax
 import numpy as np
 
+from repro.runtime import chaos
+
 from ..bufalloc import allocate, segment_donations
 from ..executor import (
     AnalyzedProgram,
@@ -363,6 +365,10 @@ class SegmentExecutor(BufferFilePoolMixin, PaddedExecutionMixin):
                 file[b] = v
             executed = 0
             for fn, fn_plain, in_slots, free_slots, out_slots in self._plans:
+                # chaos: fires BEFORE the segment runs, so no donation has
+                # consumed this call's buffers yet; program inputs are
+                # never donated, so the caller may retry the whole call
+                chaos.maybe_fault(chaos.SITE_DISPATCH)
                 f = fn if donate_ok else fn_plain
                 out_vals = f(*[file[b] for b in in_slots])
                 executed += 1

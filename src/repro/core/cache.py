@@ -272,8 +272,12 @@ class DiskCacheStore:
         return os.path.join(self.root, digest[:2], f"{digest}.forgec")
 
     def load_entry(self, key: str) -> Optional[Dict[str, Any]]:
+        from repro.runtime import chaos
+
         path = self.path_for(key)
         try:
+            if chaos.should_fault(chaos.SITE_DISK_READ):
+                raise OSError("injected disk read error")
             with open(path, "rb") as f:
                 blob = f.read()
         except FileNotFoundError:
@@ -282,6 +286,9 @@ class DiskCacheStore:
         except OSError:
             self.stats.misses += 1
             return None
+        if chaos.should_fault(chaos.SITE_DISK_CORRUPT):
+            # bit-rot in flight: the checksum below must catch it
+            blob = blob[: max(len(_DISK_MAGIC), len(blob) // 2)]
         try:
             if not blob.startswith(_DISK_MAGIC):
                 raise ValueError("bad magic")
@@ -306,8 +313,12 @@ class DiskCacheStore:
         return entry
 
     def store_entry(self, key: str, entry: Dict[str, Any]) -> bool:
+        from repro.runtime import chaos
+
         path = self.path_for(key)
         try:
+            if chaos.should_fault(chaos.SITE_DISK_WRITE):
+                raise OSError("injected disk write error")
             payload = pickle.dumps(
                 {"key": key, "salt": self.salt, "entry": entry},
                 protocol=pickle.HIGHEST_PROTOCOL,

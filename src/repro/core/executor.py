@@ -34,6 +34,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.runtime import chaos
+
 from .bufalloc import AllocationResult, allocate_from_liveness
 from .liveness import LivenessInfo, analyze_liveness
 from .lowering import RGIRProgram, lower_to_rgir
@@ -395,6 +397,12 @@ class CompiledExecutor(BufferFilePoolMixin, PaddedExecutionMixin):
                 f"executor expects {len(self._input_bufs)} inputs, "
                 f"got {len(flat_inputs)}"
             )
+        # injection granularity is one *program* execution (mirrors the
+        # per-segment hook in segment_jit), not one op — per-op rates
+        # would compound over hundreds of ops; fires before any register
+        # write, and the finally releases the pooled file, so the caller
+        # may retry the same dispatch
+        chaos.maybe_fault(chaos.SITE_DISPATCH)
         file, pool_hit = self._acquire_file()
         try:
             for b, v in zip(self._input_bufs, flat_inputs):

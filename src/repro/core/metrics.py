@@ -327,11 +327,22 @@ def bucket_report(stats: Any) -> str:
             f" prefix_hits={stats.kv_prefix_hits},"
             f" tokens_reused={stats.kv_tokens_reused})"
         )
+    faults = ""
+    if (getattr(stats, "faults_injected", 0)
+            or getattr(stats, "requests_failed", 0)
+            or getattr(stats, "ticks_degraded", 0)
+            or getattr(stats, "dispatch_retries", 0)):
+        faults = (
+            f" faults={stats.faults_injected}"
+            f" req_failed={stats.requests_failed}"
+            f" degraded_ticks={stats.ticks_degraded}"
+            f" retries={stats.dispatch_retries}"
+        )
     return (
         f"buckets: compiles={stats.compiles} hits={stats.bucket_hits} "
         f"(hit_rate={stats.hit_rate:.1%}) calls={stats.calls} "
         f"pad_waste={stats.pad_waste:.1%} compile_s={stats.compile_s:.2f}"
-        f"{async_note}{evic}{pool}{pages} [{per}]"
+        f"{async_note}{evic}{pool}{pages}{faults} [{per}]"
     )
 
 

@@ -144,8 +144,18 @@ class PagePool:
     def alloc(self, n: int) -> List[int]:
         """Allocate ``n`` fresh pages (refcount 1 each) or raise
         MemoryError without allocating any."""
+        from repro.runtime import chaos
+
         if n < 0:
             raise ValueError(f"alloc({n})")
+        if chaos.should_fault(chaos.SITE_PAGE_ALLOC):
+            # injected exhaustion: raised before any state is touched, so
+            # pool accounting stays exact and callers hit their organic
+            # defer/reclaim path
+            raise MemoryError(
+                f"injected page-pool exhaustion: want {n}, "
+                f"free {len(self._free)} of {self.capacity}"
+            )
         if n > len(self._free):
             raise MemoryError(
                 f"page pool exhausted: want {n}, free {len(self._free)} "

@@ -604,9 +604,36 @@ class BucketStats:
     kv_prefix_hits: int = 0
     #: prompt tokens whose prefill was skipped via shared-prefix pages
     kv_tokens_reused: int = 0
+    # -- fault-tolerance counters (runtime.chaos + the serve scheduler) ----
+    #: faults the installed FaultPlan fired across all sites
+    faults_injected: int = 0
+    #: requests that terminated with a typed error outcome
+    requests_failed: int = 0
+    #: scheduler ticks served in degraded mode (shed admissions,
+    #: warm-rungs-only) after consecutive dispatch failures
+    ticks_degraded: int = 0
+    #: tick dispatches re-run after a contained dispatch fault
+    dispatch_retries: int = 0
 
     def __post_init__(self) -> None:
         self._lock = threading.Lock()
+
+    def note_fault(
+        self,
+        *,
+        injected: int = 0,
+        request_failed: bool = False,
+        tick_degraded: bool = False,
+        retries: int = 0,
+    ) -> None:
+        """Fold fault-tolerance events (scheduler-side)."""
+        with self._lock:
+            self.faults_injected += injected
+            if request_failed:
+                self.requests_failed += 1
+            if tick_degraded:
+                self.ticks_degraded += 1
+            self.dispatch_retries += retries
 
     def note_lookup(
         self,

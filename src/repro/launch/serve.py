@@ -54,7 +54,14 @@ import numpy as np
 from ..configs import ARCH_IDS, get_config
 from ..core.paging import TRASH_PAGE, build_row_table, pages_for
 from ..models import get_model
-from .steps import make_serve_step, supports_slot_decode
+from ..runtime import chaos
+from ..runtime.chaos import RequestError, SystemError_
+from .steps import (
+    POISON_TOKEN,
+    guarded_argmax,
+    make_serve_step,
+    supports_slot_decode,
+)
 
 
 def _enable_jax_persistent_cache(cache_dir: str) -> None:
@@ -885,8 +892,28 @@ class BatchedServer:
         independently and swaps queued requests into finished slots
         mid-generation, converting both kinds of pad-decode into real
         tokens.
+
+        Error isolation: a group that fails — malformed prompt array, a
+        contained-but-unrecovered dispatch fault — completes with a
+        typed error outcome (``{"error", "error_type"}``) instead of
+        killing the stream; the remaining groups are still served.
         """
-        return [self.generate(g, n_new) for g in groups]
+        out: List[Dict[str, Any]] = []
+        for g in groups:
+            try:
+                out.append(self.generate(g, n_new))
+            except Exception as e:  # noqa: BLE001 — isolation boundary
+                kind = ("RequestError" if isinstance(e, (RequestError,
+                                                         ValueError,
+                                                         TypeError))
+                        else "SystemError")
+                out.append({
+                    "tokens": np.zeros((0, 0), np.int32),
+                    "error": str(e),
+                    "error_type": kind,
+                })
+                self.bucketed.stats.note_fault(request_failed=True)
+        return out
 
 
 # --------------------------------------------------------------------------
@@ -923,6 +950,9 @@ class _Slot:
     pages: List[int] = field(default_factory=list)
     #: prompt tokens whose prefill was skipped via shared-prefix pages
     skip: int = 0
+    #: the row emitted POISON_TOKEN (non-finite logits tripwire) — the
+    #: request is quarantined with a typed error at the next boundary
+    poisoned: bool = False
 
 
 class SlotScheduler:
@@ -947,7 +977,11 @@ class SlotScheduler:
     grid, so steady-state scheduling runs zero Phase 1-4 compiles.
     """
 
-    def __init__(self, server: BatchedServer, max_slots: int = 16):
+    def __init__(self, server: BatchedServer, max_slots: int = 16, *,
+                 max_dispatch_retries: int = 2,
+                 degraded_cooldown: int = 8,
+                 max_consec_failures: int = 6,
+                 tick_deadline_s: Optional[float] = None):
         if server.mode != "forge":
             raise ValueError("SlotScheduler needs mode='forge' "
                              "(bucketed slot-signature fronts)")
@@ -967,6 +1001,20 @@ class SlotScheduler:
         #: one-row init_cache template for stateful-decode swap-ins
         #: (built lazily; KV-only families never need it)
         self._init_row = None
+        # -- fault-tolerance knobs (DESIGN.md §Fault tolerance) ------------
+        #: re-dispatches of one tick before the failure escalates
+        self.max_dispatch_retries = int(max_dispatch_retries)
+        #: ticks of degraded mode (shed admissions, warm rungs only)
+        #: entered after a tick failure or a watchdog trip
+        self.degraded_cooldown = int(degraded_cooldown)
+        #: consecutive failed ticks before the run aborts — every live
+        #: request then terminates with a typed SystemError outcome
+        self.max_consec_failures = int(max_consec_failures)
+        #: per-tick wall deadline; a tick running past it trips the
+        #: watchdog and enters degraded mode (None = off)
+        self.tick_deadline_s = tick_deadline_s
+        #: degraded-mode flag read by _target_rung (pin to warm rungs)
+        self._degraded = False
         self.metrics: Dict[str, Any] = {}
         self._reset_metrics()
 
@@ -985,6 +1033,30 @@ class SlotScheduler:
             #: ticks served on a warm rung while the exact rung
             #: compiled in the background (--async-compile)
             "warm_fallbacks": 0,
+            # -- fault tolerance ------------------------------------------
+            #: requests rejected at validation with a typed RequestError
+            "requests_rejected": 0,
+            #: requests that terminated with any typed error outcome
+            "requests_failed": 0,
+            #: slot rows quarantined by the non-finite logits tripwire
+            "rows_quarantined": 0,
+            #: tick dispatches re-run after a contained dispatch fault
+            "dispatch_retries": 0,
+            #: ticks whose body failed past the dispatch-retry budget
+            "tick_failures": 0,
+            #: ticks served in degraded mode (admissions shed, rung
+            #: selection pinned to warm programs)
+            "ticks_degraded": 0,
+            #: admission prefills that failed and were contained (slots
+            #: fell back to fill-path replay or were requeued)
+            "admission_failures": 0,
+            #: ticks that ran past tick_deadline_s (degraded mode entered)
+            "watchdog_trips": 0,
+            #: faults the installed FaultPlan fired during this run
+            "faults_injected": 0,
+            #: True when the run hit max_consec_failures and failed all
+            #: remaining requests with typed SystemError outcomes
+            "aborted": False,
         }
 
     # -- warmup -----------------------------------------------------------
@@ -1015,9 +1087,21 @@ class SlotScheduler:
         very first rung, with nothing warm at all, blocks.
         """
         srv = self.server
+        front = srv.bucketed
+        if self._degraded:
+            # degraded mode pins to warm rungs: no cold compile — inline
+            # OR background — may start while the loop is recovering
+            if front.lookup_program(front.key_for_extents(exact)) is not None:
+                return exact
+            warm = [k.extents[0] for k in front.warm_keys()]
+            dominating = [w for w in warm if w >= exact]
+            if dominating:
+                return min(dominating)
+            if warm:
+                return max(warm)
+            # nothing warm at all: no choice but the normal path
         if not srv.async_compile:
             return exact
-        front = srv.bucketed
         if front.lookup_program(front.key_for_extents(exact)) is not None:
             return exact
         fut = front.submit_key(
@@ -1036,7 +1120,9 @@ class SlotScheduler:
             front.stats.note_fallback(0)
         else:
             t0 = time.perf_counter()
-            fut.result()
+            # reap-aware wait: a dead or hung compile worker resolves
+            # (or requeues) the future instead of deadlocking the tick
+            srv.compile_service.result(fut)
             front.stats.note_wait(time.perf_counter() - t0)
             return exact
         self.metrics["warm_fallbacks"] += 1
@@ -1099,6 +1185,31 @@ class SlotScheduler:
             out.append(jnp.where(m, ini, leaf))  # ini broadcasts (1 @ ax)
         return jax.tree_util.tree_unflatten(tree, out)
 
+    # -- request validation ------------------------------------------------
+
+    def _validate(self, r: Request) -> Optional[str]:
+        """Admission-time validation; a non-None return rejects the
+        request with a typed RequestError outcome instead of killing the
+        whole workload."""
+        srv = self.server
+        try:
+            plen = len(r.prompt)
+        except TypeError:
+            return "prompt must be an array of token ids"
+        if plen < 1:
+            return "prompt must be non-empty"
+        if r.max_new < 1:
+            return "max_new must be >= 1"
+        if plen + r.max_new > srv.max_len:
+            return (f"prompt {plen} + budget {r.max_new} exceeds "
+                    f"max_len={srv.max_len}")
+        if self.paged:
+            need = pages_for(plen + r.max_new, srv.page_pool.page_size)
+            if need > srv.page_pool.capacity:
+                return (f"needs {need} KV pages, pool capacity is "
+                        f"{srv.page_pool.capacity}")
+        return None
+
     # -- the scheduling loop ----------------------------------------------
 
     def run(self, requests: Sequence[Request]) -> Dict[str, Any]:
@@ -1117,24 +1228,35 @@ class SlotScheduler:
             srv.prefill_bucketed.stats.compiles if srv.prefill_bucketed else 0
         )
 
+        results: Dict[int, Dict[str, Any]] = {}
+        plan = chaos.current_plan()
+        faults0 = plan.faults_injected if plan is not None else 0
+
+        def fail_request(req: Request, why: str,
+                         kind: str = "RequestError") -> None:
+            """Terminate an un-admitted request with a typed outcome."""
+            results[req.rid] = {
+                "tokens": np.zeros((0,), np.int32),
+                "admitted_tick": -1,
+                "finished_tick": -1,
+                "swapped_in": False,
+                "error": why,
+                "error_type": kind,
+            }
+            stats.note_fault(request_failed=True)
+            self.metrics["requests_failed"] += 1
+
+        # per-request validation: an invalid request completes with a
+        # typed RequestError outcome; the rest of the workload is served
+        valid: List[Request] = []
         for r in requests:
-            if len(r.prompt) < 1:
-                raise ValueError(f"request {r.rid}: prompt must be non-empty")
-            if len(r.prompt) + r.max_new > srv.max_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt {len(r.prompt)} + budget "
-                    f"{r.max_new} exceeds max_len={srv.max_len}"
-                )
-            if r.max_new < 1:
-                raise ValueError(f"request {r.rid}: max_new must be >= 1")
-            if self.paged:
-                need = pages_for(len(r.prompt) + r.max_new,
-                                 srv.page_pool.page_size)
-                if need > srv.page_pool.capacity:
-                    raise ValueError(
-                        f"request {r.rid}: needs {need} pages, pool "
-                        f"capacity is {srv.page_pool.capacity}"
-                    )
+            why = self._validate(r)
+            if why is not None:
+                fail_request(r, why)
+                self.metrics["requests_rejected"] += 1
+            else:
+                valid.append(r)
+        requests = valid
 
         paged = self.paged
         pool = srv.page_pool if paged else None
@@ -1152,7 +1274,6 @@ class SlotScheduler:
         mod = key = None
         cur_tok = np.zeros((0, 1), np.int32)
         cur_pos = np.zeros((0,), np.int32)
-        results: Dict[int, Dict[str, Any]] = {}
         tick = 0
         #: device-resident (tok, pos, mask) for the steady-state fast
         #: path; None whenever host state changed since the last dispatch
@@ -1180,13 +1301,20 @@ class SlotScheduler:
             mod, key, _ = srv.bucketed.program_for(params, cache, *args)
             srv.forge_module = mod
 
-        def retire(i: int, s: _Slot) -> None:
-            results[s.req.rid] = {
+        def retire(i: int, s: _Slot, error: Optional[str] = None,
+                   error_type: str = "RequestError") -> None:
+            entry = {
                 "tokens": np.asarray(s.tokens, np.int32),
                 "admitted_tick": s.admitted_tick,
                 "finished_tick": tick,
                 "swapped_in": s.swapped_in,
             }
+            if error is not None:
+                entry["error"] = error
+                entry["error_type"] = error_type
+                stats.note_fault(request_failed=True)
+                self.metrics["requests_failed"] += 1
+            results[s.req.rid] = entry
             slots[i] = None
             if paged and s.pages:
                 # the slot's refs drop; pages shared through the prefix
@@ -1195,13 +1323,26 @@ class SlotScheduler:
                 s.pages = []
                 pt_host[i, :] = TRASH_PAGE
 
+        def quarantine(i: int, s: _Slot) -> None:
+            """Non-finite logits tripwire fired for this row: complete
+            the request with a typed error; its emitted tokens stop at
+            the last finite one.  Every other slot's cache rows and
+            token stream are untouched (slot_gate write-inertness)."""
+            self.metrics["rows_quarantined"] += 1
+            retire(i, s, error="non-finite logits in decode row "
+                               "(quarantined)")
+
         def harvest() -> None:
             """Copy the deferred token columns to host, in tick order.
 
             The active set cannot have changed while ticks were pending
             (any change is a boundary that harvests first), so every
-            pending column distributes to the same rows.
+            pending column distributes to the same rows.  A row that
+            emitted POISON_TOKEN (non-finite logits) stops accumulating
+            at the poison point and is quarantined; the other rows'
+            tokens are unaffected.
             """
+            nonlocal dev_args
             if not pending:
                 return
             rows = [i for i, s in enumerate(slots) if s is not None]
@@ -1209,11 +1350,42 @@ class SlotScheduler:
                 arr = np.asarray(out)
                 for i in rows:
                     s = slots[i]
-                    s.cur_tok = int(arr[i, 0])
+                    if s.poisoned:
+                        continue  # post-poison columns are garbage
+                    t = int(arr[i, 0])
+                    if t == POISON_TOKEN:
+                        s.poisoned = True
+                        continue
+                    s.cur_tok = t
                     s.tokens.append(s.cur_tok)
             pending.clear()
+            for i in rows:
+                s = slots[i]
+                if s is not None and s.poisoned:
+                    quarantine(i, s)
+                    dev_args = None  # active set shrank: rebuild mask
 
-        while pendreq or queue or any(s is not None for s in slots):
+        def abort_run(err: BaseException) -> None:
+            """Containment exhausted: every live request terminates with
+            a typed SystemError outcome — the loop returns, never
+            crashes, and slot/page accounting is left clean."""
+            why = (f"serving loop aborted after "
+                   f"{self.max_consec_failures} consecutive tick "
+                   f"failures: {err}")
+            for i, s in enumerate(slots):
+                if s is not None:
+                    retire(i, s, error=why, error_type="SystemError")
+            for req in list(queue) + list(pendreq):
+                fail_request(req, why, kind="SystemError")
+            queue.clear()
+            pendreq.clear()
+
+        def tick_once() -> Optional[str]:
+            """One scheduler tick: arrivals, admission/resize, one decode
+            dispatch + bookkeeping.  Returns a loop directive
+            ('continue' | 'break' | 'deadline') or None."""
+            nonlocal slots, cur_tok, cur_pos, cache, extent, mod, key
+            nonlocal dev_args, pt_dev, pt_host, tick
             while pendreq and pendreq[0].arrival <= tick:
                 queue.append(pendreq.popleft())
 
@@ -1221,7 +1393,10 @@ class SlotScheduler:
             active = active_count()
             want = min(active + len(queue), self.max_slots)
             t_tick = time.perf_counter()
-            if want > 0:
+            # degraded mode sheds admissions (queued requests wait out
+            # the cooldown) unless nothing at all is active — then an
+            # admission is the only way to make progress
+            if want > 0 and not (self._degraded and active > 0):
                 target = self._target_rung(policy.bucket(want))
                 if target != extent or (queue and any(s is None
                                                       for s in slots)):
@@ -1268,6 +1443,10 @@ class SlotScheduler:
                     dev_args = None
                     if paged:
                         pt_dev = jnp.asarray(pt_host)
+                    # on a resolve failure (injected build fault, poisoned
+                    # key) mod stays None and the dispatch path retries
+                    # the resolve next tick — never dispatches stale
+                    mod = None
                     resolve_program()
                 # pack queued requests into every free slot (13+3 → B16)
                 mid_generation = active > 0
@@ -1300,11 +1479,15 @@ class SlotScheduler:
                                             cur_tok, cur_pos)
                     dev_args = None
                     # degenerate 1-token budgets finish at admission
-                    # (a paged deferral leaves slots[i] None — skip it)
+                    # (a paged deferral leaves slots[i] None — skip it);
+                    # a poisoned first token quarantines the row instead
                     for i in admitted:
                         s = slots[i]
-                        if s is not None and s.fill is None \
-                                and s.remaining <= 0:
+                        if s is None:
+                            continue
+                        if s.poisoned:
+                            quarantine(i, s)
+                        elif s.fill is None and s.remaining <= 0:
                             retire(i, s)
 
             if not any(s is not None for s in slots):
@@ -1312,8 +1495,15 @@ class SlotScheduler:
                     # nothing runnable until the next arrival
                     self.metrics["idle_ticks"] += 1
                     tick = max(tick + 1, pendreq[0].arrival)
-                    continue
-                break
+                    return "continue"
+                if queue:
+                    # degraded shed with nothing active still admits, so
+                    # reaching here means admission itself kept failing
+                    # (pool exhaustion faults, prefill faults): count it
+                    # so repeated stalls escalate instead of spinning
+                    tick += 1
+                    return "stalled"
+                return "break"
 
             # ---- one decode dispatch advances every active slot ---------
             if dev_args is None:
@@ -1333,15 +1523,47 @@ class SlotScheduler:
                 # dispatch's input — feed the device arrays straight
                 # back, no host round-trip
                 tok_dev, pos_dev, mask_dev = dev_args
-            if paged:
-                out_tok, cache = mod(params, cache, pt_dev, tok_dev,
-                                     pos_dev, mask_dev)
-                # pool invariant holds after every tick: every page is
-                # either referenced or on the free list, never both
-                pool.check()
-            else:
-                out_tok, cache = mod(params, cache, tok_dev, pos_dev,
-                                     mask_dev)
+            if mod is None:
+                # a failed resolve last tick (injected build fault,
+                # poisoned key) left no program — retry the resolve here
+                # before dispatching
+                resolve_program()
+            # bounded retry: cache leaves are program *inputs* (never
+            # donated) and the executor releases its pooled scratch in a
+            # finally, so re-dispatching the same tick after a transient
+            # failure is state-safe
+            attempt = 0
+            while True:
+                try:
+                    if paged:
+                        out_tok, cache = mod(params, cache, pt_dev,
+                                             tok_dev, pos_dev, mask_dev)
+                        # pool invariant holds after every tick: every
+                        # page is either referenced or on the free list,
+                        # never both
+                        pool.check()
+                    else:
+                        out_tok, cache = mod(params, cache, tok_dev,
+                                             pos_dev, mask_dev)
+                    break
+                except Exception:
+                    attempt += 1
+                    self.metrics["dispatch_retries"] += 1
+                    stats.note_fault(retries=1)
+                    if attempt > self.max_dispatch_retries:
+                        raise
+            if chaos.should_fault(chaos.SITE_LOGITS_NAN):
+                # fault model: one active row's logits went non-finite on
+                # device; guarded_argmax would then emit POISON_TOKEN for
+                # exactly that row, so inject at its observable boundary.
+                # Host round-trip on the tiny (extent, 1) token block —
+                # device-side edits would compile a fresh program for the
+                # victim's index, which only fault runs would ever pay
+                victim = next(i for i, s in enumerate(slots)
+                              if s is not None)
+                poked = np.asarray(out_tok).copy()
+                poked[victim, 0] = POISON_TOKEN
+                out_tok = jnp.asarray(poked)
             n_act = sum(s is not None for s in slots)
             stats.note_dispatch(key, n_act, extent)
             self.metrics["decode_dispatches"] += 1
@@ -1367,14 +1589,24 @@ class SlotScheduler:
                             # request's first real token (its next input
                             # is the program output, like a decode row)
                             s.fill = None
-                            s.cur_tok = int(out_np[i, 0])
+                            t_emit = int(out_np[i, 0])
+                            if t_emit == POISON_TOKEN:
+                                quarantine(i, s)
+                                changed = True
+                                continue
+                            s.cur_tok = t_emit
                             s.tokens.append(s.cur_tok)
                             s.remaining = s.req.max_new - 1
                         else:
                             # mid-prompt rows feed host prompt tokens
                             changed = True
                     else:
-                        s.cur_tok = int(out_np[i, 0])
+                        t_emit = int(out_np[i, 0])
+                        if t_emit == POISON_TOKEN:
+                            quarantine(i, s)
+                            changed = True
+                            continue
+                        s.cur_tok = t_emit
                         s.tokens.append(s.cur_tok)
                         s.remaining -= 1
                     if s.fill is None and s.remaining <= 0:
@@ -1404,9 +1636,73 @@ class SlotScheduler:
                     dev_args = None
                 else:
                     dev_args = (out_tok, pos_dev + 1, mask_dev)
-            tick_s.append(time.perf_counter() - t_tick)
+            dt = time.perf_counter() - t_tick
+            tick_s.append(dt)
+            if (self.tick_deadline_s is not None
+                    and dt > self.tick_deadline_s):
+                return "deadline"
+            return None
 
+        # ---- driver: every tick runs inside containment ----------------
+        # a tick that throws degrades the loop (cooldown sheds admissions
+        # and pins warm rungs) instead of killing the workload; only
+        # max_consec_failures consecutive failures abort, and even then
+        # every live/queued request gets a typed SystemError outcome
+        consec_failures = 0
+        degraded_until = 0
+        while pendreq or queue or any(s is not None for s in slots):
+            self._degraded = tick < degraded_until
+            if self._degraded:
+                stats.note_fault(tick_degraded=True)
+                self.metrics["ticks_degraded"] += 1
+            try:
+                directive = tick_once()
+            except Exception as e:
+                consec_failures += 1
+                self.metrics["tick_failures"] += 1
+                # salvage what the tick managed before it threw: pending
+                # columns from dispatches that DID complete are valid
+                try:
+                    harvest()
+                except Exception:
+                    pending.clear()
+                dev_args = None
+                degraded_until = max(degraded_until,
+                                     tick + self.degraded_cooldown)
+                tick += 1
+                if consec_failures > self.max_consec_failures:
+                    self.metrics["aborted"] = True
+                    abort_run(e)
+                    break
+                continue
+            if directive == "stalled":
+                # admission made no progress with nothing active —
+                # escalates like a failure so the loop cannot spin
+                consec_failures += 1
+                self.metrics["tick_failures"] += 1
+                if consec_failures > self.max_consec_failures:
+                    self.metrics["aborted"] = True
+                    abort_run(RuntimeError(
+                        "admission made no progress"))
+                    break
+                continue
+            consec_failures = 0
+            if directive == "deadline":
+                # tick finished but blew its deadline: enter degraded
+                # mode so the next ticks stay on warm rungs
+                self.metrics["watchdog_trips"] += 1
+                degraded_until = max(degraded_until,
+                                     tick + self.degraded_cooldown)
+            elif directive == "break":
+                break
+
+        self._degraded = False
         wall = time.perf_counter() - t0
+        if plan is not None:
+            injected = plan.faults_injected - faults0
+            self.metrics["faults_injected"] = injected
+            if injected:
+                stats.note_fault(injected=injected)
         if paged:
             # the store is server-resident: the next run (and the prefix
             # tree's cached pages) continue from it
@@ -1510,31 +1806,50 @@ class SlotScheduler:
             mask[i] = True
         jtokens = jnp.asarray(tokens)
         pargs = srv._prefill_args(extent, jtokens, 0, mask)
-        pmod, pkey, _ = srv.prefill_bucketed.program_for(
-            srv.params, cache, *pargs
-        )
-        logits, cache = pmod(srv.params, cache, *pargs)
+        try:
+            pmod, pkey, _ = srv.prefill_bucketed.program_for(
+                srv.params, cache, *pargs
+            )
+            logits, cache = pmod(srv.params, cache, *pargs)
+        except Exception:
+            # contained prefill failure (injected build/dispatch fault):
+            # the contiguous cache owns its rows outright, so the slots
+            # simply keep their fill buffers and replay the prompt
+            # through the decode loop — the same fallback as a grid
+            # miss; every other slot's rows were never touched
+            self.metrics["admission_failures"] += 1
+            return cache
         srv.prefill_bucketed.stats.note_dispatch(
             pkey, (len(admitted), max(Ps)), pkey.extents
         )
         self.metrics["prefill_dispatches"] += 1
         # device-side gather: only the admitted rows' last-real-column
-        # argmax crosses to host ((n_admitted,) ints, not the whole
-        # (extent, S, vocab) logits block)
-        rows = jnp.asarray(admitted, jnp.int32)
-        cols = jnp.asarray([P - 1 for P in Ps], jnp.int32)
+        # argmax crosses to host, not the whole (extent, S, vocab)
+        # logits block.  The gather is padded to a fixed (extent,) shape
+        # so its jitted program depends only on the bucket cell — an
+        # admission wave of any size (including post-requeue retries)
+        # reuses the same compiled gather
+        rows_p = np.zeros((extent,), np.int32)
+        cols_p = np.zeros((extent,), np.int32)
+        rows_p[: len(admitted)] = admitted
+        cols_p[: len(admitted)] = [P - 1 for P in Ps]
         firsts = np.asarray(
-            jnp.argmax(logits[rows, cols], axis=-1)
-        ).astype(np.int32)
+            guarded_argmax(logits[jnp.asarray(rows_p), jnp.asarray(cols_p)])
+        ).astype(np.int32)[: len(admitted)]
         for i, P, first in zip(admitted, Ps, firsts):
             s = slots[i]
             s.fill = None
             s.pos = P
+            cur_pos[i] = P
+            if int(first) == POISON_TOKEN:
+                # non-finite prefill logits for this row: flag it — the
+                # admission boundary quarantines flagged slots
+                s.poisoned = True
+                continue
             s.cur_tok = int(first)
             s.tokens.append(s.cur_tok)
             s.remaining = s.req.max_new - 1
             cur_tok[i, 0] = s.cur_tok
-            cur_pos[i] = P
         return cache
 
     def _admit_paged(self, admitted: List[int],
@@ -1629,31 +1944,63 @@ class SlotScheduler:
             pos_np[i] = s.skip
         pargs = (jnp.asarray(pt_host), jnp.asarray(tokens),
                  jnp.asarray(pos_np), jnp.asarray(mask))
-        pmod, pkey, _ = srv.prefill_bucketed.program_for(
-            srv.params, store, *pargs
-        )
-        logits, store = pmod(srv.params, store, *pargs)
+        try:
+            pmod, pkey, _ = srv.prefill_bucketed.program_for(
+                srv.params, store, *pargs
+            )
+            logits, store = pmod(srv.params, store, *pargs)
+        except Exception:
+            # a failed paged prefill must NOT fall back to fill-path
+            # replay: prefix-hit rows hold forked (shared) pages, and a
+            # token-by-token replay from position 0 would write into
+            # pages other slots and the prefix tree still read.  Undo
+            # the admission instead — drop the rows' page refs, vacate
+            # the slots, requeue the requests for a later tick.
+            self.metrics["admission_failures"] += 1
+            for i in live:
+                s = slots[i]
+                if s.pages:
+                    pool.free(s.pages)
+                    s.pages = []
+                pt_host[i] = TRASH_PAGE
+                slots[i] = None
+                if s.swapped_in:
+                    self.metrics["swaps"] -= 1
+                queue.append(s.req)
+            return store
         srv.prefill_bucketed.stats.note_dispatch(
             pkey, (len(live), max(Ls)), pkey.extents
         )
         self.metrics["prefill_dispatches"] += 1
         pool.stats.tokens_prefilled += sum(Ls)
-        # device-side gather of each row's last-real-suffix-column argmax
-        rows = jnp.asarray(live, jnp.int32)
-        cols = jnp.asarray([L - 1 for L in Ls], jnp.int32)
+        # device-side gather of each row's last-real-suffix-column
+        # argmax, padded to a fixed (extent,) shape so the jitted gather
+        # depends only on the bucket cell, never on how many rows this
+        # particular wave admitted (fault-requeued retries reuse it)
+        rows_p = np.zeros((extent,), np.int32)
+        cols_p = np.zeros((extent,), np.int32)
+        rows_p[: len(live)] = live
+        cols_p[: len(live)] = [L - 1 for L in Ls]
         firsts = np.asarray(
-            jnp.argmax(logits[rows, cols], axis=-1)
-        ).astype(np.int32)
+            guarded_argmax(logits[jnp.asarray(rows_p), jnp.asarray(cols_p)])
+        ).astype(np.int32)[: len(live)]
         for i, first in zip(live, firsts):
             s = slots[i]
             P = len(s.req.prompt)
             s.fill = None
             s.pos = P
+            cur_pos[i] = P
+            if int(first) == POISON_TOKEN:
+                # non-finite prefill logits: flag for quarantine at the
+                # admission boundary, and do NOT register the row's
+                # pages in the prefix tree — their KV came out of the
+                # same suspect dispatch
+                s.poisoned = True
+                continue
             s.cur_tok = int(first)
             s.tokens.append(s.cur_tok)
             s.remaining = s.req.max_new - 1
             cur_tok[i, 0] = s.cur_tok
-            cur_pos[i] = P
             # register the prompt's full pages for later admissions;
             # decode writes start at P — strictly past every registered
             # page — so cached pages are never mutated afterwards
@@ -1787,6 +2134,15 @@ def main(argv=None) -> int:
                          "(compile-cache miss count > 0) — the CI "
                          "restart-replay gate against a populated "
                          "--cache-dir")
+    ap.add_argument("--chaos", default=None, metavar="SITE=RATE[,..]",
+                    help="arm a seeded fault plan before serving, e.g. "
+                         "'compile.build=0.2,page.alloc=0.1' or 'all=0.05' "
+                         "(sites: " + ", ".join(chaos.ALL_SITES) + "); "
+                         "the loop must finish with typed outcomes, "
+                         "never crash")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the --chaos fault plan (per-site "
+                         "streams; same seed = same fault schedule)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -1841,6 +2197,16 @@ def main(argv=None) -> int:
                            compile_workers=args.compile_workers,
                            cache_dir=args.cache_dir)
 
+    plan = None
+    if args.chaos:
+        if not args.continuous:
+            ap.error("--chaos needs --continuous N (fault containment "
+                     "lives in the slot-scheduler loop)")
+        try:
+            plan = chaos.plan_from_spec(args.chaos, seed=args.chaos_seed)
+        except ValueError as e:
+            ap.error(str(e))
+
     if args.continuous:
         if args.mode != "forge":
             ap.error("--continuous needs --mode forge")
@@ -1858,7 +2224,15 @@ def main(argv=None) -> int:
         ]
         sched = SlotScheduler(server, max_slots=args.max_slots)
         warmup_s = sched.warmup(lens)
-        res = sched.run(reqs)
+        # armed only for the serving loop: setup/warmup is not a
+        # containment domain, the scheduler tick is
+        if plan is not None:
+            chaos.install_plan(plan)
+        try:
+            res = sched.run(reqs)
+        finally:
+            if plan is not None:
+                chaos.install_plan(None)
         print(f"[serve] {cfg.name} continuous n={args.continuous} "
               f"tok/s={res['tok_per_s']:.0f} "
               f"occupancy={res['occupancy']:.1%} "
@@ -1867,6 +2241,13 @@ def main(argv=None) -> int:
               f"compiles_post_warmup={res['compiles']} "
               f"(warmup={warmup_s:.2f}s)")
         print(f"[serve] {sched.report()}")
+        if plan is not None:
+            errs = sum(1 for r in res["results"].values() if "error" in r)
+            ok = len(res["results"]) - errs
+            print(f"[serve] chaos: faults_injected={plan.faults_injected} "
+                  f"requests_ok={ok} requests_failed={errs} "
+                  f"degraded_ticks={res['ticks_degraded']} "
+                  f"aborted={res['aborted']}")
         if args.paged:
             print(f"[serve] pages: in_use={res['kv_pages_in_use']}/"
                   f"{res['kv_pages_capacity']} "

@@ -102,6 +102,29 @@ def make_prefill_step(cfg: ModelConfig) -> Callable:
     return prefill_step
 
 
+#: sentinel emitted instead of an argmax over non-finite logits; never a
+#: real token (vocab ids are >= 0), so the scheduler can quarantine the
+#: row with a typed error while its neighbours decode on untouched
+POISON_TOKEN = -1
+
+
+def guarded_argmax(last_logits) -> jax.Array:
+    """Greedy token with a non-finite tripwire.
+
+    A row whose logits contain NaN/+Inf (a poisoned KV row, an overflow
+    in a half-precision matmul) emits :data:`POISON_TOKEN`; rows with
+    all-finite logits are bitwise-identical to a plain argmax (``-Inf``
+    entries — legitimate vocab masking — keep the row max finite and do
+    NOT trip it).  Same dispatch count: the check compiles into the
+    decode program.
+    """
+    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    row_max = jnp.max(last_logits, axis=-1)
+    return jnp.where(jnp.isfinite(row_max), tok, POISON_TOKEN).astype(
+        jnp.int32
+    )
+
+
 def make_serve_step(cfg: ModelConfig) -> Callable:
     model = get_model(cfg)
 
@@ -145,7 +168,7 @@ def make_slot_serve_step(cfg: ModelConfig) -> Callable:
         logits, new_cache = model.decode_step(
             params, cache, token, pos, cfg, slot_mask=slot_mask
         )
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        next_tok = guarded_argmax(logits[:, -1, :])
         return next_tok[:, None], new_cache
 
     return slot_step
@@ -226,7 +249,7 @@ def make_paged_serve_step(cfg: ModelConfig) -> Callable:
         logits, new_cache = model.paged_decode_step(
             params, cache, token, pos, cfg, slot_mask=slot_mask
         )
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        next_tok = guarded_argmax(logits[:, -1, :])
         new_store = {"k_pages": new_cache["k_pages"],
                      "v_pages": new_cache["v_pages"]}
         return next_tok[:, None], new_store

@@ -1,3 +1,16 @@
+from .chaos import (
+    ALL_SITES,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    RequestError,
+    SystemError_,
+    current_plan,
+    install_plan,
+    maybe_fault,
+    plan_from_spec,
+    should_fault,
+)
 from .compress import compressed_psum, compression_ratio, quantize_int8
 from .failure import SimulatedFault, Supervisor, SupervisorReport
 from .straggler import StragglerMonitor
@@ -6,4 +19,7 @@ __all__ = [
     "compressed_psum", "compression_ratio", "quantize_int8",
     "SimulatedFault", "Supervisor", "SupervisorReport",
     "StragglerMonitor",
+    "ALL_SITES", "FaultPlan", "FaultSpec", "InjectedFault",
+    "RequestError", "SystemError_", "current_plan", "install_plan",
+    "maybe_fault", "plan_from_spec", "should_fault",
 ]

@@ -1,0 +1,351 @@
+"""Chaos soak for the serving stack (ISSUE 8 acceptance criteria).
+
+Under a seeded :class:`FaultPlan` covering every injection site, the
+slot-scheduler loop must never crash: every request terminates with a
+typed outcome, requests untouched by faults produce tokens
+bitwise-identical to a fault-free run, and page/slot accounting
+invariants hold afterwards.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import BatchedServer, Request, SlotScheduler
+from repro.models import get_model
+from repro.runtime.chaos import (
+    ALL_SITES,
+    SITE_COMPILE_BUILD,
+    SITE_DISK_CORRUPT,
+    SITE_DISK_READ,
+    SITE_DISK_WRITE,
+    SITE_DISPATCH,
+    SITE_LOGITS_NAN,
+    SITE_PAGE_ALLOC,
+    FaultPlan,
+    InjectedFault,
+    SystemError_,
+    current_plan,
+    install_plan,
+    plan_from_spec,
+)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """Every test starts and ends with no plan installed."""
+    prev = install_plan(None)
+    yield
+    install_plan(prev)
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = get_config("forge-125m", smoke=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    return cfg, model, params
+
+
+def _tokens(n, seed=0, vocab=512):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, (n,)).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# FaultPlan semantics
+# --------------------------------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_unknown_site_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultPlan().arm("no.such.site", rate=0.5)
+
+    def test_same_seed_same_schedule(self):
+        a = FaultPlan(seed=3).arm(SITE_DISPATCH, rate=0.3)
+        b = FaultPlan(seed=3).arm(SITE_DISPATCH, rate=0.3)
+        pa = [a.check(SITE_DISPATCH) for _ in range(200)]
+        pb = [b.check(SITE_DISPATCH) for _ in range(200)]
+        assert pa == pb and any(pa)
+        assert a.log == b.log
+
+    def test_site_streams_are_independent(self):
+        """Interleaving calls at OTHER sites never perturbs a site's own
+        fault schedule — determinism survives cross-site reordering."""
+        a = FaultPlan(seed=5).arm(SITE_DISPATCH, rate=0.3)
+        b = (FaultPlan(seed=5).arm(SITE_DISPATCH, rate=0.3)
+             .arm(SITE_DISK_READ, rate=0.9))
+        pa, pb = [], []
+        for k in range(100):
+            pa.append(a.check(SITE_DISPATCH))
+            b.check(SITE_DISK_READ)  # extra traffic on another site
+            pb.append(b.check(SITE_DISPATCH))
+            b.check(SITE_DISK_READ)
+        assert pa == pb
+
+    def test_times_every_and_max_faults(self):
+        p = FaultPlan().arm(SITE_DISPATCH, times=(1, 4))
+        assert [p.check(SITE_DISPATCH) for _ in range(6)] == \
+            [False, True, False, False, True, False]
+        p = FaultPlan().arm(SITE_DISPATCH, every=3)
+        assert [p.check(SITE_DISPATCH) for _ in range(7)] == \
+            [False, False, True, False, False, True, False]
+        p = FaultPlan().arm(SITE_DISPATCH, every=2, max_faults=2)
+        fired = [p.check(SITE_DISPATCH) for _ in range(10)]
+        assert sum(fired) == 2 and p.fired(SITE_DISPATCH) == 2
+        assert p.calls(SITE_DISPATCH) == 10
+
+    def test_install_returns_previous_and_hooks_are_inert_without_plan(self):
+        from repro.runtime.chaos import maybe_fault, should_fault
+
+        assert current_plan() is None
+        assert should_fault(SITE_DISPATCH) is False
+        maybe_fault(SITE_DISPATCH)  # no plan: never raises
+        p1 = FaultPlan()
+        assert install_plan(p1) is None
+        assert current_plan() is p1
+        assert install_plan(None) is p1
+
+    def test_maybe_fault_raises_typed(self):
+        install_plan(FaultPlan().arm(SITE_DISPATCH, times=(0,)))
+        from repro.runtime.chaos import maybe_fault
+
+        with pytest.raises(InjectedFault) as ei:
+            maybe_fault(SITE_DISPATCH)
+        assert isinstance(ei.value, SystemError_)
+        assert ei.value.site == SITE_DISPATCH
+
+    def test_plan_from_spec(self):
+        p = plan_from_spec("compile.build=0.2, page.alloc", seed=9)
+        assert p.seed == 9
+        assert p._sites[SITE_COMPILE_BUILD].spec.rate == 0.2
+        assert p._sites[SITE_PAGE_ALLOC].spec.rate == 1.0
+        p = plan_from_spec("all=0.05")
+        assert set(p._sites) == set(ALL_SITES)
+        with pytest.raises(ValueError, match="unknown fault site"):
+            plan_from_spec("bogus=0.5")
+
+
+# --------------------------------------------------------------------------
+# disk-tier chaos: reads, writes and corruption heal, never crash
+# --------------------------------------------------------------------------
+
+
+class TestDiskChaos:
+    def _compile_once(self, cache):
+        from repro.core import ForgeCompiler, PipelineConfig
+
+        comp = ForgeCompiler(PipelineConfig(backend="interpret"),
+                             cache=cache)
+        return comp.compile(lambda x: x * 2.0 + 1.0,
+                            np.ones((4, 4), np.float32))
+
+    def test_read_fault_is_a_miss_then_heals(self, tmp_path):
+        from repro.core.cache import CompileCache, DiskCacheStore
+
+        store = DiskCacheStore(str(tmp_path))
+        self._compile_once(CompileCache(store=store))
+        assert store.stats.writes == 1
+        install_plan(FaultPlan().arm(SITE_DISK_READ, times=(0,)))
+        s2 = DiskCacheStore(str(tmp_path))
+        c2 = CompileCache(store=s2)
+        m = self._compile_once(c2)  # read fails -> clean recompile
+        assert s2.stats.misses == 1 and c2.stats.misses == 1
+        assert s2.stats.writes == 1  # entry re-stored (healed)
+        x = np.ones((4, 4), np.float32)
+        np.testing.assert_array_equal(np.asarray(m(x)), x * 2.0 + 1.0)
+        install_plan(None)
+        s3 = DiskCacheStore(str(tmp_path))
+        c3 = CompileCache(store=s3)
+        self._compile_once(c3)
+        assert c3.stats.disk_hits == 1  # the healed entry round-trips
+
+    def test_corruption_detected_unlinked_and_healed(self, tmp_path):
+        from repro.core.cache import CompileCache, DiskCacheStore
+
+        store = DiskCacheStore(str(tmp_path))
+        self._compile_once(CompileCache(store=store))
+        install_plan(FaultPlan().arm(SITE_DISK_CORRUPT, times=(0,)))
+        s2 = DiskCacheStore(str(tmp_path))
+        c2 = CompileCache(store=s2)
+        self._compile_once(c2)
+        # checksum tripped: corrupt counted, file unlinked, recompiled
+        # and re-stored — never a wrong program
+        assert s2.stats.corrupt == 1 and c2.stats.misses == 1
+        assert s2.stats.writes == 1
+        assert len(s2) == 1
+
+    def test_write_fault_degrades_to_memory_only(self, tmp_path):
+        from repro.core.cache import CompileCache, DiskCacheStore
+
+        install_plan(FaultPlan().arm(SITE_DISK_WRITE, times=(0,)))
+        store = DiskCacheStore(str(tmp_path))
+        cache = CompileCache(store=store)
+        m = self._compile_once(cache)  # write fails; compile succeeds
+        assert store.stats.write_errors == 1 and len(store) == 0
+        x = np.ones((4, 4), np.float32)
+        np.testing.assert_array_equal(np.asarray(m(x)), x * 2.0 + 1.0)
+        # same memory cache still serves the program without disk
+        m2 = self._compile_once(cache)
+        assert cache.stats.hits == 1 and cache.stats.misses == 1
+        np.testing.assert_array_equal(np.asarray(m2(x)),
+                                      np.asarray(m(x)))
+
+
+# --------------------------------------------------------------------------
+# serving soak
+# --------------------------------------------------------------------------
+
+MAX_LEN, PS = 32, 8
+
+
+def _workload(vocab, n=10):
+    shared = _tokens(16, seed=20, vocab=vocab)  # 2 shared pages
+    reqs = []
+    for i in range(n):
+        if i % 3 == 0:  # shared-prefix group -> prefix-tree traffic
+            p = np.concatenate([shared, _tokens(4, seed=30 + i,
+                                                vocab=vocab)])
+        else:
+            p = _tokens(3 + 2 * (i % 5), seed=40 + i, vocab=vocab)
+        reqs.append(Request(rid=i, prompt=p, max_new=2 + (3 * i) % 5,
+                            arrival=i // 3))
+    return reqs
+
+
+def _server(cfg, params, paged=False, **kw):
+    return BatchedServer(cfg, params, max_len=MAX_LEN, mode="forge",
+                         backend="interpret",
+                         seq_bucket_policy="ladder:8,16,32",
+                         paged=paged, kv_page_size=PS, **kw)
+
+
+def _run(srv, reqs, plan=None, **kw):
+    sched = SlotScheduler(srv, max_slots=4, **kw)
+    sched.warmup(prompt_lens=[4, 8, 16, 24])
+    prev = install_plan(plan)
+    try:
+        return sched.run(reqs)
+    finally:
+        install_plan(prev)
+
+
+def _soak_plan(seed):
+    return (FaultPlan(seed=seed)
+            .arm(SITE_COMPILE_BUILD, rate=0.2)
+            .arm(SITE_DISK_READ, rate=0.2)
+            .arm(SITE_DISK_WRITE, rate=0.2)
+            .arm(SITE_DISK_CORRUPT, rate=0.2)
+            .arm(SITE_PAGE_ALLOC, rate=0.1)
+            .arm(SITE_DISPATCH, rate=0.1, max_faults=4)
+            .arm(SITE_LOGITS_NAN, times=(5,)))
+
+
+class TestServeChaosSoak:
+    def _check_soak(self, clean, out, reqs, plan):
+        # 1. every request terminated with a typed outcome
+        assert set(out["results"]) == {r.rid for r in reqs}
+        for rid, r in out["results"].items():
+            assert "tokens" in r
+            if "error" in r:
+                assert r["error_type"] in ("RequestError", "SystemError")
+        # 2. unaffected requests are bitwise-equal to the fault-free run
+        survivors = [rid for rid, r in out["results"].items()
+                     if "error" not in r]
+        for rid in survivors:
+            np.testing.assert_array_equal(
+                out["results"][rid]["tokens"],
+                clean["results"][rid]["tokens"],
+                err_msg=f"survivor rid {rid} diverged under faults",
+            )
+        # 3. the plan actually exercised the stack
+        assert plan.faults_injected >= 1
+        assert out["faults_injected"] == plan.faults_injected
+        return survivors
+
+    def test_contiguous_soak_survivors_bitwise(self, smoke_setup):
+        cfg, _, params = smoke_setup
+        reqs = _workload(cfg.vocab)
+        clean = _run(_server(cfg, params), reqs)
+        assert all("error" not in r for r in clean["results"].values())
+        plan = _soak_plan(seed=11)
+        out = _run(_server(cfg, params), reqs, plan=plan)
+        survivors = self._check_soak(clean, out, reqs, plan)
+        # the logits.nan injection quarantined exactly one row
+        assert out["rows_quarantined"] == 1
+        assert len(survivors) >= len(reqs) - 2
+
+    def test_paged_soak_no_leaked_pages(self, smoke_setup):
+        cfg, _, params = smoke_setup
+        reqs = _workload(cfg.vocab)
+        clean = _run(_server(cfg, params, paged=True), reqs)
+        plan = _soak_plan(seed=7)
+        srv = _server(cfg, params, paged=True)
+        out = _run(srv, reqs, plan=plan)
+        self._check_soak(clean, out, reqs, plan)
+        # accounting invariants survive injected page exhaustion and
+        # prefill failures: refcounts partition the pool, and nothing
+        # beyond the trash pin + the prefix tree's chains stays live
+        srv.page_pool.check()
+        assert srv.page_pool.pages_in_use == \
+            1 + srv.prefix_tree.cached_pages
+        srv.prefix_tree.clear()
+        srv.page_pool.check()
+        assert srv.page_pool.pages_in_use == 1  # leaked pages == 0
+
+    def test_same_plan_seed_reproduces_outcomes(self, smoke_setup):
+        """Determinism: identical workload + identical plan seed =>
+        identical outcomes, including which requests failed and every
+        surviving token stream."""
+        cfg, _, params = smoke_setup
+        reqs = _workload(cfg.vocab, n=8)
+        plan_a = (FaultPlan(seed=13)
+                  .arm(SITE_DISPATCH, times=(2, 3, 4))
+                  .arm(SITE_LOGITS_NAN, times=(1,)))
+        plan_b = (FaultPlan(seed=13)
+                  .arm(SITE_DISPATCH, times=(2, 3, 4))
+                  .arm(SITE_LOGITS_NAN, times=(1,)))
+        a = _run(_server(cfg, params), reqs, plan=plan_a)
+        b = _run(_server(cfg, params), reqs, plan=plan_b)
+        assert plan_a.log == plan_b.log
+        assert set(a["results"]) == set(b["results"])
+        for rid in a["results"]:
+            ra, rb = a["results"][rid], b["results"][rid]
+            np.testing.assert_array_equal(ra["tokens"], rb["tokens"])
+            assert ra.get("error") == rb.get("error")
+
+    def test_unrecoverable_faults_abort_with_typed_outcomes(
+            self, smoke_setup):
+        """Every dispatch failing forever exhausts containment: the run
+        aborts — but returns, with a typed SystemError outcome per
+        request and no exception escaping the loop."""
+        cfg, _, params = smoke_setup
+        reqs = _workload(cfg.vocab, n=4)
+        plan = FaultPlan().arm(SITE_DISPATCH, rate=1.0)
+        out = _run(_server(cfg, params), reqs, plan=plan,
+                   max_consec_failures=3)
+        assert out["aborted"] is True
+        assert set(out["results"]) == {r.rid for r in reqs}
+        for r in out["results"].values():
+            assert r["error_type"] == "SystemError"
+        assert out["tick_failures"] >= 3
+        assert out["ticks_degraded"] >= 1  # cooldown engaged on the way
+
+    def test_invalid_requests_isolated_from_batch(self, smoke_setup):
+        cfg, _, params = smoke_setup
+        good = Request(rid=0, prompt=_tokens(4, vocab=cfg.vocab),
+                       max_new=3)
+        bad_budget = Request(rid=1, prompt=_tokens(30, vocab=cfg.vocab),
+                             max_new=8)  # 38 > max_len=32
+        bad_prompt = Request(rid=2, prompt=None, max_new=2)
+        bad_new = Request(rid=3, prompt=_tokens(4, vocab=cfg.vocab),
+                          max_new=0)
+        out = _run(_server(cfg, params),
+                   [good, bad_budget, bad_prompt, bad_new])
+        res = out["results"]
+        assert len(res) == 4
+        assert "error" not in res[0] and len(res[0]["tokens"]) == 3
+        for rid in (1, 2, 3):
+            assert res[rid]["error_type"] == "RequestError"
+        assert out["requests_rejected"] == 3

@@ -104,17 +104,96 @@ class TestCompileService:
         svc.shutdown()
 
     def test_failed_build_allows_retry(self):
-        svc = CompileService(workers=1)
+        # legacy semantics: no retry, no quarantine — the key is simply
+        # forgotten on failure so a resubmit builds again
+        svc = CompileService(workers=1, max_retries=0,
+                             poison_failures=False)
 
         def boom():
             raise RuntimeError("transient")
 
         with pytest.raises(RuntimeError):
             svc.submit("k", boom).result(10.0)
-        # the key was forgotten on failure: a resubmit builds again
         assert svc.submit("k", lambda: "ok").result(10.0) == "ok"
         assert svc.stats.failed == 1
+        assert svc.stats.retries == 0
         assert svc.stats.completed >= 1
+        svc.shutdown()
+
+    def test_transient_failure_retried_with_backoff(self):
+        svc = CompileService(workers=1, max_retries=2,
+                             retry_backoff_s=0.005)
+        calls = []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise RuntimeError("transient")
+            return "recovered"
+
+        assert svc.submit("k", flaky).result(10.0) == "recovered"
+        assert len(calls) == 3
+        assert svc.stats.retries == 2
+        assert svc.stats.failed == 0
+        assert svc.stats.completed == 1
+        svc.shutdown()
+
+    def test_deterministic_failure_poisons_key(self):
+        svc = CompileService(workers=1, max_retries=1,
+                             retry_backoff_s=0.002)
+        calls = []
+
+        def boom():
+            calls.append(1)
+            raise RuntimeError("deterministic")
+
+        with pytest.raises(RuntimeError, match="deterministic"):
+            svc.submit("k", boom).result(10.0)
+        assert len(calls) == 2  # first attempt + 1 retry
+        assert svc.stats.failed == 1
+        assert svc.poisoned_keys() == ["k"]
+        # resubmits fail fast from the quarantine — no rebuild hot-loop
+        with pytest.raises(RuntimeError, match="deterministic"):
+            svc.submit("k", boom).result(10.0)
+        assert len(calls) == 2
+        assert svc.stats.poison_hits == 1
+        # clearing the quarantine lets a fixed build through
+        assert svc.clear_poisoned("k") == 1
+        assert svc.submit("k", lambda: "fixed").result(10.0) == "fixed"
+        svc.shutdown()
+
+    def test_dead_worker_respawned_and_job_rescued(self):
+        from repro.runtime import chaos
+
+        svc = CompileService(workers=1, max_retries=0)
+        prev = chaos.install_plan(
+            chaos.FaultPlan(seed=3).arm(chaos.SITE_COMPILE_WORKER,
+                                        times=(0,))
+        )
+        try:
+            # the worker thread dies AFTER claiming this job; without
+            # the reaper the future would be stranded forever
+            fut = svc.submit("k", lambda: "survived")
+            assert svc.result(fut, timeout=10.0) == "survived"
+            assert svc.stats.worker_restarts >= 1
+            assert svc.stats.requeued == 1
+        finally:
+            chaos.install_plan(prev)
+            svc.shutdown()
+
+    def test_hung_build_abandoned(self):
+        svc = CompileService(workers=1, max_retries=0,
+                             hang_timeout_s=0.05)
+        gate = threading.Event()
+        fut = svc.submit("hung", lambda: gate.wait(10.0))
+        from repro.runtime.chaos import SystemError_
+        with pytest.raises(SystemError_, match="hang timeout"):
+            svc.result(fut, timeout=10.0)
+        assert svc.stats.hangs_abandoned == 1
+        assert svc.stats.worker_restarts >= 1
+        # the replacement worker keeps serving new jobs
+        assert svc.submit("next", lambda: "ok").result(10.0) == "ok"
+        gate.set()
         svc.shutdown()
 
     def test_shutdown_cancels_queued(self):

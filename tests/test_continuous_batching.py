@@ -247,8 +247,21 @@ class TestSlotScheduler:
         server = BatchedServer(cfg, params, max_len=8, mode="forge",
                                backend="interpret")
         sched = SlotScheduler(server, max_slots=2)
-        with pytest.raises(ValueError, match="max_len"):
-            sched.run([Request(rid=0, prompt=_prompt(6), max_new=6)])
+        # an over-budget request no longer kills the workload: it
+        # completes with a typed RequestError outcome and the rest of
+        # the batch is served normally
+        out = sched.run([
+            Request(rid=0, prompt=_prompt(6), max_new=6),
+            Request(rid=1, prompt=_prompt(3), max_new=2),
+        ])
+        bad = out["results"][0]
+        assert bad["error_type"] == "RequestError"
+        assert "max_len" in bad["error"]
+        assert len(bad["tokens"]) == 0
+        good = out["results"][1]
+        assert "error" not in good and len(good["tokens"]) == 2
+        assert out["requests_rejected"] == 1
+        assert out["requests_failed"] == 1
 
 
 class TestColdBucketEviction:
