@@ -19,11 +19,17 @@ for the row's primary value) and declares a direction:
 (alloc blocks vary across Python versions) declare explicit slack.  A
 gate whose row or metric is missing from the results FAILS — renaming a
 benchmark row must be a conscious baseline update, not a silent skip.
+
+Every run renders a metric-vs-baseline markdown table: to stdout
+always, and appended to ``$GITHUB_STEP_SUMMARY`` when the variable is
+set, so a CI run's gate surface is readable from the job summary page
+without digging through logs.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import Any, Dict, List, Tuple
 
@@ -43,40 +49,78 @@ def _lookup(rows: Dict[str, Any], address: str) -> Tuple[bool, Any]:
     return False, None
 
 
-def check(results: Dict[str, Any], baseline: Dict[str, Any]) -> List[str]:
-    """Return a list of human-readable gate failures (empty = green)."""
-    failures: List[str] = []
+def evaluate(results: Dict[str, Any],
+             baseline: Dict[str, Any]) -> List[Dict[str, Any]]:
+    """Evaluate every gate; one structured verdict dict per gate."""
+    verdicts: List[Dict[str, Any]] = []
     rows = results.get("rows", {})
     for address, gate in sorted(baseline.get("gates", {}).items()):
-        found, current = _lookup(rows, address)
-        if not found:
-            failures.append(f"{address}: metric missing from results "
-                            f"(renamed row needs a baseline update)")
-            continue
-        if not isinstance(current, (int, float)):
-            failures.append(f"{address}: non-numeric value {current!r}")
-            continue
         base = float(gate["value"])
         direction = gate.get("direction", "max")
         ratio = float(gate.get("ratio_slack", 1.0))
         slack = float(gate.get("abs_slack", 0.0))
-        if direction == "max":
-            limit = base * ratio + slack
-            if current > limit:
-                failures.append(
-                    f"{address}: {current} > limit {limit:g} "
-                    f"(baseline {base:g}, direction=max)"
-                )
+        v = {"address": address, "baseline": base, "direction": direction,
+             "current": None, "limit": None, "why": None}
+        found, current = _lookup(rows, address)
+        if not found:
+            v["why"] = ("metric missing from results "
+                        "(renamed row needs a baseline update)")
+        elif not isinstance(current, (int, float)):
+            v["why"] = f"non-numeric value {current!r}"
+        elif direction == "max":
+            v["current"] = current
+            v["limit"] = base * ratio + slack
+            if current > v["limit"]:
+                v["why"] = (f"{current} > limit {v['limit']:g} "
+                            f"(baseline {base:g}, direction=max)")
         elif direction == "min":
-            limit = base / ratio - slack
-            if current < limit:
-                failures.append(
-                    f"{address}: {current} < limit {limit:g} "
-                    f"(baseline {base:g}, direction=min)"
-                )
+            v["current"] = current
+            v["limit"] = base / ratio - slack
+            if current < v["limit"]:
+                v["why"] = (f"{current} < limit {v['limit']:g} "
+                            f"(baseline {base:g}, direction=min)")
         else:
-            failures.append(f"{address}: unknown direction {direction!r}")
-    return failures
+            v["why"] = f"unknown direction {direction!r}"
+        verdicts.append(v)
+    return verdicts
+
+
+def check(results: Dict[str, Any], baseline: Dict[str, Any]) -> List[str]:
+    """Return a list of human-readable gate failures (empty = green)."""
+    return [f"{v['address']}: {v['why']}"
+            for v in evaluate(results, baseline) if v["why"]]
+
+
+def _fmt(x: Any) -> str:
+    if x is None:
+        return "—"
+    if isinstance(x, float):
+        return f"{x:g}"
+    return str(x)
+
+
+def render_markdown(verdicts: List[Dict[str, Any]],
+                    baseline_path: str) -> str:
+    """Metric-vs-baseline-vs-direction table for the CI job summary."""
+    n_fail = sum(1 for v in verdicts if v["why"])
+    head = "❌" if n_fail else "✅"
+    lines = [
+        f"### Bench-regression gate {head} "
+        f"({len(verdicts) - n_fail}/{len(verdicts)} green, "
+        f"baseline `{baseline_path}`)",
+        "",
+        "| gate | current | baseline | limit | direction | status |",
+        "|---|---:|---:|---:|:-:|:-:|",
+    ]
+    for v in verdicts:
+        status = "❌ " + v["why"] if v["why"] else "✅"
+        lines.append(
+            f"| `{v['address']}` | {_fmt(v['current'])} "
+            f"| {_fmt(v['baseline'])} | {_fmt(v['limit'])} "
+            f"| {v['direction']} | {status} |"
+        )
+    lines.append("")
+    return "\n".join(lines)
 
 
 def main(argv=None) -> int:
@@ -92,8 +136,16 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
 
-    failures = check(results, baseline)
-    n_gates = len(baseline.get("gates", {}))
+    verdicts = evaluate(results, baseline)
+    failures = [f"{v['address']}: {v['why']}" for v in verdicts if v["why"]]
+    table = render_markdown(verdicts, args.baseline)
+    print(table)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(table + "\n")
+
+    n_gates = len(verdicts)
     if failures:
         print(f"[bench-gate] {len(failures)}/{n_gates} gates FAILED:",
               file=sys.stderr)

@@ -25,6 +25,8 @@ Prints ``name,us_per_call,derived`` CSV rows (paper-table mapping):
                       warm-fallback counts, restart replay from disk
     fault_recovery    seeded fault injection: faulted vs clean tok/s,
                       typed request outcomes, leaked pages/slots == 0
+    slo_serving       open-loop bursty SLO workload: EDF + page-parking
+                      preemption vs FIFO p99 TTFT, shed rate, fidelity
     variance          Table 19
     roofline_report   §Roofline (reads the dry-run results JSON)
 
@@ -61,6 +63,7 @@ MODULES = (
     "paged_kv",
     "async_compile",
     "fault_recovery",
+    "slo_serving",
     "variance",
     "roofline_report",
 )

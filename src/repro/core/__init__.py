@@ -43,6 +43,7 @@ from .shapekey import (
     ShapeKey,
     get_bucket_policy,
     infer_poly_axes,
+    propose_rungs,
 )
 
 __all__ = [
@@ -67,6 +68,7 @@ __all__ = [
     "ShapeKey",
     "get_bucket_policy",
     "infer_poly_axes",
+    "propose_rungs",
     "make_cache_key",
     "AutotuningCompiler",
     "TuneResult",

@@ -48,6 +48,7 @@ from .shapekey import (
     PolyAxis,
     ShapeKey,
     flatten_axes,
+    get_bucket_policy,
     infer_extent,
     pad_args,
 )
@@ -677,6 +678,36 @@ class BucketedModule:
             if ck is not None and self.compiler.cache is not None:
                 self.compiler.cache.drop(ck)
         return victims
+
+    def refit_policy(
+        self, new_policy: Union[str, BucketPolicy], axis: int = 0
+    ) -> BucketPolicy:
+        """Swap one polymorphic axis's bucket policy in place (re-fit).
+
+        The replacement keeps the *old policy's name*: AxisKeys embed
+        the policy name, so renaming would orphan every compiled
+        program and pooled buffer set at extents both policies map to.
+        With the name pinned, a re-fit that keeps a rung leaves that
+        rung's program, compile-cache entry, and buffer pool directly
+        addressable; dropped rungs' programs stay legal pad-up targets
+        for ``nearest_warm`` (domination compares extents only) until
+        ``evict_cold`` retires them.  Returns the installed policy.
+        """
+        new_policy = get_bucket_policy(new_policy)
+        with self._lock:
+            old_axis = self.axes[axis]
+            # pin the name (frozen dataclass → object.__setattr__, the
+            # same escape hatch their own __post_init__ uses)
+            object.__setattr__(new_policy, "name", old_axis.policy.name)
+            axes = list(self.axes)
+            axes[axis] = PolyAxis(
+                in_axes=old_axis.in_axes, out_axes=old_axis.out_axes,
+                policy=new_policy, label=old_axis.label,
+            )
+            self.axes = tuple(axes)
+            if axis == 0:  # keep the 1-D legacy view coherent
+                self.policy = new_policy
+        return new_policy
 
     # -- transparency -----------------------------------------------------
 

@@ -71,6 +71,13 @@ class PageStats:
     tokens_reused: int = 0
     #: prompt tokens actually prefilled (prefix-skip denominator)
     tokens_prefilled: int = 0
+    # -- preemption (park/resume) counters --------------------------------
+    #: preempted slots whose pages were parked (:meth:`PagePool.park`)
+    parks: int = 0
+    #: parked slots resumed (:meth:`PagePool.unpark`)
+    unparks: int = 0
+    #: high-water mark of simultaneously parked pages
+    peak_parked_pages: int = 0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -104,6 +111,12 @@ class PagePool:
         #: LIFO free list — recently freed pages are re-issued first
         #: (their device rows are warm)
         self._free: List[int] = list(range(self.num_pages - 1, TRASH_PAGE, -1))
+        #: parked-page registry: owner token -> that preempted slot's
+        #: page chain.  Parking moves no refcounts — the slot's own
+        #: references simply persist while the slot itself is gone, and
+        #: this registry is what keeps them *reachable* (check() verifies
+        #: every live page is reachable from a slot, the tree, or here)
+        self._parked: Dict[object, List[int]] = {}
         self.stats = PageStats()
 
     # -- introspection ----------------------------------------------------
@@ -125,6 +138,14 @@ class PagePool:
     def refcount(self, page: int) -> int:
         return int(self._refs[page])
 
+    @property
+    def parked_owners(self) -> int:
+        return len(self._parked)
+
+    @property
+    def parked_pages(self) -> int:
+        return sum(len(v) for v in self._parked.values())
+
     def check(self) -> None:
         """Assert pool accounting: free + in-use partitions the store."""
         in_use = int(np.count_nonzero(self._refs))
@@ -138,6 +159,21 @@ class PagePool:
         )
         assert self._refs[TRASH_PAGE] >= 1, "trash page lost its pin"
         assert len(set(self._free)) == len(self._free), "free list corrupt"
+        # parked reachability: each parked chain still holds live pages,
+        # and no page is claimed by more parked owners than it has
+        # references (a parked owner's claim IS one of its refcounts)
+        claims: Dict[int, int] = {}
+        for owner, pages in self._parked.items():
+            for p in pages:
+                assert p != TRASH_PAGE, f"trash page parked by {owner!r}"
+                assert self._refs[p] >= 1, (
+                    f"parked page {p} (owner {owner!r}) is dead"
+                )
+                claims[p] = claims.get(p, 0) + 1
+        for p, c in claims.items():
+            assert c <= int(self._refs[p]), (
+                f"page {p} parked by {c} owners but refcount {self._refs[p]}"
+            )
 
     # -- lifecycle --------------------------------------------------------
 
@@ -197,6 +233,39 @@ class PagePool:
                 self._free.append(int(p))
                 released.append(int(p))
         return released
+
+    # -- preemption (park / resume) ---------------------------------------
+
+    def park(self, owner: object, pages: Sequence[int]) -> None:
+        """Register a preempted slot's page chain under ``owner``.
+
+        No refcounts move: the slot's own references stay live, the
+        registry just keeps them *reachable* while no slot row points at
+        them (the page-table row is trashed on preemption).  Parking a
+        dead/trash page or an already-parked owner raises — both would
+        mean the scheduler lost track of a preemption.
+        """
+        if owner in self._parked:
+            raise ValueError(f"owner {owner!r} already has parked pages")
+        for p in pages:
+            if p == TRASH_PAGE:
+                raise ValueError("cannot park the trash page")
+            if self._refs[p] <= 0:
+                raise ValueError(f"park of dead page {p}")
+        self._parked[owner] = [int(p) for p in pages]
+        self.stats.parks += 1
+        self.stats.peak_parked_pages = max(
+            self.stats.peak_parked_pages, self.parked_pages
+        )
+
+    def unpark(self, owner: object) -> List[int]:
+        """Release ``owner``'s parked chain, returning it in prefix
+        order.  The caller either resumes the slot (page-table row
+        write) or frees the pages (abort).  Unknown owners raise."""
+        if owner not in self._parked:
+            raise KeyError(f"no parked pages for owner {owner!r}")
+        self.stats.unparks += 1
+        return self._parked.pop(owner)
 
 
 @dataclass

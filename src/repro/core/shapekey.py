@@ -37,6 +37,7 @@ compilation axis:
 from __future__ import annotations
 
 import threading
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -614,6 +615,11 @@ class BucketStats:
     ticks_degraded: int = 0
     #: tick dispatches re-run after a contained dispatch fault
     dispatch_retries: int = 0
+    #: sliding window of recent *valid* per-axis extents (the observed
+    #: batch/seq distribution a ladder re-fitter proposes rungs against);
+    #: bounded so a long-running server's trail stays O(1)
+    recent_extents: "deque" = field(
+        default_factory=lambda: deque(maxlen=512))
 
     def __post_init__(self) -> None:
         self._lock = threading.Lock()
@@ -679,9 +685,12 @@ class BucketStats:
         tuples (N-D fronts); ``rows_*`` then count *cells* (the product
         over axes — e.g. batch-rows × prompt-columns for 2-D prefill),
         which reduces to plain row counting for 1-D fronts."""
-        valid = int(np.prod(_as_axis_tuple(n_valid)))
+        valid_axes = _as_axis_tuple(n_valid)
+        valid = int(np.prod(valid_axes))
         total = int(np.prod(_as_axis_tuple(extent)))
         with self._lock:
+            if valid > 0:  # warmup/throwaway dispatches carry n_valid=0
+                self.recent_extents.append(valid_axes)
             self.calls += 1
             self.rows_real += valid
             self.rows_padded += total - valid
@@ -714,3 +723,38 @@ class BucketStats:
     def pool_hit_rate(self) -> float:
         total = self.pool_hits + self.pool_misses
         return self.pool_hits / total if total else 0.0
+
+
+def propose_rungs(
+    observed: Sequence[int],
+    max_rungs: int = 4,
+    *,
+    cap: Optional[int] = None,
+) -> Tuple[int, ...]:
+    """Propose ladder rungs fitting an observed extent distribution.
+
+    ``observed`` is a recency trail of valid extents (one axis of
+    :attr:`BucketStats.recent_extents`).  Rungs are chosen at evenly
+    spaced quantiles of the distribution so each rung absorbs roughly
+    the same share of recent traffic, which minimizes expected pad rows
+    under the trail's empirical distribution without modelling it.  The
+    top rung always covers ``max(observed)`` — and ``cap`` when given
+    (the scheduler's admission bound), so a re-fit can never shrink the
+    ladder below what admission may legally request.  Returns a strictly
+    increasing tuple suitable for :class:`LadderPolicy`.
+    """
+    if max_rungs < 1:
+        raise ValueError(f"max_rungs must be >= 1, got {max_rungs}")
+    vals = sorted(int(v) for v in observed if int(v) > 0)
+    if not vals:
+        if cap is None:
+            raise ValueError("propose_rungs needs observations or a cap")
+        return (int(cap),)
+    top = max(vals[-1], int(cap) if cap is not None else 0)
+    rungs = set()
+    for i in range(1, max_rungs):
+        q = vals[min(len(vals) - 1, (i * len(vals)) // max_rungs)]
+        if q < top:
+            rungs.add(q)
+    rungs.add(top)
+    return tuple(sorted(rungs))

@@ -53,11 +53,14 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..core.paging import TRASH_PAGE, build_row_table, pages_for
+from ..core.shapekey import LadderPolicy, propose_rungs
 from ..models import get_model
 from ..runtime import chaos
 from ..runtime.chaos import RequestError, SystemError_
 from .steps import (
     POISON_TOKEN,
+    blend_cache_rows,
+    gather_cache_rows,
     guarded_argmax,
     make_serve_step,
     supports_slot_decode,
@@ -929,6 +932,22 @@ class Request:
     prompt: np.ndarray  # (P,) int32
     max_new: int  # tokens to emit (first comes from the prompt's last logits)
     arrival: int = 0  # decode-step tick at which the request may be admitted
+    # -- SLO fields (DESIGN.md §SLO-aware scheduling) ----------------------
+    #: open-loop wall-clock arrival offset in seconds from run start;
+    #: when every request sets it the scheduler clocks arrivals (and
+    #: budgets) against the wall instead of the tick counter
+    arrival_s: Optional[float] = None
+    #: time-to-first-token budget: admission is EDF-ordered by
+    #: ``arrival + ttft_budget_s``, and a request whose TTFT deadline
+    #: has already passed while queued is shed with a typed
+    #: RequestError instead of wasting capacity (None = no deadline)
+    ttft_budget_s: Optional[float] = None
+    #: end-to-end completion budget: a slot running past it becomes a
+    #: preemption victim under queue pressure (None = no budget)
+    latency_budget_s: Optional[float] = None
+    #: higher wins: an arriving request may preempt (park) a running
+    #: slot of strictly lower priority when no slot is free
+    priority: int = 0
 
 
 @dataclass
@@ -953,6 +972,13 @@ class _Slot:
     #: the row emitted POISON_TOKEN (non-finite logits tripwire) — the
     #: request is quarantined with a typed error at the next boundary
     poisoned: bool = False
+    # -- SLO bookkeeping ---------------------------------------------------
+    #: wall clock at which the request arrived (TTFT/latency origin)
+    arrival_wall: float = 0.0
+    #: wall clock of the first emitted token (None until it exists)
+    first_wall: Optional[float] = None
+    #: times this slot was preempted (pages parked) and later resumed
+    preempted: int = 0
 
 
 class SlotScheduler:
@@ -981,7 +1007,11 @@ class SlotScheduler:
                  max_dispatch_retries: int = 2,
                  degraded_cooldown: int = 8,
                  max_consec_failures: int = 6,
-                 tick_deadline_s: Optional[float] = None):
+                 tick_deadline_s: Optional[float] = None,
+                 slo: bool = True,
+                 refit_interval: int = 0,
+                 refit_max_rungs: int = 4,
+                 refit_max_programs: Optional[int] = None):
         if server.mode != "forge":
             raise ValueError("SlotScheduler needs mode='forge' "
                              "(bucketed slot-signature fronts)")
@@ -1015,6 +1045,23 @@ class SlotScheduler:
         self.tick_deadline_s = tick_deadline_s
         #: degraded-mode flag read by _target_rung (pin to warm rungs)
         self._degraded = False
+        # -- SLO-aware scheduling (DESIGN.md §SLO-aware scheduling) --------
+        #: deadline-aware admission: EDF queue ordering, shed-on-hopeless,
+        #: and page-parking preemption.  Inert on workloads that set no
+        #: budgets/priorities (EDF with infinite deadlines is arrival
+        #: order, nothing sheds, no slot is ever a victim), so the
+        #: default stays backwards compatible; ``slo=False`` gives the
+        #: throughput-only packer as an explicit baseline.
+        self.slo = bool(slo)
+        #: re-fit the decode bucket ladder from the BucketStats recency
+        #: trail every this-many ticks (0 = off); new rungs are
+        #: submitted speculatively when async compile is on, and cold
+        #: rungs are retired through evict_cold
+        self.refit_interval = int(refit_interval)
+        self.refit_max_rungs = int(refit_max_rungs)
+        #: program-table budget handed to evict_cold after a re-fit
+        #: (default: one more than the proposed rung count)
+        self.refit_max_programs = refit_max_programs
         self.metrics: Dict[str, Any] = {}
         self._reset_metrics()
 
@@ -1057,6 +1104,20 @@ class SlotScheduler:
             #: True when the run hit max_consec_failures and failed all
             #: remaining requests with typed SystemError outcomes
             "aborted": False,
+            # -- SLO-aware scheduling -------------------------------------
+            #: slots preempted (KV pages parked / rows pooled) to make
+            #: room for higher-priority or tighter-deadline arrivals
+            "preemptions": 0,
+            #: parked slots swapped back in (page-table row write /
+            #: masked row blend)
+            "resumes": 0,
+            #: queued requests shed with a typed RequestError because
+            #: their TTFT deadline had already passed (hopeless)
+            "shed": 0,
+            #: ladder re-fits applied from the recency trail
+            "refits": 0,
+            #: bucket programs retired by evict_cold after a re-fit
+            "refit_evictions": 0,
         }
 
     # -- warmup -----------------------------------------------------------
@@ -1069,6 +1130,58 @@ class SlotScheduler:
     def warmup(self, prompt_lens: Optional[Sequence[int]] = None) -> float:
         """Precompile every reachable rung (and prefill grid cells)."""
         return self.server.warmup(self.rungs(), prompt_lens=prompt_lens)
+
+    # -- adaptive ladder re-fit (PR 5 eviction half-item) -----------------
+
+    def refit(self) -> Optional[tuple]:
+        """Re-fit the decode bucket ladder to the observed batch sizes.
+
+        Consumes the :class:`BucketStats` recency trail
+        (``recent_extents``: the valid batch extent of each recent real
+        dispatch) and proposes quantile rungs for that distribution,
+        capped so the top rung still admits ``max_slots``.  The new
+        :class:`LadderPolicy` is installed in place via
+        ``BucketedModule.refit_policy`` (policy *name* pinned, so
+        same-extent programs, pooled buffers, and cache entries stay
+        addressable, and dropped rungs' programs remain legal
+        ``nearest_warm`` pad-up targets).  With async compile on, each
+        cold new rung is submitted speculatively so the ladder is warm
+        before the scheduler crosses onto it; finally ``evict_cold``
+        retires programs beyond ``refit_max_programs`` — the serving
+        rung is the most recently dispatched, so it survives.  Returns
+        the installed rungs, or None when the trail is empty or already
+        fits.
+        """
+        srv = self.server
+        front = srv.bucketed
+        observed = [t[0] for t in list(front.stats.recent_extents)]
+        if not observed:
+            return None
+        rungs = propose_rungs(observed, self.refit_max_rungs,
+                              cap=self.max_slots)
+        old = front.policy
+        if isinstance(old, LadderPolicy) and tuple(old.rungs) == rungs:
+            return None
+        front.refit_policy(LadderPolicy(rungs=rungs))
+        self.top_extent = front.policy.bucket(self.max_slots)
+        self.metrics["refits"] += 1
+        if srv.async_compile and srv.compile_service is not None:
+            # speculative: warm the new rungs off the request path so
+            # the next boundary crossing finds a program waiting
+            for r in rungs:
+                k = front.key_for_extents(r)
+                if front.lookup_program(k) is None:
+                    front.submit_key(
+                        k,
+                        args_fn=(lambda e=r: srv._decode_example_args(e)),
+                        foreground=False,
+                    )
+        budget = (self.refit_max_programs
+                  if self.refit_max_programs is not None
+                  else len(rungs) + 1)
+        evicted = front.evict_cold(budget)
+        self.metrics["refit_evictions"] += len(evicted)
+        return rungs
 
     # -- bucket resize ----------------------------------------------------
 
@@ -1208,6 +1321,10 @@ class SlotScheduler:
             if need > srv.page_pool.capacity:
                 return (f"needs {need} KV pages, pool capacity is "
                         f"{srv.page_pool.capacity}")
+        if r.ttft_budget_s is not None and r.ttft_budget_s <= 0:
+            return "ttft_budget_s must be > 0"
+        if r.latency_budget_s is not None and r.latency_budget_s <= 0:
+            return "latency_budget_s must be > 0"
         return None
 
     # -- the scheduling loop ----------------------------------------------
@@ -1217,11 +1334,13 @@ class SlotScheduler:
 
         The clock is the decode-dispatch counter (``tick``):
         ``Request.arrival`` is measured in ticks, and a tick with no
-        runnable slot fast-forwards to the next arrival.
+        runnable slot fast-forwards to the next arrival.  When every
+        request sets ``arrival_s`` the run is *open-loop*: arrivals are
+        clocked against the wall (seconds since run start), which is
+        what TTFT/latency budgets are measured against.
         """
         srv = self.server
         params = srv.params
-        policy = srv.bucketed.policy
         stats = srv.bucketed.stats
         self._reset_metrics()
         compiles0 = stats.compiles + (
@@ -1266,8 +1385,23 @@ class SlotScheduler:
         #: which is inert (their mask is False, writes route to trash)
         pt_host = np.full((0, MP), TRASH_PAGE, np.int32)
         pt_dev = None
-        pendreq = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        #: open-loop wall-clock arrivals iff every request carries one
+        wall_mode = bool(requests) and all(
+            r.arrival_s is not None for r in requests
+        )
+        if wall_mode:
+            pendreq = deque(sorted(requests,
+                                   key=lambda r: (r.arrival_s, r.rid)))
+        else:
+            pendreq = deque(sorted(requests,
+                                   key=lambda r: (r.arrival, r.rid)))
         queue: deque = deque()
+        #: preempted slots awaiting resume, keyed by rid; their KV lives
+        #: in the page pool's parked registry (paged) or the bucket
+        #: BufferPool under ("parked", rid) (contiguous)
+        parked: Dict[int, _Slot] = {}
+        #: wall clock of each request's arrival (TTFT/latency origin)
+        arr_wall: Dict[int, float] = {}
         slots: List[Optional[_Slot]] = []
         extent = 0
         cache = srv.page_store if paged else None
@@ -1290,6 +1424,30 @@ class SlotScheduler:
         def active_count() -> int:
             return sum(s is not None for s in slots)
 
+        # -- SLO helpers (EDF ordering, deadlines, preemption) ------------
+
+        def req_arrival_wall(req: Request) -> float:
+            """Wall clock at which ``req`` arrived: its scheduled
+            open-loop offset in wall mode, else the moment the tick
+            clock surfaced it (stamped at the pendreq→queue pop)."""
+            if req.rid in arr_wall:
+                return arr_wall[req.rid]
+            if wall_mode:
+                return t0 + (req.arrival_s or 0.0)
+            return t0
+
+        def ttft_deadline(req: Request) -> float:
+            if req.ttft_budget_s is None:
+                return float("inf")
+            return req_arrival_wall(req) + req.ttft_budget_s
+
+        def edf_key(req: Request):
+            """Earliest-deadline-first with priority tiebreak; with no
+            budgets/priorities set this degenerates to arrival order,
+            so SLO mode is inert on legacy workloads."""
+            arrival = (req.arrival_s or 0.0) if wall_mode else req.arrival
+            return (ttft_deadline(req), -req.priority, arrival, req.rid)
+
         def resolve_program():
             nonlocal mod, key
             if paged:
@@ -1303,11 +1461,17 @@ class SlotScheduler:
 
         def retire(i: int, s: _Slot, error: Optional[str] = None,
                    error_type: str = "RequestError") -> None:
+            now = time.perf_counter()
             entry = {
                 "tokens": np.asarray(s.tokens, np.int32),
                 "admitted_tick": s.admitted_tick,
                 "finished_tick": tick,
                 "swapped_in": s.swapped_in,
+                "preempted": s.preempted,
+                "priority": s.req.priority,
+                "ttft_s": (s.first_wall - s.arrival_wall
+                           if s.first_wall is not None else None),
+                "latency_s": now - s.arrival_wall,
             }
             if error is not None:
                 entry["error"] = error
@@ -1358,12 +1522,75 @@ class SlotScheduler:
                         continue
                     s.cur_tok = t
                     s.tokens.append(s.cur_tok)
+                    if s.first_wall is None:
+                        s.first_wall = time.perf_counter()
             pending.clear()
             for i in rows:
                 s = slots[i]
                 if s is not None and s.poisoned:
                     quarantine(i, s)
                     dev_args = None  # active set shrank: rebuild mask
+
+        def park_slot(i: int, s: _Slot) -> None:
+            """Preempt one mid-decode slot by parking its KV.
+
+            Paged path: the slot row is dropped and its page-table row
+            trashed, but the page chain keeps its refcounts and moves
+            into the pool's parked registry — O(table row), no KV bytes
+            move.  Contiguous path: the slot's cache rows are gathered
+            into a 1-row tree and parked in the bucket BufferPool under
+            ``("parked", rid)``.  The fault hook fires BEFORE any state
+            moves, so an injected preempt fault is contained as an
+            ordinary tick failure with accounting intact.  Host decode
+            state (pos, cur_tok, tokens) rides along in the _Slot —
+            resume needs only the KV back under a row.
+            """
+            nonlocal cache, dev_args, pt_dev
+            chaos.maybe_fault(chaos.SITE_PREEMPT)
+            rid = s.req.rid
+            if paged:
+                pool.park(rid, s.pages)
+                pt_host[i, :] = TRASH_PAGE
+                pt_dev = jnp.asarray(pt_host)
+            else:
+                srv.bucketed.pool.release(
+                    ("parked", rid),
+                    gather_cache_rows(cache, srv.cache_axes, [i]),
+                )
+            s.preempted += 1
+            parked[rid] = s
+            slots[i] = None
+            dev_args = None
+            self.metrics["preemptions"] += 1
+
+        def resume_slot(i: int, s: _Slot) -> None:
+            """Swap a parked slot back in: page-table row write (paged)
+            or masked row blend (contiguous), then restore the host
+            decode state.  No prefill dispatch — the KV is exactly what
+            the slot parked, and decode is row/extent-invariant, so the
+            resumed request's tokens are bitwise-equal to an
+            unpreempted run."""
+            nonlocal cache, dev_args, pt_dev
+            rid = s.req.rid
+            parked.pop(rid)
+            if paged:
+                s.pages = pool.unpark(rid)
+                pt_host[i] = build_row_table(s.pages, MP)
+                pt_dev = jnp.asarray(pt_host)
+            else:
+                def _missing():
+                    raise SystemError_(
+                        f"parked rows for rid {rid} missing from pool"
+                    )
+
+                row = srv.bucketed.pool.acquire(("parked", rid), _missing)
+                srv.bucketed.pool.drop(("parked", rid))  # empty key
+                cache = blend_cache_rows(cache, srv.cache_axes, row, [i])
+            slots[i] = s
+            cur_tok[i, 0] = s.cur_tok
+            cur_pos[i] = s.pos
+            dev_args = None
+            self.metrics["resumes"] += 1
 
         def abort_run(err: BaseException) -> None:
             """Containment exhausted: every live request terminates with
@@ -1375,6 +1602,33 @@ class SlotScheduler:
             for i, s in enumerate(slots):
                 if s is not None:
                     retire(i, s, error=why, error_type="SystemError")
+            # drain parked slots: release their KV (pages / pooled rows)
+            # and terminate them with the same typed outcome, keeping
+            # the partial tokens they generated before preemption
+            for rid, s in list(parked.items()):
+                if paged:
+                    pool.unpark(rid)
+                    if s.pages:
+                        pool.free(s.pages)
+                        s.pages = []
+                else:
+                    srv.bucketed.pool.drop(("parked", rid))
+                results[rid] = {
+                    "tokens": np.asarray(s.tokens, np.int32),
+                    "admitted_tick": s.admitted_tick,
+                    "finished_tick": tick,
+                    "swapped_in": s.swapped_in,
+                    "preempted": s.preempted,
+                    "priority": s.req.priority,
+                    "ttft_s": (s.first_wall - s.arrival_wall
+                               if s.first_wall is not None else None),
+                    "latency_s": time.perf_counter() - s.arrival_wall,
+                    "error": why,
+                    "error_type": "SystemError",
+                }
+                stats.note_fault(request_failed=True)
+                self.metrics["requests_failed"] += 1
+            parked.clear()
             for req in list(queue) + list(pendreq):
                 fail_request(req, why, kind="SystemError")
             queue.clear()
@@ -1386,20 +1640,89 @@ class SlotScheduler:
             ('continue' | 'break' | 'deadline') or None."""
             nonlocal slots, cur_tok, cur_pos, cache, extent, mod, key
             nonlocal dev_args, pt_dev, pt_host, tick
-            while pendreq and pendreq[0].arrival <= tick:
-                queue.append(pendreq.popleft())
+            now = time.perf_counter()
+            if wall_mode:
+                while pendreq and t0 + (pendreq[0].arrival_s or 0.0) <= now:
+                    req = pendreq.popleft()
+                    arr_wall[req.rid] = t0 + (req.arrival_s or 0.0)
+                    queue.append(req)
+            else:
+                while pendreq and pendreq[0].arrival <= tick:
+                    req = pendreq.popleft()
+                    arr_wall.setdefault(req.rid, now)
+                    queue.append(req)
+
+            # ---- SLO admission: shed-on-hopeless + EDF ordering ---------
+            if self.slo and queue:
+                kept: List[Request] = []
+                for req in queue:
+                    if (req.ttft_budget_s is not None
+                            and now > ttft_deadline(req)):
+                        # hopeless: its TTFT deadline passed while it
+                        # queued — admitting it now wastes capacity the
+                        # still-meetable requests need
+                        fail_request(
+                            req,
+                            f"shed: TTFT deadline exceeded while queued "
+                            f"(budget {req.ttft_budget_s:.3f}s)",
+                        )
+                        self.metrics["shed"] += 1
+                    else:
+                        kept.append(req)
+                kept.sort(key=edf_key)
+                queue.clear()
+                queue.extend(kept)
+
+            # ---- preemption: park over-budget / low-priority slots ------
+            # Only under queue pressure (EDF overflow past the free
+            # slots), never in degraded mode (parking is state motion the
+            # recovering loop should not attempt).  A victim must be
+            # mid-decode (not prefilling), and either strictly lower
+            # priority than the incoming request or past its own latency
+            # budget.  Parking is O(page-table row) on the paged path.
+            if self.slo and not self._degraded and queue:
+                overflow = list(queue)[
+                    max(self.max_slots - active_count() - len(parked), 0):
+                ]
+                harvested = False
+                for req in overflow:
+                    cands = [
+                        (s.req.priority, -s.remaining, i)
+                        for i, s in enumerate(slots)
+                        if s is not None and s.fill is None
+                        and not s.poisoned
+                        and (s.req.priority < req.priority
+                             or (s.req.latency_budget_s is not None
+                                 and now > s.arrival_wall
+                                 + s.req.latency_budget_s))
+                    ]
+                    if not cands:
+                        continue  # nothing preemptible for this request
+                    _, _, vi = min(cands)
+                    if not harvested:
+                        # sync pending device token columns before any
+                        # slot state moves (same boundary rule as resize)
+                        harvest()
+                        harvested = True
+                    victim = slots[vi]
+                    if victim is None or victim.poisoned:
+                        continue  # harvest quarantined it
+                    park_slot(vi, victim)
 
             # ---- pad-waste-aware admission + rung resize ----------------
             active = active_count()
-            want = min(active + len(queue), self.max_slots)
+            want = min(active + len(queue) + len(parked), self.max_slots)
             t_tick = time.perf_counter()
             # degraded mode sheds admissions (queued requests wait out
             # the cooldown) unless nothing at all is active — then an
             # admission is the only way to make progress
             if want > 0 and not (self._degraded and active > 0):
-                target = self._target_rung(policy.bucket(want))
-                if target != extent or (queue and any(s is None
-                                                      for s in slots)):
+                # the bucket policy is read through the front on every
+                # boundary (not captured once) so a mid-run ladder
+                # re-fit takes effect at the next rung selection
+                target = self._target_rung(srv.bucketed.policy.bucket(want))
+                if target != extent or ((queue or parked)
+                                        and any(s is None for s in slots)):
                     # resize/admission is a boundary: sync the pending
                     # device-resident token columns before slot rows move
                     # or dev_args is rebuilt from host state (a deferred
@@ -1448,15 +1771,27 @@ class SlotScheduler:
                     # the resolve next tick — never dispatches stale
                     mod = None
                     resolve_program()
-                # pack queued requests into every free slot (13+3 → B16)
+                # pack queued requests AND parked resumes into every
+                # free slot (13+3 → B16).  Resumes and fresh admissions
+                # compete in one EDF order (a parked slot keeps its
+                # original arrival/deadline); without SLO mode parked is
+                # always empty and this is the original FIFO pack.
                 mid_generation = active > 0
                 admitted: List[int] = []
+                cand = [("resume", s.req) for s in parked.values()]
+                cand += [("new", r) for r in queue]
+                if self.slo and parked:
+                    cand.sort(key=lambda kr: edf_key(kr[1]))
+                cand = deque(cand)
                 for i in range(extent):
-                    if not queue:
+                    if not cand:
                         break
                     if slots[i] is not None:
                         continue
-                    req = queue.popleft()
+                    kind, req = cand.popleft()
+                    if kind == "resume":
+                        resume_slot(i, parked[req.rid])
+                        continue
                     # a swap-in: admission while other slots are mid-
                     # generation (the continuous-batching case the
                     # lockstep server could not serve)
@@ -1464,10 +1799,15 @@ class SlotScheduler:
                         req=req, admitted_tick=tick,
                         swapped_in=mid_generation,
                         fill=np.asarray(req.prompt, np.int32),
+                        arrival_wall=req_arrival_wall(req),
                     )
                     if mid_generation:
                         self.metrics["swaps"] += 1
                     admitted.append(i)
+                # unpacked fresh requests go back to the queue in order
+                # (unpacked resumes simply stay parked)
+                queue.clear()
+                queue.extend(r for kind, r in cand if kind == "new")
                 if admitted:
                     if paged:
                         cache = self._admit_paged(admitted, slots, cache,
@@ -1494,9 +1834,18 @@ class SlotScheduler:
                 if pendreq:
                     # nothing runnable until the next arrival
                     self.metrics["idle_ticks"] += 1
-                    tick = max(tick + 1, pendreq[0].arrival)
+                    if wall_mode:
+                        # open-loop clock: sleep (briefly) toward the
+                        # next scheduled arrival instead of spinning
+                        wait = (t0 + (pendreq[0].arrival_s or 0.0)
+                                - time.perf_counter())
+                        if wait > 0:
+                            time.sleep(min(wait, 0.025))
+                        tick += 1
+                    else:
+                        tick = max(tick + 1, pendreq[0].arrival)
                     return "continue"
-                if queue:
+                if queue or parked:
                     # degraded shed with nothing active still admits, so
                     # reaching here means admission itself kept failing
                     # (pool exhaustion faults, prefill faults): count it
@@ -1570,7 +1919,12 @@ class SlotScheduler:
             self.metrics["occupied_row_steps"] += n_act
             self.metrics["capacity_row_steps"] += extent
             tick += 1
-            arrival_due = bool(pendreq) and pendreq[0].arrival <= tick
+            if wall_mode:
+                arrival_due = bool(pendreq) and (
+                    t0 + (pendreq[0].arrival_s or 0.0) <= time.perf_counter()
+                )
+            else:
+                arrival_due = bool(pendreq) and pendreq[0].arrival <= tick
             if any(s is not None and s.fill is not None for s in slots):
                 # prompt-consuming rows need this tick's tokens NOW (a
                 # fill transition switches a row's input source); fills
@@ -1596,6 +1950,8 @@ class SlotScheduler:
                                 continue
                             s.cur_tok = t_emit
                             s.tokens.append(s.cur_tok)
+                            if s.first_wall is None:
+                                s.first_wall = time.perf_counter()
                             s.remaining = s.req.max_new - 1
                         else:
                             # mid-prompt rows feed host prompt tokens
@@ -1608,6 +1964,8 @@ class SlotScheduler:
                             continue
                         s.cur_tok = t_emit
                         s.tokens.append(s.cur_tok)
+                        if s.first_wall is None:
+                            s.first_wall = time.perf_counter()
                         s.remaining -= 1
                     if s.fill is None and s.remaining <= 0:
                         retire(i, s)
@@ -1650,8 +2008,19 @@ class SlotScheduler:
         # every live/queued request gets a typed SystemError outcome
         consec_failures = 0
         degraded_until = 0
-        while pendreq or queue or any(s is not None for s in slots):
+        next_refit = self.refit_interval
+        while (pendreq or queue or parked
+               or any(s is not None for s in slots)):
             self._degraded = tick < degraded_until
+            if (self.refit_interval and tick >= next_refit
+                    and not self._degraded):
+                next_refit = tick + self.refit_interval
+                try:
+                    self.refit()
+                except Exception:
+                    # re-fit is advisory: a failed proposal/compile must
+                    # never take the serving loop down with it
+                    pass
             if self._degraded:
                 stats.note_fault(tick_degraded=True)
                 self.metrics["ticks_degraded"] += 1
@@ -1732,6 +2101,15 @@ class SlotScheduler:
             "tick_ms_max": float(tick_ms.max()) if len(tick_ms) else 0.0,
             **m,
         }
+        # SLO tails over per-request outcomes (wall-clock TTFT/latency)
+        ttfts = [r["ttft_s"] for r in results.values()
+                 if r.get("ttft_s") is not None]
+        lats = [r["latency_s"] for r in results.values()
+                if r.get("latency_s") is not None and "error" not in r]
+        out["ttft_p50_s"] = float(np.percentile(ttfts, 50)) if ttfts else 0.0
+        out["ttft_p99_s"] = float(np.percentile(ttfts, 99)) if ttfts else 0.0
+        out["latency_p99_s"] = float(np.percentile(lats, 99)) if lats else 0.0
+        out["shed_rate"] = (m["shed"] / len(requests) if requests else 0.0)
         if paged:
             ps_ = pool.stats
             leaf_bytes = sum(
@@ -1848,6 +2226,8 @@ class SlotScheduler:
                 continue
             s.cur_tok = int(first)
             s.tokens.append(s.cur_tok)
+            if s.first_wall is None:
+                s.first_wall = time.perf_counter()
             s.remaining = s.req.max_new - 1
             cur_tok[i, 0] = s.cur_tok
         return cache
@@ -1999,6 +2379,8 @@ class SlotScheduler:
                 continue
             s.cur_tok = int(first)
             s.tokens.append(s.cur_tok)
+            if s.first_wall is None:
+                s.first_wall = time.perf_counter()
             s.remaining = s.req.max_new - 1
             cur_tok[i, 0] = s.cur_tok
             # register the prompt's full pages for later admissions;
@@ -2018,6 +2400,8 @@ class SlotScheduler:
             f"pad_decode={1 - m['occupied_row_steps'] / cap:.1%} "
             f"swaps={m['swaps']} resizes={m['resizes']} "
             f"prefills={m['prefill_dispatches']}"
+            + (f" preempts={m['preemptions']} resumes={m['resumes']} "
+               f"shed={m['shed']}" if m["preemptions"] or m["shed"] else "")
             + (f" deferrals={m['deferrals']}" if self.paged else "")
             + (f" warm_fallbacks={m['warm_fallbacks']}"
                if self.server.async_compile else "")

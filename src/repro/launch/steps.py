@@ -33,6 +33,54 @@ def dealias_tree(tree):
     )
 
 
+def gather_cache_rows(cache, axes_spec, rows):
+    """Extract batch rows ``rows`` of a decode cache as a small tree.
+
+    Each batch-polymorphic leaf (per ``axes_spec``, a vmap-style tree
+    prefix) keeps only the selected rows along its batch axis —
+    ``len(rows)`` wide — while batch-free leaves pass through
+    unchanged.  Eager jnp ops, no compiled program: this is the
+    host-side half of slot preemption on the contiguous path (park one
+    slot's KV/state rows) and of rung-crossing row moves.
+    """
+    from ..core.shapekey import flatten_axes
+
+    flat, tree = jax.tree_util.tree_flatten(cache)
+    axes = flatten_axes(axes_spec, cache)
+    idx = jnp.asarray(rows, jnp.int32)
+    out = []
+    for leaf, ax in zip(flat, axes):
+        out.append(leaf if ax is None else jnp.take(leaf, idx, axis=ax))
+    return jax.tree_util.tree_unflatten(tree, out)
+
+
+def blend_cache_rows(cache, axes_spec, row_tree, rows):
+    """Write ``row_tree`` (a :func:`gather_cache_rows` extract) back
+    into batch rows ``rows`` of ``cache``.
+
+    The masked-blend dual of the gather: every non-selected row of
+    every leaf survives bitwise, so a parked slot's rows swap back in
+    without perturbing its neighbours (the resume half of contiguous
+    preemption).  Batch-free leaves keep ``cache``'s values.
+    """
+    from ..core.shapekey import flatten_axes
+
+    flat, tree = jax.tree_util.tree_flatten(cache)
+    flat_src, _ = jax.tree_util.tree_flatten(row_tree)
+    axes = flatten_axes(axes_spec, cache)
+    idx = jnp.asarray(rows, jnp.int32)
+    out = []
+    for leaf, src, ax in zip(flat, flat_src, axes):
+        if ax is None:
+            out.append(leaf)
+            continue
+        out.append(jnp.moveaxis(
+            jnp.moveaxis(leaf, ax, 0).at[idx].set(jnp.moveaxis(src, ax, 0)),
+            0, ax,
+        ))
+    return jax.tree_util.tree_unflatten(tree, out)
+
+
 def default_optimizer(cfg: ModelConfig):
     if cfg.param_count() > ADAFACTOR_THRESHOLD:
         return Adafactor(lr=1e-3)

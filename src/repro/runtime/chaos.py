@@ -89,11 +89,13 @@ SITE_PAGE_ALLOC = "page.alloc"
 SITE_DISPATCH = "dispatch"
 #: Decode: one active slot row's logits go non-finite this tick.
 SITE_LOGITS_NAN = "logits.nan"
+#: Scheduler: a preemption (park) raises before touching any state.
+SITE_PREEMPT = "preempt"
 
 ALL_SITES: Tuple[str, ...] = (
     SITE_COMPILE_BUILD, SITE_COMPILE_WORKER, SITE_COMPILE_HANG,
     SITE_DISK_READ, SITE_DISK_WRITE, SITE_DISK_CORRUPT,
-    SITE_PAGE_ALLOC, SITE_DISPATCH, SITE_LOGITS_NAN,
+    SITE_PAGE_ALLOC, SITE_DISPATCH, SITE_LOGITS_NAN, SITE_PREEMPT,
 )
 
 

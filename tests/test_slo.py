@@ -1,0 +1,410 @@
+"""SLO-aware scheduling (ISSUE 9 acceptance criteria): EDF admission,
+shed-on-hopeless, page-parking preemption with bitwise resume fidelity,
+parked-page accounting under chaos, and the adaptive ladder re-fit."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.paging import TRASH_PAGE, PagePool
+from repro.core.shapekey import LadderPolicy, propose_rungs
+from repro.launch.serve import BatchedServer, Request, SlotScheduler
+from repro.models import get_model
+from repro.runtime import chaos
+from repro.runtime.chaos import FaultPlan, install_plan
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """Every test starts and ends with no plan installed."""
+    prev = install_plan(None)
+    yield
+    install_plan(prev)
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = get_config("forge-125m", smoke=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    return cfg, model, params
+
+
+def _prompt(n, seed=0, vocab=512):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, (n,)).astype(np.int32)
+
+
+def _server(cfg, params, *, paged=True, max_len=32):
+    return BatchedServer(cfg, params, max_len=max_len, mode="forge",
+                         backend="segment_jit",
+                         seq_bucket_policy="ladder:8,16,32",
+                         paged=paged, kv_page_size=8)
+
+
+def _bg_plus_burst(vocab, *, bg=2, bg_tokens=24, bursts=2,
+                   burst_arrival=4, burst_priority=2, burst_budget=None):
+    """Background requests at tick 0 saturating the slots + short
+    high-priority bursts arriving mid-decode (tick-clocked arrivals:
+    preemption needs queue pressure, not wall deadlines)."""
+    reqs = [Request(rid=i, prompt=_prompt(6, seed=i, vocab=vocab),
+                    max_new=bg_tokens, priority=0) for i in range(bg)]
+    for j in range(bursts):
+        reqs.append(Request(rid=100 + j,
+                            prompt=_prompt(4, seed=50 + j, vocab=vocab),
+                            max_new=3, arrival=burst_arrival + j,
+                            priority=burst_priority,
+                            ttft_budget_s=burst_budget))
+    return reqs
+
+
+# --------------------------------------------------------------------------
+# Ladder re-fit proposal
+# --------------------------------------------------------------------------
+
+
+class TestProposeRungs:
+    def test_quantile_fit_covers_top(self):
+        obs = [1, 1, 2, 2, 3, 8, 8, 8, 8]
+        rungs = propose_rungs(obs, max_rungs=3)
+        assert rungs == tuple(sorted(rungs))
+        assert rungs[-1] == 8 and 1 <= len(rungs) <= 3
+        assert all(r > 0 for r in rungs)
+
+    def test_cap_raises_top_rung(self):
+        assert propose_rungs([4, 4, 4], max_rungs=2, cap=16)[-1] == 16
+        assert propose_rungs([], cap=16) == (16,)
+
+    def test_single_rung_is_max(self):
+        assert propose_rungs([3, 7, 2], max_rungs=1) == (7,)
+
+    def test_errors(self):
+        with pytest.raises(ValueError):
+            propose_rungs([1, 2], max_rungs=0)
+        with pytest.raises(ValueError):
+            propose_rungs([])  # no observations and no cap
+
+    def test_rungs_admit_every_observation(self):
+        obs = [5, 9, 1, 17, 3, 3, 12]
+        pol = LadderPolicy(rungs=propose_rungs(obs, max_rungs=4))
+        assert all(pol.bucket(v) >= v for v in obs)
+
+
+# --------------------------------------------------------------------------
+# PagePool park/unpark accounting
+# --------------------------------------------------------------------------
+
+
+class TestPagePark:
+    def test_roundtrip_keeps_refs(self):
+        pool = PagePool(num_pages=8, page_size=4)
+        pages = pool.alloc(3)
+        pool.park("r1", pages)
+        assert pool.parked_owners == 1 and pool.parked_pages == 3
+        pool.check()  # parked pages are reachable, invariants hold
+        assert pool.unpark("r1") == pages
+        assert pool.parked_owners == 0
+        pool.free(pages)
+        pool.check()
+        assert pool.pages_in_use == 1  # trash pin only
+        assert pool.stats.parks == 1 and pool.stats.unparks == 1
+
+    def test_park_rejects_trash_dead_and_double(self):
+        pool = PagePool(num_pages=8, page_size=4)
+        pages = pool.alloc(2)
+        with pytest.raises(ValueError, match="trash"):
+            pool.park("r1", [TRASH_PAGE])
+        dead = pages[1]
+        pool.free([dead])
+        with pytest.raises(ValueError, match="dead"):
+            pool.park("r1", [dead])
+        pool.park("r1", pages[:1])
+        with pytest.raises(ValueError):
+            pool.park("r1", pages[:1])
+        with pytest.raises(KeyError):
+            pool.unpark("nobody")
+
+    def test_check_catches_parked_leak(self):
+        """Freeing a parked page to refcount 0 breaks reachability —
+        check() must refuse the state instead of letting the page be
+        reallocated under the parked slot."""
+        pool = PagePool(num_pages=8, page_size=4)
+        pages = pool.alloc(2)
+        pool.park("r1", pages)
+        pool.free(pages)
+        with pytest.raises(AssertionError):
+            pool.check()
+
+
+# --------------------------------------------------------------------------
+# EDF admission + shed
+# --------------------------------------------------------------------------
+
+
+class TestAdmission:
+    def test_priority_jumps_queue(self, smoke_setup):
+        """With the bucket saturated (pow2 pads max_slots=2 to extent
+        2), a later high-priority arrival jumps an earlier equal-class
+        one — here by parking a running priority-0 slot."""
+        cfg, _, params = smoke_setup
+        srv = _server(cfg, params)
+        sched = SlotScheduler(srv, max_slots=2)
+        reqs = [
+            Request(rid=0, prompt=_prompt(6, vocab=cfg.vocab), max_new=16),
+            Request(rid=1, prompt=_prompt(6, seed=9, vocab=cfg.vocab),
+                    max_new=16),
+            Request(rid=2, prompt=_prompt(4, seed=1, vocab=cfg.vocab),
+                    max_new=3, arrival=1, priority=0),
+            Request(rid=3, prompt=_prompt(4, seed=2, vocab=cfg.vocab),
+                    max_new=3, arrival=2, priority=5),
+        ]
+        sched.warmup(prompt_lens=[4, 6])
+        out = sched.run(reqs)
+        res = out["results"]
+        assert all("error" not in r for r in res.values())
+        assert out["preemptions"] >= 1
+        # rid 3 (priority 5) jumped rid 2 (earlier, priority 0)
+        assert res[3]["admitted_tick"] < res[2]["admitted_tick"]
+
+    def test_edf_budget_orders_queue(self, smoke_setup):
+        """Equal-priority queued requests are admitted in deadline
+        order, not arrival order: a later-but-tighter TTFT budget wins
+        (pure EDF — generous budgets, so nothing sheds or preempts)."""
+        cfg, _, params = smoke_setup
+        srv = _server(cfg, params)
+        sched = SlotScheduler(srv, max_slots=2)
+        reqs = [
+            Request(rid=0, prompt=_prompt(6, vocab=cfg.vocab), max_new=12),
+            Request(rid=1, prompt=_prompt(6, seed=9, vocab=cfg.vocab),
+                    max_new=24),
+            Request(rid=2, prompt=_prompt(4, seed=1, vocab=cfg.vocab),
+                    max_new=3, arrival=1, ttft_budget_s=100.0),
+            Request(rid=3, prompt=_prompt(4, seed=2, vocab=cfg.vocab),
+                    max_new=3, arrival=2, ttft_budget_s=30.0),
+        ]
+        sched.warmup(prompt_lens=[4, 6])
+        out = sched.run(reqs)
+        res = out["results"]
+        assert all("error" not in r for r in res.values())
+        assert out["preemptions"] == 0 and out["shed"] == 0
+        # rid 3's deadline is ~70s earlier than rid 2's
+        assert res[3]["admitted_tick"] <= res[2]["admitted_tick"]
+        assert res[3]["finished_tick"] < res[2]["finished_tick"]
+
+    def test_hopeless_ttft_is_shed(self, smoke_setup):
+        """A queued request whose TTFT deadline already passed is shed
+        with a typed RequestError instead of being served late."""
+        cfg, _, params = smoke_setup
+        srv = _server(cfg, params)
+        sched = SlotScheduler(srv, max_slots=2)
+        reqs = [
+            Request(rid=0, prompt=_prompt(6, vocab=cfg.vocab), max_new=16),
+            Request(rid=1, prompt=_prompt(6, seed=9, vocab=cfg.vocab),
+                    max_new=16),
+            Request(rid=2, prompt=_prompt(4, seed=1, vocab=cfg.vocab),
+                    max_new=3, arrival=2, ttft_budget_s=1e-6),
+        ]
+        sched.warmup(prompt_lens=[4, 6])
+        out = sched.run(reqs)
+        res = out["results"]
+        assert "error" not in res[0] and "error" not in res[1]
+        assert res[2]["error_type"] == "RequestError"
+        assert "shed" in res[2]["error"]
+        assert out["shed"] == 1
+        assert out["shed_rate"] == pytest.approx(1 / 3)
+
+    def test_budget_validation(self, smoke_setup):
+        cfg, _, params = smoke_setup
+        srv = _server(cfg, params)
+        sched = SlotScheduler(srv, max_slots=2)
+        sched.warmup(prompt_lens=[4])
+        out = sched.run([
+            Request(rid=0, prompt=_prompt(4, vocab=cfg.vocab), max_new=2,
+                    ttft_budget_s=-1.0),
+            Request(rid=1, prompt=_prompt(4, vocab=cfg.vocab), max_new=2,
+                    latency_budget_s=0.0),
+        ])
+        assert out["requests_rejected"] == 2
+        assert all(r["error_type"] == "RequestError"
+                   for r in out["results"].values())
+
+    def test_slo_false_is_throughput_only(self, smoke_setup):
+        """slo=False serves the same bursty workload with zero
+        preemptions and zero sheds — the explicit FIFO baseline."""
+        cfg, _, params = smoke_setup
+        srv = _server(cfg, params)
+        sched = SlotScheduler(srv, max_slots=2, slo=False)
+        reqs = _bg_plus_burst(cfg.vocab, burst_budget=1e-6)
+        sched.warmup(prompt_lens=[4, 6])
+        out = sched.run(reqs)
+        assert all("error" not in r for r in out["results"].values())
+        assert out["preemptions"] == 0 and out["shed"] == 0
+
+
+# --------------------------------------------------------------------------
+# Preempt / resume fidelity
+# --------------------------------------------------------------------------
+
+
+class TestPreemptResume:
+    def _solo_tokens(self, cfg, params, reqs, *, paged):
+        """Fault-free unpreempted reference: same requests, slo off."""
+        srv = _server(cfg, params, paged=paged)
+        sched = SlotScheduler(srv, max_slots=2, slo=False)
+        sched.warmup(prompt_lens=sorted({len(r.prompt) for r in reqs}))
+        out = sched.run(reqs)
+        assert all("error" not in r for r in out["results"].values())
+        return {rid: r["tokens"] for rid, r in out["results"].items()}
+
+    @pytest.mark.parametrize("paged", [True, False],
+                             ids=["paged", "contiguous"])
+    def test_resume_is_bitwise(self, smoke_setup, paged):
+        """A preempted-and-resumed request produces tokens
+        bitwise-identical to an unpreempted run: parking keeps the KV
+        rows (page refs / pooled row copy) intact and resume re-enters
+        them without replaying a single token."""
+        cfg, _, params = smoke_setup
+        reqs = _bg_plus_burst(cfg.vocab)
+        ref = self._solo_tokens(cfg, params, reqs, paged=paged)
+
+        srv = _server(cfg, params, paged=paged)
+        sched = SlotScheduler(srv, max_slots=2)
+        sched.warmup(prompt_lens=[4, 6])
+        out = sched.run(reqs)
+        res = out["results"]
+        assert all("error" not in r for r in res.values())
+        assert out["preemptions"] >= 1 and out["resumes"] >= 1
+        preempted = [rid for rid, r in res.items() if r["preempted"]]
+        assert preempted, "no request was actually parked"
+        for rid, r in res.items():
+            np.testing.assert_array_equal(
+                r["tokens"], ref[rid],
+                err_msg=f"request {rid} diverged after preemption",
+            )
+        if paged:
+            assert srv.page_pool.parked_owners == 0
+            srv.page_pool.check()
+            srv.prefix_tree.clear()
+            assert srv.page_pool.pages_in_use == 1
+        else:
+            # no ("parked", rid) row trees left behind in the pool
+            pool = srv.bucketed.pool
+            assert all(pool.pooled(k) == 0 for k in list(pool._free)
+                       if isinstance(k, tuple) and k and k[0] == "parked")
+
+    def test_low_priority_never_preempts(self, smoke_setup):
+        """Equal-priority queue pressure never parks a running slot."""
+        cfg, _, params = smoke_setup
+        srv = _server(cfg, params)
+        sched = SlotScheduler(srv, max_slots=2)
+        reqs = _bg_plus_burst(cfg.vocab, burst_priority=0)
+        sched.warmup(prompt_lens=[4, 6])
+        out = sched.run(reqs)
+        assert all("error" not in r for r in out["results"].values())
+        assert out["preemptions"] == 0
+
+
+# --------------------------------------------------------------------------
+# Chaos: faults at/around the park path never leak pages
+# --------------------------------------------------------------------------
+
+
+class TestPreemptChaos:
+    def test_park_fault_is_contained(self, smoke_setup):
+        """A fault injected at the preemption site raises BEFORE any
+        park mutation: the tick fails contained, every request still
+        terminates, and page accounting holds."""
+        cfg, _, params = smoke_setup
+        srv = _server(cfg, params)
+        sched = SlotScheduler(srv, max_slots=2)
+        reqs = _bg_plus_burst(cfg.vocab)
+        sched.warmup(prompt_lens=[4, 6])
+        plan = FaultPlan(seed=3).arm(chaos.SITE_PREEMPT, times=(0,))
+        prev = install_plan(plan)
+        try:
+            out = sched.run(reqs)
+        finally:
+            install_plan(prev)
+        assert out["faults_injected"] >= 1
+        assert set(out["results"]) == {r.rid for r in reqs}
+        srv.page_pool.check()
+        assert srv.page_pool.parked_owners == 0
+        srv.prefix_tree.clear()
+        assert srv.page_pool.pages_in_use == 1
+
+    def test_page_alloc_chaos_never_leaks_parked(self, smoke_setup):
+        """Page-alloc faults during a preempt-heavy workload: the run
+        finishes, every request terminates with a result, and clearing
+        the prefix tree leaves only the trash pin — parked pages are
+        never stranded."""
+        cfg, _, params = smoke_setup
+        srv = _server(cfg, params)
+        sched = SlotScheduler(srv, max_slots=2)
+        reqs = _bg_plus_burst(cfg.vocab, bursts=3)
+        sched.warmup(prompt_lens=[4, 6])
+        plan = (FaultPlan(seed=9)
+                .arm(chaos.SITE_PAGE_ALLOC, rate=0.25, max_faults=4))
+        prev = install_plan(plan)
+        try:
+            out = sched.run(reqs)
+        finally:
+            install_plan(prev)
+        assert set(out["results"]) == {r.rid for r in reqs}
+        srv.page_pool.check()
+        assert srv.page_pool.parked_owners == 0
+        srv.prefix_tree.clear()
+        srv.page_pool.check()
+        assert srv.page_pool.pages_in_use == 1
+
+
+# --------------------------------------------------------------------------
+# Adaptive ladder re-fit
+# --------------------------------------------------------------------------
+
+
+class TestRefit:
+    def test_refit_matches_unrefit_tokens(self, smoke_setup):
+        """Mid-run ladder re-fits change bucket extents, never tokens:
+        pad rows are write-inert, so decode is extent-invariant."""
+        cfg, _, params = smoke_setup
+        reqs = [Request(rid=i, prompt=_prompt(5, seed=i, vocab=cfg.vocab),
+                        max_new=10, arrival=i) for i in range(5)]
+
+        srv0 = _server(cfg, params)
+        base = SlotScheduler(srv0, max_slots=3)
+        base.warmup(prompt_lens=[5])
+        ref = base.run(reqs)["results"]
+
+        srv = _server(cfg, params)
+        sched = SlotScheduler(srv, max_slots=3, refit_interval=4)
+        sched.warmup(prompt_lens=[5])
+        out = sched.run(reqs)
+        assert out["refits"] >= 1
+        for rid, r in out["results"].items():
+            assert "error" not in r
+            np.testing.assert_array_equal(
+                r["tokens"], ref[rid]["tokens"],
+                err_msg=f"request {rid} diverged across a ladder re-fit",
+            )
+
+    def test_refit_pins_policy_name_and_addressability(self, smoke_setup):
+        """refit_policy keeps the old policy name so every existing
+        AxisKey (programs, pools, disk cache) stays addressable."""
+        cfg, _, params = smoke_setup
+        srv = _server(cfg, params)
+        sched = SlotScheduler(srv, max_slots=3)
+        sched.warmup(prompt_lens=[5])
+        front = srv.bucketed
+        old_name = front.policy.name
+        out = sched.run([
+            Request(rid=i, prompt=_prompt(5, seed=i, vocab=cfg.vocab),
+                    max_new=6, arrival=i) for i in range(4)
+        ])
+        assert all("error" not in r for r in out["results"].values())
+        rungs = sched.refit()
+        assert rungs is not None and front.policy.name == old_name
+        assert isinstance(front.policy, LadderPolicy)
+        # observed extents (<= max_slots) are all admitted by the fit
+        assert front.policy.bucket(1) >= 1
+        assert sched.top_extent == front.policy.bucket(sched.max_slots)
+        assert sched.metrics["refits"] == out["refits"] + 1
