@@ -17,6 +17,8 @@ Prints ``name,us_per_call,derived`` CSV rows (paper-table mapping):
     shape_buckets     recompile-per-shape vs bucketed ShapeKey reuse
     prefill_buckets   sequential vs whole-prompt batched prefill TTFT,
                       2-D (batch × sequence) grid compiles, pad waste
+    recurrent_prefill chunked state-scan vs sequential prefill TTFT on
+                      the recurrent families (rg-lru, xLSTM)
     continuous_batching  slot scheduler vs group admission: tok/s,
                       occupancy, pad-decode fraction, swap fidelity
     paged_kv          page pool vs contiguous KV: resident bytes,
@@ -59,6 +61,7 @@ MODULES = (
     "dispatch_overhead",
     "shape_buckets",
     "prefill_buckets",
+    "recurrent_prefill",
     "continuous_batching",
     "paged_kv",
     "async_compile",

@@ -267,6 +267,29 @@ def rg_lru(
     return _ref.rg_lru_ref(x, a, h0)
 
 
+def rg_lru_scan(
+    x: jax.Array,
+    a: jax.Array,
+    h0: Optional[jax.Array] = None,
+    *,
+    impl: Optional[str] = None,
+) -> tuple:
+    """Chunked-prefill RG-LRU scan: ``(h, h_last)`` for one chunk.
+
+    Same recurrence as :func:`rg_lru` plus the ``h[:, -1]`` carry as a
+    second output, so a caller chaining prompt chunks folds state
+    between them without slicing the full sequence.  Pallas/interpret →
+    :func:`repro.kernels.rg_lru.rg_lru_chunked`; xla → the
+    ``associative_scan`` oracle.
+    """
+    impl = resolve_impl(impl)
+    if impl in ("pallas", "interpret"):
+        from .rg_lru import rg_lru_chunked
+
+        return rg_lru_chunked(x, a, h0, interpret=(impl == "interpret"))
+    return _ref.rg_lru_chunk_ref(x, a, h0)
+
+
 def rms_norm(
     x: jax.Array,
     w: jax.Array,
@@ -288,6 +311,7 @@ __all__ = [
     "fused_linear",
     "swiglu",
     "rg_lru",
+    "rg_lru_scan",
     "forge_op",
     "resolve_impl",
 ]

@@ -169,3 +169,20 @@ def rg_lru_ref(
     if h0 is not None:
         hh = hh + aa * h0[:, None, :]
     return hh
+
+
+def rg_lru_chunk_ref(
+    x: jax.Array,
+    a: jax.Array,
+    h0: Optional[jax.Array] = None,
+) -> tuple:
+    """Chunked-prefill RG-LRU oracle: ``(h, h_last)`` for one chunk.
+
+    The fidelity ground truth for the chunked Pallas kernel
+    (:func:`repro.kernels.rg_lru.rg_lru_chunked`): the full in-chunk
+    state sequence plus the carry ``h_last = h[:, -1]`` a caller folds
+    into the next chunk's ``h0`` — chaining chunks with this carry is
+    exactly the unchunked scan.
+    """
+    h = rg_lru_ref(x, a, h0)
+    return h, h[:, -1, :]

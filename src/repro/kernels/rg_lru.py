@@ -37,7 +37,14 @@ DEFAULT_BLOCK_T = 256
 DEFAULT_BLOCK_D = 256
 
 
-def _rg_lru_kernel(x_ref, a_ref, h0_ref, o_ref, carry_scr, *, block_t):
+def _block_scan(x_ref, a_ref, h0_ref, carry_scr, *, block_t):
+    """Shared kernel body: scan one (bt, bd) tile against the carry.
+
+    Initializes the fp32 carry scratch from ``h0`` on the first T-block,
+    runs the Hillis–Steele inclusive scan over the tile, folds the carry
+    in closed form, persists the tile's last row as the next block's
+    carry, and returns the (bt, bd) fp32 state sequence.
+    """
     it = pl.program_id(2)
 
     @pl.when(it == 0)
@@ -60,8 +67,24 @@ def _rg_lru_kernel(x_ref, a_ref, h0_ref, o_ref, carry_scr, *, block_t):
 
     h_in = carry_scr[...]  # (1, bd)
     out = X + A * h_in  # broadcast over rows
-    o_ref[0] = out.astype(o_ref.dtype)
     carry_scr[...] = out[-1:, :]
+    return out
+
+
+def _rg_lru_kernel(x_ref, a_ref, h0_ref, o_ref, carry_scr, *, block_t):
+    out = _block_scan(x_ref, a_ref, h0_ref, carry_scr, block_t=block_t)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _rg_lru_chunk_kernel(x_ref, a_ref, h0_ref, o_ref, last_ref, carry_scr,
+                         *, block_t):
+    out = _block_scan(x_ref, a_ref, h0_ref, carry_scr, block_t=block_t)
+    o_ref[0] = out.astype(o_ref.dtype)
+    # every T-block writes the same (1, bd) output block; T is the
+    # innermost *sequential* grid axis, so the final block's write wins
+    # and ``last_ref`` leaves the kernel holding h[T-1] — the carry the
+    # caller folds into the next chunk's h0
+    last_ref[...] = out[-1:, :].astype(last_ref.dtype)
 
 
 def _vmem(shape, dtype):
@@ -120,6 +143,41 @@ def _forward(x, a, h0, *, block_t, block_d, interpret):
     )(x, a, h0)
 
 
+def _forward_chunk(x, a, h0, *, block_t, block_d, interpret):
+    B, T, D = x.shape
+    bt = _shrink(block_t, T)
+    bd = _shrink(block_d, D)
+    grid = (B, D // bd, T // bt)
+
+    def xa_map(b, id_, it):
+        return (b, it, id_)
+
+    def h0_map(b, id_, it):
+        return (b, id_)
+
+    kernel = functools.partial(_rg_lru_chunk_kernel, block_t=bt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), xa_map),
+            pl.BlockSpec((1, bt, bd), xa_map),
+            pl.BlockSpec((1, bd), h0_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bd), xa_map),
+            pl.BlockSpec((1, bd), h0_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), x.dtype),
+            jax.ShapeDtypeStruct((B, D), x.dtype),
+        ],
+        scratch_shapes=[_vmem((1, bd), jnp.float32)],
+        compiler_params=_tpu_params(),
+        interpret=interpret,
+    )(x, a, h0)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def _rg_lru_vjp(x, a, h0, block_t, block_d, interpret):
     return _forward(x, a, h0, block_t=block_t, block_d=block_d,
@@ -144,6 +202,30 @@ def _bwd(block_t, block_d, interpret, res, g):
 _rg_lru_vjp.defvjp(_fwd, _bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _rg_lru_chunk_vjp(x, a, h0, block_t, block_d, interpret):
+    return _forward_chunk(x, a, h0, block_t=block_t, block_d=block_d,
+                          interpret=interpret)
+
+
+def _fwd_chunk(x, a, h0, block_t, block_d, interpret):
+    out = _rg_lru_chunk_vjp(x, a, h0, block_t, block_d, interpret)
+    return out, (x, a, h0)
+
+
+def _bwd_chunk(block_t, block_d, interpret, res, g):
+    x, a, h0 = res
+
+    def ref_fn(x, a, h0):
+        return _ref.rg_lru_chunk_ref(x, a, h0)
+
+    _, vjp = jax.vjp(ref_fn, x, a, h0)
+    return vjp(g)
+
+
+_rg_lru_chunk_vjp.defvjp(_fwd_chunk, _bwd_chunk)
+
+
 def rg_lru_pallas(
     x: jax.Array,
     a: jax.Array,
@@ -157,5 +239,28 @@ def rg_lru_pallas(
     if h0 is None:
         h0 = jnp.zeros((x.shape[0], x.shape[2]), x.dtype)
     return _rg_lru_vjp(
+        x, a, h0, int(block_t), int(block_d), bool(interpret)
+    )
+
+
+def rg_lru_chunked(
+    x: jax.Array,
+    a: jax.Array,
+    h0: Optional[jax.Array] = None,
+    *,
+    block_t: int = DEFAULT_BLOCK_T,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> tuple:
+    """Chunked-prefill scan: ``(h, h_last)`` for one prompt chunk.
+
+    Same recurrence and tiling as :func:`rg_lru_pallas` plus a second
+    (B, D) output carrying ``h[:, -1]`` off-device without slicing the
+    (B, T, D) sequence — the inter-chunk carry a caller feeds into the
+    next chunk's ``h0``.  Oracle: ``kernels.ref.rg_lru_chunk_ref``.
+    """
+    if h0 is None:
+        h0 = jnp.zeros((x.shape[0], x.shape[2]), x.dtype)
+    return _rg_lru_chunk_vjp(
         x, a, h0, int(block_t), int(block_d), bool(interpret)
     )

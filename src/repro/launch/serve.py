@@ -108,8 +108,12 @@ class BatchedServer:
     cell (``seq_bucket_policy``, a fixed ladder by default), consuming
     the whole edge-padded prompt block in one forward pass with a causal
     length mask — the KV cache is written in one shot and TTFT stops
-    scaling with per-token dispatches.  Families without a chunked
-    cache-write path (recurrent state caches) fall back to the
+    scaling with per-token dispatches.  Recurrent families (rg-lru,
+    xLSTM) join the same grid through the chunked state scan: the whole
+    prompt block folds into the recurrent state via an associative scan
+    (per-row ``length`` bounds each row's scan, since state consumes
+    every chunk token).  Only families where the algorithm couples
+    tokens across the block (MoE capacity routing) fall back to the
     sequential decode-step loop automatically, as do prompts whose
     sequence bucket would not fit ``max_len``.  The prefill front takes
     a ``slot_mask`` too: the slot scheduler prefills a queued prompt
@@ -160,15 +164,19 @@ class BatchedServer:
         #: (per-row pos + slot_mask); families outside the slot contract
         #: compile the legacy scalar-position signature instead
         self.slot_capable = supports_slot_decode(cfg)
+        #: recurrent families' prefill consumes every chunk token into
+        #: state — their programs take a per-row ``length`` operand
+        self.prefill_takes_length = self.model.prefill_takes_length
         #: the decode multi-program front (mode=forge); built once
         self.bucketed = None
         #: the 2-D (batch × sequence) whole-prompt prefill front; None
-        #: for families without a chunked cache-write path
+        #: for families without a batched prefill (MoE routing)
         self.prefill_bucketed = None
         #: per-leaf cache batch axes (set with the fronts; the slot
         #: scheduler's bucket-resize row gather reads it)
         self.cache_axes = None
-        #: how the most recent prefill ran ("batched" | "sequential")
+        #: how the most recent prefill ran: "batched" (KV chunk write) |
+        #: "chunked" (recurrent state scan) | "sequential" (decode loop)
         self.last_prefill_mode = None
         #: most recently dispatched bucket program (CLI transparency)
         self.forge_module = None
@@ -276,10 +284,14 @@ class BatchedServer:
             if prefill_step is not None:
                 # slot signature: (params, cache, tokens, pos, slot_mask)
                 # legacy:         (params, cache, tokens, pos)
+                # recurrent:      … + trailing per-row length (B,)
                 b_in = ((None, cache_axes, 0, None, 0) if self.slot_capable
                         else (None, cache_axes, 0, None))
                 s_in = ((None, None, 1, None, None) if self.slot_capable
                         else (None, None, 1, None))
+                if self.prefill_takes_length:
+                    b_in = b_in + (0,)
+                    s_in = s_in + (None,)
                 prefill_front = compiler.compile_bucketed(
                     prefill_step,
                     axes=(
@@ -463,16 +475,30 @@ class BatchedServer:
             active = jnp.asarray(active, bool)
         return (tok, pos, active)
 
-    def _prefill_args(self, extent: int, tokens, pos, active: Optional[Any] = None):
-        """Argument tail for the prefill front (scalar pos + slot mask)."""
+    def _prefill_args(self, extent: int, tokens, pos,
+                      active: Optional[Any] = None, lengths=None):
+        """Argument tail for the prefill front (scalar pos + slot mask).
+
+        Recurrent fronts append a per-row ``lengths`` operand (default:
+        the full chunk width — every token is real) bounding each row's
+        state scan.
+        """
         pos = jnp.asarray(pos, jnp.int32)
         if not self.slot_capable:
-            return (tokens, pos)
-        if active is None:
-            active = jnp.ones((extent,), bool)
+            tail = (tokens, pos)
         else:
-            active = jnp.asarray(active, bool)
-        return (tokens, pos, active)
+            if active is None:
+                active = jnp.ones((extent,), bool)
+            else:
+                active = jnp.asarray(active, bool)
+            tail = (tokens, pos, active)
+        if self.prefill_takes_length:
+            if lengths is None:
+                lengths = jnp.full((extent,), tokens.shape[1], jnp.int32)
+            else:
+                lengths = jnp.asarray(lengths, jnp.int32)
+            tail = tail + (lengths,)
+        return tail
 
     def _build_cache(self, extent: int):
         from .steps import dealias_tree
@@ -791,7 +817,12 @@ class BatchedServer:
                            mode="edge")
         cache = self._acquire_cache(extent)
         tokens = jnp.asarray(prompts_b, jnp.int32)
-        pargs = self._prefill_args(extent, tokens, 0)
+        # recurrent fronts: every row's real prompt ends at P (padded
+        # rows are edge replicas, so P is right for them too) — the
+        # state scan must stop there, unlike the positional KV mask
+        pargs = self._prefill_args(
+            extent, tokens, 0, lengths=np.full((extent,), P, np.int32)
+        )
         pmod, pkey, _ = self.prefill_bucketed.program_for(
             self.params, cache, *pargs
         )
@@ -805,7 +836,9 @@ class BatchedServer:
             self.params, cache, *self._decode_args(extent, tok, P)
         )
         self.forge_module = mod
-        self.last_prefill_mode = "batched"
+        self.last_prefill_mode = (
+            "chunked" if self.model.stateful_decode else "batched"
+        )
         return cache, tok, P, self._group_step(mod, extent), key
 
     def _prefill_sequential(self, prompts: np.ndarray,
@@ -2156,12 +2189,15 @@ class SlotScheduler:
         """Prefill newly admitted slots through the slot-masked grid.
 
         One ``prefill_step`` dispatch writes every admitted prompt into
-        its slot's KV rows at position 0 while the other slots' rows
+        its slot's cache rows at position 0 while the other slots' rows
         stay bitwise untouched; the first generated token is read from
-        each row's last real prompt column.  When the grid does not
-        cover the longest admitted prompt (recurrent families, ladder
-        overflow), the slots keep their ``fill`` buffers and consume the
-        prompt inside the decode loop instead — the other slots keep
+        each row's last real prompt column.  Recurrent families take
+        the same path through the chunked state scan (a per-row
+        ``length`` bounds each row's scan; swapped-in rows are reset to
+        init state first).  When the grid does not cover the longest
+        admitted prompt (ladder overflow, ``--prefill sequential``),
+        the slots keep their ``fill`` buffers and consume the prompt
+        inside the decode loop instead — the other slots keep
         generating in the same dispatches.
         """
         srv = self.server
@@ -2172,9 +2208,9 @@ class SlotScheduler:
         Ps = [len(slots[i].req.prompt) for i in admitted]
         s_ext = srv._seq_bucket_extent(max(Ps), extent=extent)
         if s_ext is None:
-            # no grid cell covers the prompt (recurrent families, ladder
-            # overflow): the slots keep their fill buffers and consume
-            # the prompt inside the decode loop instead
+            # no grid cell covers the prompt (ladder overflow, forced
+            # sequential prefill): the slots keep their fill buffers and
+            # consume the prompt inside the decode loop instead
             return cache
         tokens = np.zeros((extent, s_ext), np.int32)
         mask = np.zeros((extent,), bool)
@@ -2183,7 +2219,13 @@ class SlotScheduler:
             tokens[i, P:] = slots[i].req.prompt[-1]  # edge pad
             mask[i] = True
         jtokens = jnp.asarray(tokens)
-        pargs = srv._prefill_args(extent, jtokens, 0, mask)
+        # per-row real prompt ends (recurrent fronts only): masked-out
+        # rows get a trivial length of 1 — their state is slot-gated
+        # back to the old rows anyway
+        lengths = np.ones((extent,), np.int32)
+        for i, P in zip(admitted, Ps):
+            lengths[i] = P
+        pargs = srv._prefill_args(extent, jtokens, 0, mask, lengths)
         try:
             pmod, pkey, _ = srv.prefill_bucketed.program_for(
                 srv.params, cache, *pargs

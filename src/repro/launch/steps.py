@@ -222,25 +222,50 @@ def make_slot_serve_step(cfg: ModelConfig) -> Callable:
     return slot_step
 
 
+def supports_batched_prefill(cfg: ModelConfig) -> bool:
+    """Can this family prefill a whole (B, S) prompt block in one
+    dispatch?
+
+    The single source of truth for every serve front: True when the
+    family module exposes a ``prefill_step`` whose one-pass result
+    reproduces sequential decode — attention KV caches (causal chunk
+    write) and, via the chunked state scan, the recurrent families
+    (rg-lru associative scan, mLSTM (C, n, m) scan, sLSTM in-program
+    ``lax.scan``).  False only where the algorithm itself couples
+    tokens across the block (MoE capacity routing).
+    """
+    return get_model(cfg).prefill_step is not None
+
+
 def make_slot_prefill_step(cfg: ModelConfig):
     """Slot-masked whole-prompt prefill for mid-generation swap-in.
 
     ``(params, cache, tokens(B, S), pos, slot_mask(B,)) -> (logits,
-    cache)``: one forward pass writes the S-token block into the KV
+    cache)`` — plus a trailing ``length(B,)`` arg when the model
+    declares ``prefill_takes_length`` (recurrent state consumes every
+    chunk token, so the scan must know where each row's real prompt
+    ends).  One forward pass writes the S-token block into the cache
     rows of the *masked* slots only — every other slot's cache survives
     bitwise, so a queued prompt can be prefilled into a finished slot
     while its neighbours are mid-generation.  None for families without
-    a batched prefill (recurrent state caches, MoE capacity routing) —
-    those swap in through masked decode-step replay instead.
+    a batched prefill (MoE capacity routing) — those swap in through
+    masked decode-step replay instead.
     """
     model = get_model(cfg)
-    if model.prefill_step is None or not supports_slot_decode(cfg):
+    if not supports_batched_prefill(cfg) or not supports_slot_decode(cfg):
         return None
 
-    def slot_prefill(params, cache, tokens, pos, slot_mask):
-        return model.prefill_step(
-            params, cache, tokens, pos, cfg, slot_mask=slot_mask
-        )
+    if model.prefill_takes_length:
+        def slot_prefill(params, cache, tokens, pos, slot_mask, length):
+            return model.prefill_step(
+                params, cache, tokens, pos, cfg, slot_mask=slot_mask,
+                length=length,
+            )
+    else:
+        def slot_prefill(params, cache, tokens, pos, slot_mask):
+            return model.prefill_step(
+                params, cache, tokens, pos, cfg, slot_mask=slot_mask
+            )
 
     return slot_prefill
 
@@ -249,15 +274,15 @@ def make_batched_prefill_step(cfg: ModelConfig):
     """Whole-prompt prefill step for the 2-D bucketed serve front.
 
     ``(params, cache, tokens(B, S), pos) -> ((B, S, vocab) logits,
-    cache)``: one forward pass writes the whole prompt block into the
-    KV cache (causal within the chunk).  Returns None for families
-    where a whole-block pass cannot reproduce sequential decode —
-    recurrent state caches (no chunked cache write) and MoE (capacity
-    routing couples tokens across the block) — the server then
-    prefills sequentially through ``decode_step``.
+    cache)``: one forward pass folds the whole prompt block into the
+    cache — causal chunk write for KV families, chunked state scan for
+    the recurrent families.  Returns None only where a whole-block pass
+    cannot reproduce sequential decode (MoE capacity routing couples
+    tokens across the block) — the server then prefills sequentially
+    through ``decode_step``.
     """
     model = get_model(cfg)
-    if model.prefill_step is None:
+    if not supports_batched_prefill(cfg):
         return None
 
     def prefill_step(params, cache, tokens, pos):

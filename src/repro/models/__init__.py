@@ -33,9 +33,10 @@ class ModelAPI:
     apply: Callable
     decode_step: Optional[Callable]
     #: whole-prompt batched prefill — (params, cache, tokens(B,S), pos)
-    #: -> ((B,S,V) logits, cache); None when a whole-block pass cannot
-    #: reproduce sequential decode (recurrent state caches, MoE
-    #: capacity routing) — those families prefill sequentially
+    #: -> ((B,S,V) logits, cache); recurrent families fold the chunk
+    #: into state via an associative scan (see prefill_takes_length);
+    #: None only when a whole-block pass cannot reproduce sequential
+    #: decode (MoE capacity routing) — those prefill sequentially
     prefill_step: Optional[Callable]
     init_cache: Optional[Callable]
     module: Any
@@ -52,6 +53,11 @@ class ModelAPI:
     paged_decode_step: Optional[Callable] = None
     paged_prefill_step: Optional[Callable] = None
     init_paged_cache: Optional[Callable] = None
+    #: True when ``prefill_step`` accepts a per-row ``length=`` kwarg:
+    #: recurrent state consumes every chunk token (no positional mask
+    #: can hide padding afterwards), so the serve fronts must tell the
+    #: scan where each row's real prompt ends
+    prefill_takes_length: bool = False
 
 
 def get_model(cfg: ModelConfig) -> ModelAPI:
@@ -89,6 +95,10 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
         paged_decode_step=getattr(m, "paged_decode_step", None),
         paged_prefill_step=paged_prefill,
         init_paged_cache=getattr(m, "init_paged_cache", None),
+        prefill_takes_length=(
+            prefill is not None
+            and getattr(m, "PREFILL_TAKES_LENGTH", False)
+        ),
     )
 
 

@@ -237,6 +237,89 @@ def prefill_length_mask(pos: jax.Array, sq: int, max_len: int,
     return jnp.where(keep, jnp.asarray(0.0, dtype), neg)
 
 
+def window_chunk_mask(pos: jax.Array, sq: int, slots: int, window: int,
+                      dtype=jnp.float32) -> jax.Array:
+    """Additive mask for chunked prefill over a ROTATING window cache.
+
+    The key axis is ``[slots rotating-cache entries ; sq chunk keys]``.
+    Cache slot s holds the key of absolute position
+    ``pos - 1 - ((pos - 1 - s) mod window)`` — the latest pre-chunk
+    position congruent to s — and is live only while that position is
+    >= 0 (the slot was ever written) AND inside query i's band
+    (``> pos + i - window``; beyond it the slot would already have been
+    overwritten by the time sequential decode reached ``pos + i``).
+    Chunk key j (absolute position pos + j) follows the plain banded
+    causal rule.  ``pos`` is per-row (B,); returns (B, 1, sq,
+    slots + sq) — attending over the concatenated keys with this mask
+    reproduces sequential rotating-window decode exactly.
+    """
+    p = jnp.asarray(pos, jnp.int32)[:, None, None, None]  # (B, 1, 1, 1)
+    i = lax.broadcasted_iota(jnp.int32, (1, 1, sq, 1), 2)
+    s = lax.broadcasted_iota(jnp.int32, (1, 1, 1, slots), 3)
+    cs = p - 1 - jnp.mod(p - 1 - s, window)  # slot s's absolute position
+    keep_cache = (cs >= 0) & (cs > p + i - window)
+    j = lax.broadcasted_iota(jnp.int32, (1, 1, 1, sq), 3)
+    keep_chunk = (j <= i) & (j > i - window)
+    B = p.shape[0]
+    keep = jnp.concatenate([
+        jnp.broadcast_to(keep_cache, (B, 1, sq, slots)),
+        jnp.broadcast_to(keep_chunk, (B, 1, sq, sq)),
+    ], axis=3)
+    neg = jnp.asarray(jnp.finfo(dtype).min, dtype)
+    return jnp.where(keep, jnp.asarray(0.0, dtype), neg)
+
+
+def window_writeback_index(pos: jax.Array, length: jax.Array, sq: int,
+                           slots: int, window: int
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Which chunk column lands in each rotating-cache slot after prefill.
+
+    After sequential decode of chunk positions ``pos .. pos+length-1``,
+    slot s holds the chunk's LAST write to it: chunk index
+    ``length - 1 - ((pos + length - 1 - s) mod window)``, or its
+    previous contents when that index is negative (the chunk never
+    reached the slot).  ``pos``/``length`` are per-row (B,).  Returns
+    ``(idx, valid)``: idx (B, slots) int32 clipped into [0, sq-1] (safe
+    to gather with), valid (B, slots) bool — False slots must keep
+    their old value.
+    """
+    p = jnp.asarray(pos, jnp.int32)[:, None]
+    n = jnp.asarray(length, jnp.int32)[:, None]
+    s = jnp.arange(slots, dtype=jnp.int32)[None, :]
+    idx = n - 1 - jnp.mod(p + n - 1 - s, window)
+    return jnp.clip(idx, 0, sq - 1), idx >= 0
+
+
+def gather_last_valid(x: jax.Array, length: jax.Array) -> jax.Array:
+    """Per-row element at time index ``length - 1``: (B, S, ...) -> (B, ...).
+
+    The chunked-prefill state extractor: row b's post-prefill recurrent
+    state is the scan output at its OWN last real token, not at the
+    padded chunk tail.
+    """
+    idx = (jnp.asarray(length, jnp.int32) - 1).reshape(
+        (-1,) + (1,) * (x.ndim - 1)
+    )
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+
+def conv_state_slice(state: jax.Array, seq: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """Trailing causal-conv inputs after consuming ``length`` chunk tokens.
+
+    ``state``: (B, W-1, D) pre-chunk conv state (the W-1 inputs before
+    position ``pos``); ``seq``: (B, S, D) the chunk's raw conv inputs.
+    Returns (B, W-1, D) — per-row inputs ``length-W+1 .. length-1`` of
+    the concatenated stream, exactly the state sequential decode leaves
+    behind after its ``length``-th token.
+    """
+    full = jnp.concatenate([state, seq], axis=1)
+    cw = state.shape[1]
+    idx = (jnp.asarray(length, jnp.int32)[:, None]
+           + jnp.arange(cw, dtype=jnp.int32)[None, :])
+    return jnp.take_along_axis(full, idx[:, :, None], axis=1)
+
+
 def slot_gate(slot_mask: Optional[jax.Array], new_tree: Any, old_tree: Any) -> Any:
     """Per-row select between updated and previous decode state.
 

@@ -40,6 +40,16 @@ Params = Dict[str, Any]
 #: swap-in must reset the row to init_cache values (ModelAPI contract)
 STATEFUL_DECODE = True
 
+#: chunked prefill consumes EVERY token into recurrent state (unlike KV
+#: caches, where pad columns are masked positionally afterwards), so the
+#: serve fronts pass a per-row ``length`` to bound the scan per row
+PREFILL_TAKES_LENGTH = True
+
+
+def supports_batched_prefill(cfg: ModelConfig) -> bool:
+    """Every rglru config prefills through the chunked state scan."""
+    return True
+
 
 # one opaque fused dispatch unit for the whole recurrence (kept by capture)
 @forge_op("rg_lru")
@@ -117,6 +127,75 @@ def rec_block_decode(
     y = jax.nn.gelu(L.linear(h, p["wy"])).astype(jnp.float32) * h_new[:, None]
     out = x + L.linear(y.astype(x.dtype), p["wo"])
     return out, {"h": h_new, "conv": new_conv}
+
+
+def rec_block_prefill(
+    p: Params, x: jax.Array, state: Dict[str, jax.Array],
+    length: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Whole-chunk recurrent block: one associative scan replaces S
+    sequential decode steps.
+
+    The RG-LRU recurrence is affine in the state, so the chunk's state
+    sequence is ``scan(gated) + cumprod(a) ⊙ h_in`` — the incoming
+    per-row state folds in closed form (``_rg_lru_fused`` dispatches the
+    scan; see kernels/rg_lru.py).  The post-chunk state is gathered at
+    each row's OWN last real token (``length - 1``): rows padded past
+    their prompt keep scanning garbage, but it never reaches their
+    stored state or their real columns' outputs.
+    """
+    h = L.apply_norm(x, p["norm"], cfg.norm)
+    xt = L.linear(h, p["wx"])  # (B, S, lru) — raw conv inputs
+    xt_conv = _causal_conv1d(xt, p["conv"], state=state["conv"])
+    new_conv = L.conv_state_slice(state["conv"], xt, length)
+    i = jax.nn.sigmoid(L.linear(h, p["wi"]))
+    r = jax.nn.sigmoid(L.linear(h, p["wr"]))
+    a = _decay(p, r)
+    gated = (jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6))
+             * (i * xt_conv).astype(jnp.float32))
+    hseq = _rg_lru_fused(gated, a, state["h"])
+    h_new = L.gather_last_valid(hseq, length)
+    y = jax.nn.gelu(L.linear(h, p["wy"])).astype(jnp.float32) * hseq
+    out = x + L.linear(y.astype(x.dtype), p["wo"])
+    return out, {"h": h_new, "conv": new_conv}
+
+
+def _window_chunk_attn(
+    h: jax.Array, p: Params, st: Dict[str, jax.Array], pos_b: jax.Array,
+    length: jax.Array, cos: jax.Array, sin: jax.Array, window: int,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked prefill through the ROTATING local-attention window.
+
+    Mirrors ``A.attention``'s projection chain, but attends over the
+    concatenation ``[window cache slots ; chunk keys]`` under
+    ``L.window_chunk_mask`` (which encodes which slots would still be
+    live at each in-chunk decode step), then writes back only the
+    chunk's final occupant of each slot (``L.window_writeback_index``)
+    — per-row start positions AND per-row lengths, so one dispatch
+    serves ragged continuation prefills.
+    """
+    from ..distrib.actsharding import constrain
+
+    B, S, _ = h.shape
+    q = A._split_heads(L.linear(h, p["wq"], p.get("bq")), cfg.n_heads)
+    k = A._split_heads(L.linear(h, p["wk"], p.get("bk")), cfg.n_kv_heads)
+    v = A._split_heads(L.linear(h, p["wv"], p.get("bv")), cfg.n_kv_heads)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    slots = st["k"].shape[2]
+    kk = jnp.concatenate([st["k"], k], axis=2)
+    vv = jnp.concatenate([st["v"], v], axis=2)
+    mask = L.window_chunk_mask(pos_b, S, slots, window)
+    out = A.sdpa_unfused(q, kk, vv, causal=False, extra_mask=mask)
+    out = L.linear(A._merge_heads(out), p["wo"])
+    idx, valid = L.window_writeback_index(pos_b, length, S, slots, window)
+    gk = jnp.take_along_axis(k, idx[:, None, :, None], axis=2)
+    gv = jnp.take_along_axis(v, idx[:, None, :, None], axis=2)
+    vm = valid[:, None, :, None]
+    new_st = {"k": jnp.where(vm, gk, st["k"]),
+              "v": jnp.where(vm, gv, st["v"])}
+    return constrain(out, "tokens"), new_st
 
 
 # --------------------------------------------------------------------------
@@ -270,6 +349,61 @@ def decode_step(
             x = x + L.apply_ffn(h, p["ffn"], cfg.ffn)
         else:
             x, new_st = rec_block_decode(p, x, st, cfg)
+            if cfg.d_ff:
+                h = L.apply_norm(x, p["norm2"], cfg.norm)
+                x = x + L.apply_ffn(h, p["ffn"], cfg.ffn)
+        new_layers.append(L.slot_gate(slot_mask, new_st, st))
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
+    return logits, {"layers": new_layers}
+
+
+def prefill_step(
+    params: Params,
+    cache: Dict[str, Any],
+    tokens: jax.Array,  # (B, S) whole prompt chunk
+    pos: jax.Array,  # int32 — scalar or per-row (B,) chunk start position
+    cfg: ModelConfig,
+    *,
+    slot_mask: Optional[jax.Array] = None,  # bool (B,): admitted slots
+    length: Optional[jax.Array] = None,  # int32 (B,): real tokens per row
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Chunked state-scan prefill: the whole prompt in ONE dispatch.
+
+    S sequential decode steps collapse into one compiled program — the
+    RG-LRU recurrence runs as an associative scan from each row's
+    incoming state, the rotating attention windows are rebuilt from the
+    chunk's final slot occupants, and conv states slide to each row's
+    last real token.  ``length`` bounds the scan per row (defaults to
+    the full chunk): recurrent state consumes every token it sees, so
+    pad columns must be excluded by index, not by a positional mask.
+    ``slot_mask`` keeps unadmitted rows' state bitwise untouched
+    (NaN-inert select), making this the swap-in path for slot-level
+    continuous batching.  Chunked ≡ sequential within float32 scan
+    reassociation (tests/test_recurrent_prefill.py).
+    """
+    B, S = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos
+    if length is None:
+        length = jnp.full((B,), S, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    x = L.embed(tokens, params["embed"])
+    positions = pos_b[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    cos, sin = L.rope_tables(positions, cfg.head_dim_, cfg.rope_theta)
+    window = cfg.window or cache["layers"][0].get("k", jnp.zeros((1, 1, 1, 1))).shape[2]
+    new_layers = []
+    for p, kind, st in zip(params["blocks"], _pattern(cfg), cache["layers"]):
+        if kind == "attn":
+            h = L.apply_norm(x, p["norm1"], cfg.norm)
+            a_out, new_st = _window_chunk_attn(
+                h, p["attn"], st, pos_b, length, cos, sin, window, cfg
+            )
+            x = x + a_out
+            h = L.apply_norm(x, p["norm2"], cfg.norm)
+            x = x + L.apply_ffn(h, p["ffn"], cfg.ffn)
+        else:
+            x, new_st = rec_block_prefill(p, x, st, length, cfg)
             if cfg.d_ff:
                 h = L.apply_norm(x, p["norm2"], cfg.norm)
                 x = x + L.apply_ffn(h, p["ffn"], cfg.ffn)

@@ -38,6 +38,15 @@ Params = Dict[str, Any]
 #: swap-in must reset the row to init_cache values (ModelAPI contract)
 STATEFUL_DECODE = True
 
+#: chunked prefill consumes EVERY token into recurrent state, so the
+#: serve fronts pass a per-row ``length`` bounding each row's scan
+PREFILL_TAKES_LENGTH = True
+
+
+def supports_batched_prefill(cfg: ModelConfig) -> bool:
+    """Every xlstm config prefills through the chunked state scan."""
+    return True
+
 
 # --------------------------------------------------------------------------
 # mLSTM parallel core (one opaque accel dispatch unit)
@@ -90,6 +99,80 @@ def mlstm_recurrent_step(q, k, v, i_pre, f_pre, state):
                       jnp.exp(-m_new))
     h = num / den[..., None]
     return h.astype(v.dtype), {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_chunk_combine(e1, e2):
+    """Associative combine for the chunked mLSTM state scan.
+
+    A segment of the stabilized recurrence is summarized by
+    ``(F, M, Ĉ, n̂)``: total log-decay ``F = Σ logf``, log-scale ``M``,
+    and scaled accumulators s.t. the segment's true (unstabilized)
+    state contribution is ``exp(M)·Ĉ`` / ``exp(M)·n̂``.  A single
+    token t is the leaf ``(logf_t, logi_t, v_t k_tᵀ, k_t)``.
+    Concatenating segment 1 (earlier) with segment 2 (later):
+
+        F = F1 + F2                       (decays compose)
+        M = max(F2 + M1, M2)              (the running-max stabilizer)
+        Ĉ = e^{F2+M1−M}·Ĉ1 + e^{M2−M}·Ĉ2
+        n̂ = e^{F2+M1−M}·n̂1 + e^{M2−M}·n̂2
+
+    which is associative (max/+ distribute), so
+    ``lax.associative_scan`` evaluates all prefix states in O(log S)
+    depth — the chunked-prefill core.  With a fresh cell
+    (``m0 = −1e30``) the carry weight ``e^{F+m0−m}`` underflows to
+    exactly 0, reproducing sequential decode's arithmetic bitwise at
+    the first token.
+    """
+    F1, M1, C1, n1 = e1
+    F2, M2, C2, n2 = e2
+    F = F1 + F2
+    M = jnp.maximum(F2 + M1, M2)
+    w1 = jnp.exp(F2 + M1 - M)
+    w2 = jnp.exp(M2 - M)
+    C = w1[..., None, None] * C1 + w2[..., None, None] * C2
+    n = w1[..., None] * n1 + w2[..., None] * n2
+    return F, M, C, n
+
+
+def mlstm_chunk_scan(q, k, v, i_pre, f_pre, state, length):
+    """Whole-chunk mLSTM: every prefix state via one associative scan.
+
+    q, k, v: (B, H, S, D); gates: (B, H, S); ``state`` = the incoming
+    {C, n, m} cell; ``length``: (B,) real tokens per row.  Returns
+    ``(h, cell)``: per-position hidden outputs (B, H, S, D) matching
+    S sequential :func:`mlstm_recurrent_step` calls, and the cell at
+    each row's OWN position ``length - 1``.
+    """
+    D = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))  # (B,H,S)
+    logi = i_pre.astype(jnp.float32)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    leaf_C = vf[..., :, None] * kf[..., None, :]  # (B,H,S,Dv,Dk)
+    F, M, Ch, nh = lax.associative_scan(
+        mlstm_chunk_combine, (logf, logi, leaf_C, kf), axis=2
+    )
+    # fold the incoming cell into every prefix state in closed form
+    m0 = state["m"][..., None]  # (B,H,1)
+    m_t = jnp.maximum(F + m0, M)  # (B,H,S)
+    w0 = jnp.exp(F + m0 - m_t)
+    wt = jnp.exp(M - m_t)
+    C_t = (w0[..., None, None] * state["C"][:, :, None]
+           + wt[..., None, None] * Ch)
+    n_t = w0[..., None] * state["n"][:, :, None] + wt[..., None] * nh
+    num = jnp.einsum("bhsvk,bhsk->bhsv", C_t, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhsk,bhsk->bhs", n_t, qf)),
+                      jnp.exp(-m_t))
+    h = num / den[..., None]
+    last = jnp.asarray(length, jnp.int32) - 1
+    cell = {
+        "C": jnp.take_along_axis(
+            C_t, last[:, None, None, None, None], axis=2)[:, :, 0],
+        "n": jnp.take_along_axis(
+            n_t, last[:, None, None, None], axis=2)[:, :, 0],
+        "m": jnp.take_along_axis(m_t, last[:, None, None], axis=2)[:, :, 0],
+    }
+    return h.astype(v.dtype), cell
 
 
 # --------------------------------------------------------------------------
@@ -177,6 +260,33 @@ def mlstm_block_decode(
     return x + L.linear(out, p["w_down"]), {"conv": new_conv, "cell": cell}
 
 
+def mlstm_block_prefill(
+    p: Params, x: jax.Array, st: Dict[str, Any], length: jax.Array,
+    cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Whole-chunk mLSTM block: S decode steps as one associative scan,
+    continuing from the incoming {conv, cell} state."""
+    H = cfg.n_heads
+    h = L.apply_norm(x, p["norm"], cfg.norm)
+    u = L.linear(h, p["w_up"])  # (B, S, 2d) — raw conv inputs
+    g = L.linear(h, p["w_gate"])
+    c_in = _conv1d(u, p["conv"], state=st["conv"])
+    new_conv = L.conv_state_slice(st["conv"], u, length)
+    c = jax.nn.silu(c_in)
+    q = _split(L.linear(c, p["wq"]), H)
+    k = _split(L.linear(c, p["wk"]), H)
+    v = _split(L.linear(u, p["wv"]), H)
+    gates = L.linear(c, p["w_if"]).astype(jnp.float32)  # (B,S,2H)
+    i_pre = gates[..., :H].transpose(0, 2, 1)
+    f_pre = gates[..., H:].transpose(0, 2, 1) + 3.0
+    hm, cell = mlstm_chunk_scan(q, k, v, i_pre, f_pre, st["cell"], length)
+    hm = L.rms_norm(hm, p["norm_h"]["scale"])  # (B,H,S,hd)
+    B, _, S, hd = hm.shape
+    hm = hm.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    out = hm * jax.nn.silu(g)
+    return x + L.linear(out, p["w_down"]), {"conv": new_conv, "cell": cell}
+
+
 # --------------------------------------------------------------------------
 # sLSTM block (sequential scan)
 # --------------------------------------------------------------------------
@@ -249,6 +359,54 @@ def slstm_block_decode(p, x, st, cfg):
     return x + L.linear(out, p["w_out"]), {
         "c": c_new, "n": n_new, "h": h_new, "m": m_new
     }
+
+
+def slstm_block_prefill(
+    p: Params, x: jax.Array, st: Dict[str, Any], length: jax.Array,
+    cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Whole-chunk sLSTM block continuing from the incoming state.
+
+    sLSTM is strictly sequential (the h→gates feedback defeats an
+    associative reformulation), so this is a ``lax.scan`` inside the
+    compiled program — still one dispatch per chunk instead of one per
+    token.  Per-row ``length`` freezes the carry bitwise past each
+    row's real prompt end, so edge-padding cannot leak into the state."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    h_in = L.apply_norm(x, p["norm"], cfg.norm)
+    pre = L.linear(h_in, p["w_in"]).astype(jnp.float32)
+    pre = pre.reshape(B, S, H, 4 * hd)
+    live_all = jnp.arange(S)[None, :] < jnp.asarray(length, jnp.int32)[:, None]
+
+    def step(carry, inp):
+        pre_t, live = inp
+        c, n, h, m = carry  # each (B,H,hd)
+        rec = jnp.einsum("bhd,hdk->bhk", h, p["r"])
+        z_p, i_p, f_p, o_p = jnp.split(pre_t + rec, 4, axis=-1)
+        z = jnp.tanh(z_p)
+        o = jax.nn.sigmoid(o_p)
+        logf = jax.nn.log_sigmoid(f_p)
+        m_new = jnp.maximum(logf + m, i_p)
+        i_sc = jnp.exp(i_p - m_new)
+        f_sc = jnp.exp(logf + m - m_new)
+        c_new = f_sc * c + i_sc * z
+        n_new = jnp.maximum(f_sc * n + i_sc, jnp.exp(-m_new))
+        h_new = o * c_new / n_new
+        keep = live[:, None, None]
+        new_carry = tuple(
+            jnp.where(keep, nw, old)
+            for nw, old in zip((c_new, n_new, h_new, m_new), (c, n, h, m))
+        )
+        return new_carry, h_new
+
+    init = (st["c"], st["n"], st["h"], st["m"])
+    (c, n, h, m), hs = lax.scan(
+        step, init, (pre.transpose(1, 0, 2, 3), live_all.T)
+    )
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    return x + L.linear(hs, p["w_out"]), {"c": c, "n": n, "h": h, "m": m}
 
 
 # --------------------------------------------------------------------------
@@ -338,6 +496,35 @@ def decode_step(params, cache, token, pos, cfg, *, slot_mask=None):
             x, new_st = slstm_block_decode(p, x, st, cfg)
         else:
             x, new_st = mlstm_block_decode(p, x, st, cfg)
+        new_layers.append(L.slot_gate(slot_mask, new_st, st))
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)
+    return logits, {"layers": new_layers}
+
+
+def prefill_step(params, cache, tokens, pos, cfg, *, slot_mask=None,
+                 length=None):
+    """Chunked prefill: the whole (B, S) prompt chunk in one dispatch.
+
+    mLSTM blocks run the stabilized (C, n, m) update as an associative
+    scan (:func:`mlstm_chunk_scan`); sLSTM blocks run a ``lax.scan``.
+    The recurrent state carries no positional index, so ``pos`` is
+    accepted and ignored (mirrors ``decode_step``).  ``length: int[B]``
+    marks where each row's real prompt ends — state is gathered there
+    and edge-padding past it never reaches the carried cache.
+    ``slot_mask: bool[B]`` freezes inactive rows bitwise."""
+    del pos  # no positional state in the cache
+    B, S = tokens.shape
+    if length is None:
+        length = jnp.full((B,), S, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    x = L.embed(tokens, params["embed"])
+    new_layers = []
+    for p, kind, st in zip(params["blocks"], _kinds(cfg), cache["layers"]):
+        if kind == "slstm":
+            x, new_st = slstm_block_prefill(p, x, st, length, cfg)
+        else:
+            x, new_st = mlstm_block_prefill(p, x, st, length, cfg)
         new_layers.append(L.slot_gate(slot_mask, new_st, st))
     x = L.apply_norm(x, params["final_norm"], cfg.norm)
     logits = L.lm_head(x, params.get("lm_head", params["embed"]), transpose=cfg.tie_embeddings)

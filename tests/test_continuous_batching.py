@@ -210,14 +210,16 @@ class TestSlotScheduler:
                                           want)
 
     def test_recurrent_family_swaps_through_fill(self):
-        """Families without batched prefill consume swapped-in prompts
-        INSIDE the decode loop (masked fill) — other slots keep
-        generating, and fidelity still holds."""
+        """The ``--prefill sequential`` fallback consumes swapped-in
+        prompts INSIDE the decode loop (masked fill) — other slots keep
+        generating, and fidelity still holds.  (The default path for
+        recurrent families is now the chunked state-scan grid; see
+        tests/test_recurrent_prefill.py.)"""
         cfg = get_config("xlstm-350m", smoke=True)
         model = get_model(cfg)
         params = model.init(jax.random.PRNGKey(3), cfg)
         server = BatchedServer(cfg, params, max_len=32, mode="forge",
-                               backend="interpret")
+                               backend="interpret", prefill="sequential")
         assert server.slot_capable
         sched = SlotScheduler(server, max_slots=2)
         sched.warmup()
@@ -230,7 +232,7 @@ class TestSlotScheduler:
                     max_new=3, arrival=1),
         ]
         out = sched.run(reqs)
-        assert out["prefill_dispatches"] == 0  # no grid: in-loop fill
+        assert out["prefill_dispatches"] == 0  # forced off-grid: in-loop fill
         assert len(out["results"]) == 3
         solo = BatchedServer(cfg, params, max_len=32, mode="forge",
                              backend="interpret")
